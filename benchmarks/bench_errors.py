@@ -1,0 +1,66 @@
+"""Figure 22: error decomposition for a 1k cache under Zipf 0.9 —
+sampling error (sample size), truncation error (integer vs float reset), and
+approximation error (sketch vs exact table) as a function of bytes/element."""
+from __future__ import annotations
+
+from repro.core import Cache, LRUEviction, run_trace, ExactHistogram
+from repro.core.sketch import FrequencySketch, SketchConfig, _pow2ceil
+from repro.core.tinylfu import TinyLFUAdmission
+from repro.traces import zipf_trace
+from .common import save
+
+
+class _ExactAdmission:
+    def __init__(self, sample, integer_division=True, cap=None):
+        self.h = ExactHistogram(sample, cap=cap,
+                                integer_division=integer_division)
+    def record(self, k): self.h.add(k)
+    def admit(self, cand, victim):
+        return self.h.estimate(cand) > self.h.estimate(victim)
+
+
+def _sketch_admission(sample, bytes_per_elem, dk_frac=0.33, seed=0):
+    total_bits = int(8 * bytes_per_elem * sample)
+    dk_bits = max(64, _pow2ceil(int(total_bits * dk_frac)))
+    counters = max(32, _pow2ceil((total_bits - dk_bits) // 4))
+    cfg = SketchConfig(sample_size=sample, counters=counters, rows=4,
+                       cap=7, doorkeeper_bits=dk_bits, seed=seed)
+    return TinyLFUAdmission(FrequencySketch(cfg))
+
+
+def run(quick: bool = False):
+    C = 1000
+    length = 250_000 if quick else 1_000_000
+    tr = zipf_trace(length, n_items=1_000_000, alpha=0.9, seed=61)
+    warm = length // 5
+    rows = []
+
+    def measure(name, adm_factory, sample):
+        cache = Cache(LRUEviction(C), adm_factory())
+        r = run_trace(cache, tr, warmup=warm)
+        rows.append({"trace": "zipf0.9", "policy": name, "cache_size": C,
+                     "sample": sample, "hit_ratio": r.hit_ratio,
+                     "accesses": r.accesses, "wall_s": r.wall_s})
+        print(f"  {name:<34s} hit={r.hit_ratio:.4f}", flush=True)
+
+    for sample in ([9 * C] if quick else [9 * C, 17 * C]):
+        # float-exact = sampling error only
+        measure(f"exact-float(W={sample})",
+                lambda s=sample: _ExactAdmission(s, integer_division=False),
+                sample)
+        # int-exact adds truncation error
+        measure(f"exact-int(W={sample})",
+                lambda s=sample: _ExactAdmission(s, integer_division=True),
+                sample)
+        # sketch adds approximation error, vs byte budget
+        budgets = [0.5, 1.0, 1.5] if quick else [0.25, 0.5, 0.75, 1.0,
+                                                 1.25, 1.5, 2.0]
+        for b in budgets:
+            measure(f"sketch(W={sample},B={b})",
+                    lambda s=sample, bb=b: _sketch_admission(s, bb), sample)
+    save(rows, "fig22_errors")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

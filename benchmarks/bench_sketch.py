@@ -1,0 +1,51 @@
+"""Sketch micro-benchmark: host sketch vs jnp oracle vs Pallas(interpret)
+per-op latency, plus memory footprint per configuration."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sketch import default_sketch
+from repro.kernels import DeviceTinyLFU, make_config, init_state, keys_to_lanes
+from repro.kernels import ops
+from .common import save
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 2000 if quick else 20_000
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 60, size=n, dtype=np.uint64)
+
+    # host sketch
+    s = default_sketch(1000, sample_factor=8)
+    t0 = time.perf_counter()
+    for k in keys.tolist():
+        s.add(k)
+    host_us = (time.perf_counter() - t0) / n * 1e6
+    rows.append({"impl": "host-python", "op": "add", "us_per_op": host_us,
+                 "meta_bits": s.cfg.meta_bits()})
+
+    # device (jnp oracle and pallas-interpret), batched
+    for use_pallas, name in [(False, "jnp-oracle"), (True, "pallas-interp")]:
+        cfg = make_config(1000, sample_factor=8)
+        st = init_state(cfg)
+        lo, hi = keys_to_lanes(keys[:1024])
+        ops.add(cfg, st, lo, hi, use_pallas)            # compile
+        t0 = time.perf_counter()
+        reps = 3 if quick else 10
+        for _ in range(reps):
+            st = ops.add(cfg, st, lo, hi, use_pallas)
+        st["counters"].block_until_ready()
+        us = (time.perf_counter() - t0) / (reps * 1024) * 1e6
+        rows.append({"impl": name, "op": "add_batch1024",
+                     "us_per_op": us, "meta_bits": None})
+        print(f"  sketch {name:<14s} {us:8.2f} us/op", flush=True)
+    print(f"  sketch host-python    {host_us:8.2f} us/op", flush=True)
+    save(rows, "sketch_micro")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Figure 8: Wikipedia-like gradually-drifting Zipf. Claims: there is a
+sample-size sweet spot — too-large W slows adaptation and can REDUCE hit
+ratio (paper §5.2)."""
+from __future__ import annotations
+
+from repro.traces import wiki_drift_trace
+from repro.core import tinylfu_cache, WTinyLFU, Cache, LRUEviction, run_trace
+from .common import sweep, save, policy_factories
+
+
+def run(quick: bool = False):
+    length = 250_000 if quick else 1_000_000
+    rows = []
+    tr = wiki_drift_trace(length, n_items=400_000, alpha=0.9,
+                          drift_every=20_000, drift_frac=0.02, seed=31)
+    C = 1000
+    # (a) sample-factor sweep for TLRU (the paper's ratio experiment)
+    for sf in [2, 4, 8, 16, 32, 64]:
+        r = run_trace(tinylfu_cache(C, "lru", sample_factor=sf), tr,
+                      warmup=length // 5)
+        rows.append({"trace": "wiki-drift", "policy": f"TLRU(sf={sf})",
+                     "cache_size": C, "hit_ratio": r.hit_ratio,
+                     "accesses": r.accesses, "wall_s": r.wall_s})
+        print(f"  wiki sf={sf:<3d} hit={r.hit_ratio:.4f}", flush=True)
+    # (b) cache-size sweep at the best ratio found
+    best_sf = max((r for r in rows), key=lambda r: r["hit_ratio"])
+    sf = int(best_sf["policy"].split("=")[1].rstrip(")"))
+    pf = policy_factories(sample_factor=sf)
+    keep = ["LRU", "WLFU", "TLRU", "W-TinyLFU", "ARC", "LIRS"]
+    sizes = [500, 2000] if quick else [250, 1000, 4000]
+    rows += sweep(tr, sizes, {k: pf[k] for k in keep}, warmup_frac=0.2,
+                  trace_name="wiki-drift")
+    save(rows, "fig8_wiki")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Figure 7: YouTube-like dynamic distribution (weekly drift + churn).
+
+Claims: TinyLFU still helps under drift; slower change -> bigger benefit;
+eviction choice matters MORE than in the static case (paper §5.2)."""
+from __future__ import annotations
+
+from repro.traces import youtube_dynamic_trace
+from .common import policy_factories, sweep, save
+
+
+def run(quick: bool = False):
+    rows = []
+    pf = policy_factories(sample_factor=9)
+    keep = ["LRU", "Random", "LFU(inmem)", "WLFU", "TLRU", "TRandom",
+            "TLFU", "W-TinyLFU"]
+    pols = {k: pf[k] for k in keep}
+    # (a) change-speed sweep at C=1000 (requests per week ~ change speed)
+    length = 200_000 if quick else 800_000
+    for per_week_factor, tag in [(0.3, "fast"), (1.0, "med"), (3.0, "slow")]:
+        tr = youtube_dynamic_trace(int(length * per_week_factor), weeks=21,
+                                   items_per_week=8000, churn=0.4, seed=21)
+        rows += sweep(tr, [1000], pols, warmup_frac=0.1,
+                      trace_name=f"yt-{tag}")
+    # (b) cache-size sweep at trace speed
+    tr = youtube_dynamic_trace(length, weeks=21, items_per_week=8000,
+                               churn=0.4, seed=22)
+    sizes = [500, 2000] if quick else [250, 1000, 4000]
+    rows += sweep(tr, sizes, pols, warmup_frac=0.1, trace_name="yt-sizes")
+    save(rows, "fig7_youtube")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Shared benchmark harness: policy factories, sweep runner, result I/O."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (Cache, LRUEviction, RandomEviction, LFUEviction,
+                        SLRUEviction, FIFOEviction, ARC, LIRS, TwoQ, WLFU,
+                        PLFU, WTinyLFU, tinylfu_cache, run_trace, SimResult)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "results")
+
+
+def policy_factories(sample_factor: int = 8, seed: int = 0):
+    """name -> factory(capacity).  The paper's cast (§5.1 naming)."""
+    sf = sample_factor
+    return {
+        "LRU": lambda C: Cache(LRUEviction(C)),
+        "Random": lambda C: Cache(RandomEviction(C, seed=seed)),
+        "FIFO": lambda C: Cache(FIFOEviction(C)),
+        "LFU(inmem)": lambda C: Cache(LFUEviction(C)),
+        "WLFU": lambda C: WLFU(C, window=sf * C),
+        "PLFU": lambda C: PLFU(C),
+        "2Q": lambda C: TwoQ(C),
+        "ARC": lambda C: ARC(C),
+        "LIRS": lambda C: LIRS(C),
+        "TLRU": lambda C: tinylfu_cache(C, "lru", sample_factor=sf, seed=seed),
+        "TRandom": lambda C: tinylfu_cache(C, "random", sample_factor=sf,
+                                           seed=seed),
+        "TLFU": lambda C: tinylfu_cache(C, "lfu", sample_factor=sf, seed=seed),
+        "W-TinyLFU": lambda C: WTinyLFU(C, sample_factor=sf, seed=seed),
+        "W-TinyLFU(20%)": lambda C: WTinyLFU(C, window_frac=0.20,
+                                             sample_factor=sf, seed=seed),
+    }
+
+
+def sweep(trace: np.ndarray, cache_sizes, policies: dict, *,
+          warmup_frac: float = 0.0, trace_name: str = "trace",
+          verbose: bool = True) -> list[dict]:
+    rows = []
+    warm = int(len(trace) * warmup_frac)
+    for C in cache_sizes:
+        for name, factory in policies.items():
+            t0 = time.perf_counter()
+            r = run_trace(factory(C), trace, warmup=warm)
+            rows.append({
+                "trace": trace_name, "policy": name, "cache_size": C,
+                "hit_ratio": r.hit_ratio, "accesses": r.accesses,
+                "wall_s": round(time.perf_counter() - t0, 2),
+            })
+            if verbose:
+                print(f"  {trace_name:>12s} C={C:<6d} {name:<16s} "
+                      f"hit={r.hit_ratio:.4f}", flush=True)
+    return rows
+
+
+def save(rows, name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def load(name: str):
+    with open(os.path.join(RESULTS_DIR, name + ".json")) as f:
+        return json.load(f)

@@ -1,0 +1,19 @@
+"""Reproduce the paper's figures at laptop scale (quick mode) and print the
+claims being validated.  Full-scale numbers: python -m benchmarks.run --full
+
+Run:  PYTHONPATH=src:. python examples/paper_figures.py
+"""
+from benchmarks import bench_zipf, bench_traces, bench_window
+
+rows = bench_zipf.run(quick=True)
+tl = {r["policy"]: r["hit_ratio"] for r in rows
+      if r["trace"] == "zipf0.9" and r["cache_size"] == 2000}
+print("\nFig 6 (zipf0.9, C=2000):")
+for k in ["LRU", "TLRU", "TRandom", "TLFU", "WLFU", "PLFU", "W-TinyLFU"]:
+    print(f"  {k:12s} {tl.get(k, float('nan')):.4f}")
+print("claim: TLRU/TRandom/TLFU cluster near WLFU, far above LRU")
+
+rows = bench_window.run(quick=True)
+oltp = [(r["policy"], r["hit_ratio"]) for r in rows if r["trace"] == "oltp-like"]
+print("\nFig 21 (oltp-like window sweep):", *oltp, sep="\n  ")
+print("claim: 20-40% window beats 1% on OLTP-family traces")

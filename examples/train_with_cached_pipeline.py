@@ -1,0 +1,16 @@
+"""Training driver: a reduced-config model trained for real steps with the
+fault-tolerant loop — deterministic resumable pipeline (W-TinyLFU shard
+cache), async checkpointing, preemption-safe.
+
+Run:  PYTHONPATH=src python examples/train_with_cached_pipeline.py
+"""
+import json
+import shutil
+
+from repro.launch.train import train
+
+shutil.rmtree("/tmp/repro_example_run", ignore_errors=True)
+out = train("minicpm-2b", smoke=True, steps=30, out_dir="/tmp/repro_example_run",
+            global_batch=8, seq_len=64, ckpt_every=10, optimizer="adamw")
+print(json.dumps(out, indent=1))
+print("loss curve in /tmp/repro_example_run/metrics.jsonl")

@@ -1,0 +1,18 @@
+"""repro: TinyLFU cache-admission (Einziger, Friedman & Manes 2015) built as a
+first-class feature of a multi-pod JAX training/serving framework.
+
+Subpackages:
+  core/        the paper's contribution: sketches, admission, W-TinyLFU, policies
+  traces/      synthetic workload generators (paper §5 trace families)
+  kernels/     Pallas TPU kernels for the sketch hot path (+ jnp oracles)
+  models/      assigned architecture zoo (dense/MoE/hybrid-SSM/xLSTM/audio/VLM)
+  configs/     one config per assigned architecture
+  optim/       optimizers + schedules
+  train/       train-step builder, losses, remat
+  serve/       paged KV cache + TinyLFU prefix-cache admission + scheduler
+  distributed/ sharding rules, pipeline parallelism, compressed collectives
+  checkpoint/  sharded fault-tolerant checkpointing
+  data/        deterministic resumable data pipeline w/ W-TinyLFU shard cache
+  launch/      mesh construction, multi-pod dry-run, train/serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,67 @@
+"""Recount roofline terms from archived compiled HLO (no recompiles).
+
+  PYTHONPATH=src python -m repro.analysis.recount
+
+Rewrites the cost-derived fields of every experiments/dryrun/*.json that has
+a matching experiments/hlo/*.hlo.gz, using the current hlo_cost model.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from .hlo_cost import analyze_hlo
+from .roofline import Roofline, SimpleColl
+
+ROOT = os.path.join(os.path.dirname(__file__), "../../..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+HLO = os.path.join(ROOT, "experiments", "hlo")
+
+
+def recount_one(json_path: str) -> bool:
+    r = json.load(open(json_path))
+    if r.get("status") != "ok":
+        return False
+    tag = r.get("tag") or ""
+    hlo_path = os.path.join(
+        HLO, f"{r['arch']}_{r['shape']}_{r['mesh']}{tag}.hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    hc = analyze_hlo(gzip.open(hlo_path, "rt").read())
+    coll = SimpleColl(counts=dict(hc.coll_counts),
+                      out_bytes=dict(hc.coll_bytes),
+                      wire_bytes=hc.coll_wire_bytes)
+    rl = Roofline(chips=r["chips"], hlo_flops=hc.flops * r["chips"],
+                  hlo_bytes=hc.bytes * r["chips"], coll=coll,
+                  model_flops=r["roofline"]["model_flops"])
+    r["hlo_flops_per_device"] = hc.flops
+    r["hlo_bytes_per_device"] = hc.bytes
+    r["bytes_by_kind"] = dict(hc.bytes_by_kind)
+    r["top_collectives"] = dict(sorted(hc.coll_ops.items(),
+                                       key=lambda x: -x[1])[:12])
+    r["top_fusions"] = dict(sorted(hc.fusion_ops.items(),
+                                   key=lambda x: -x[1])[:12])
+    r["roofline"] = rl.as_dict()
+    json.dump(r, open(json_path, "w"), indent=1)
+    return True
+
+
+def main():
+    n = 0
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        if recount_one(f):
+            n += 1
+            r = json.load(open(f))
+            rl = r["roofline"]
+            print(f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"{r.get('tag') or '':6s} tm={rl['t_memory_s']:.3f} "
+                  f"tc={rl['t_compute_s']:.3f} "
+                  f"tcoll={rl['t_collective_s']:.3f} "
+                  f"frac={rl['roofline_frac']:.4f}", flush=True)
+    print(f"recounted {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (DESIGN.md §8):
+
+  compute    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = sum over collectives of wire_bytes / (link_bw * links)
+
+cost_analysis() supplies FLOPs/bytes; collective bytes are parsed out of the
+HLO text (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), with per-op wire-byte formulas using the replica-group
+size parsed from the op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per direction), 4 linksimplied by the 2D torus but collectives on one
+mesh axis use 2 (bidirectional ring); we use 2 links for axis collectives.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+LINKS_PER_AXIS = 2           # bidirectional ring on a torus axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 0.5, "u4": 0.5, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'bf16[2048,7168]' -> bytes."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:                              # iota format [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    out_bytes: dict = field(default_factory=dict)
+    wire_bytes: float = 0.0            # per-chip bytes that cross ICI
+
+    def add(self, kind: str, nbytes: float, group: int):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.out_bytes[kind] = self.out_bytes.get(kind, 0.0) + nbytes
+        if group <= 1:
+            return
+        g = group
+        if kind == "all-gather":
+            # each chip receives (g-1)/g of the output
+            self.wire_bytes += nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            self.wire_bytes += nbytes * (g - 1) / g
+        elif kind == "all-reduce":
+            # ring: 2(g-1)/g x buffer
+            self.wire_bytes += 2 * nbytes * (g - 1) / g
+        elif kind == "all-to-all":
+            self.wire_bytes += nbytes * (g - 1) / g
+        elif kind == "collective-permute":
+            self.wire_bytes += nbytes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape = m.group(2) or m.group(3)
+        kind = m.group(4)
+        nbytes = _shape_bytes(out_shape)
+        st.add(kind, nbytes, _group_size(line))
+    return st
+
+
+@dataclass
+class SimpleColl:
+    counts: dict = field(default_factory=dict)
+    out_bytes: dict = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+
+@dataclass
+class Roofline:
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll: CollectiveStats | SimpleColl
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.chips / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.chips / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # coll.wire_bytes comes from the per-device partitioned module, so it
+        # is already bytes-through-this-chip's-links; no /chips here.
+        return self.coll.wire_bytes / (ICI_BW * LINKS_PER_AXIS)
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the hardware roofline achieved if the step runs at the
+        max of the three terms: useful_FLOPs / (chips*peak) / t_bound."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t == 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / t
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "collective_counts": self.coll.counts,
+            "collective_out_bytes": self.coll.out_bytes,
+            "collective_wire_bytes_per_chip_total": self.coll.wire_bytes,
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D for training (N params, D tokens); 2*N*D forward-only.
+# MoE: active params only.
+# ---------------------------------------------------------------------------
+
+def active_params(cfg, params_total: int) -> int:
+    if not cfg.n_experts:
+        return params_total
+    # subtract inactive experts: (E - top_k)/E of routed-expert weights
+    per_layer_routed = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+    n_moe_layers = cfg.n_layers // cfg.moe_every
+    routed = per_layer_routed * n_moe_layers
+    inactive = routed * (cfg.n_experts - cfg.moe_top_k) / cfg.n_experts
+    return int(params_total - inactive)
+
+
+def model_flops(cfg, params_total: int, tokens: int, kind: str) -> float:
+    n_active = active_params(cfg, params_total)
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens      # prefill / decode forward

@@ -1,0 +1,47 @@
+"""Assigned-architecture registry: one module per architecture, each exposing
+``config()`` (the exact published dimensions) and ``smoke_config()`` (a
+reduced same-family config for CPU smoke tests)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "llava_next_34b",
+    "llama4_scout_17b_a16e",
+    "llama4_maverick_400b_a17b",
+    "mistral_nemo_12b",
+    "chatglm3_6b",
+    "minicpm_2b",
+    "qwen3_4b",
+    "zamba2_1p2b",
+    "musicgen_medium",
+    "xlstm_1p3b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({
+    "llava-next-34b": "llava_next_34b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "chatglm3-6b": "chatglm3_6b",
+    "minicpm-2b": "minicpm_2b",
+    "qwen3-4b": "qwen3_4b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "musicgen-medium": "musicgen_medium",
+    "xlstm-1.3b": "xlstm_1p3b",
+})
+
+
+def _module(name: str):
+    mod_name = _ALIAS.get(name, name)
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str, smoke: bool = False):
+    m = _module(name)
+    return m.smoke_config() if smoke else m.config()
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,21 @@
+"""TinyLFU core: the paper's contribution (sketch + admission + W-TinyLFU)
+plus the host cache-policy zoo it is evaluated against."""
+from .sketch import FrequencySketch, SketchConfig, ExactHistogram, default_sketch
+from .tinylfu import TinyLFUAdmission, tinylfu_cache
+from .wtinylfu import WTinyLFU
+from .policies import (
+    Cache, Eviction, LRUEviction, FIFOEviction, RandomEviction, LFUEviction,
+    SLRUEviction, ReplacementPolicy, ARC, LIRS, TwoQ, WLFU, PLFU,
+)
+from .simulate import run_trace, run_matrix, SimResult, save_results, \
+    load_results, theoretical_max_hit_ratio
+
+__all__ = [
+    "FrequencySketch", "SketchConfig", "ExactHistogram", "default_sketch",
+    "TinyLFUAdmission", "tinylfu_cache", "WTinyLFU",
+    "Cache", "Eviction", "LRUEviction", "FIFOEviction", "RandomEviction",
+    "LFUEviction", "SLRUEviction", "ReplacementPolicy", "ARC", "LIRS", "TwoQ",
+    "WLFU", "PLFU",
+    "run_trace", "run_matrix", "SimResult", "save_results", "load_results",
+    "theoretical_max_hit_ratio",
+]

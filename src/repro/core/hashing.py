@@ -1,0 +1,90 @@
+"""Hash mixers used by every sketch in the system.
+
+Two families, bit-for-bit independent but statistically equivalent:
+
+* ``numpy`` vectorized uint64 splitmix64 — host-side (trace simulation, the
+  serving scheduler's admission batches are precomputed with these).
+* 32-bit-lane mixers (``mix32``) expressed in jnp — TPU has no native 64-bit
+  integer multiply, so the device kernels mix two uint32 lanes (``lo``/``hi``)
+  with a Murmur3/prospector-style finalizer.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# 64-bit splitmix — vectorized numpy (host side)
+# ---------------------------------------------------------------------------
+
+_SM64_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM64_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM64_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer. x: uint64 ndarray -> uint64 ndarray."""
+    x = (x + _SM64_GAMMA).astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * _SM64_M1
+    x = (x ^ (x >> np.uint64(27))) * _SM64_M2
+    x = x ^ (x >> np.uint64(31))
+    return x
+
+
+def probe_indices(keys: np.ndarray, num_probes: int, width: int,
+                  seed: int = 0) -> np.ndarray:
+    """(N,) uint64 keys -> (N, num_probes) int64 indices in [0, width).
+
+    Each probe uses an independent seed offset so the probes behave like
+    independent hash functions (required by both CM-sketch rows and Bloom
+    filter probes).  ``width`` need not be a power of two (we take a modulo
+    after full 64-bit mixing; bias is negligible for width << 2**64).
+    """
+    keys = np.asarray(keys, dtype=np.uint64)
+    seeds = (np.arange(1, num_probes + 1, dtype=np.uint64)
+             * np.uint64(0xC2B2AE3D27D4EB4F)) + np.uint64(seed)
+    # (N, 1) + (P,) broadcast -> (N, P)
+    mixed = splitmix64(keys[:, None] + seeds[None, :])
+    return (mixed % np.uint64(width)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# 32-bit lane mixers (shared constants with the jnp/Pallas code paths)
+# ---------------------------------------------------------------------------
+
+MIX32_M1 = 0x7FEB352D
+MIX32_M2 = 0x846CA68B
+PROBE_SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F,
+               0x165667B1, 0xD3A2646C, 0xFD7046C5, 0xB55A4F09)
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """Reference (numpy) implementation of the 32-bit mixer used on device."""
+    x = np.asarray(x, dtype=np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(MIX32_M1)).astype(np.uint32)
+    x ^= x >> np.uint32(15)
+    x = (x * np.uint32(MIX32_M2)).astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def probe_indices32_np(lo: np.ndarray, hi: np.ndarray, num_probes: int,
+                       width: int) -> np.ndarray:
+    """Reference for the device-side probe schedule (width must be pow2)."""
+    assert width & (width - 1) == 0, "device sketch width must be a power of 2"
+    lo = np.asarray(lo, dtype=np.uint32)
+    hi = np.asarray(hi, dtype=np.uint32)
+    out = np.empty(lo.shape + (num_probes,), dtype=np.int64)
+    for p in range(num_probes):
+        salt = np.uint32(PROBE_SALTS[p % len(PROBE_SALTS)] + 0x9E3779B9 * (p // len(PROBE_SALTS)))
+        h = mix32_np(lo + salt) ^ mix32_np(hi ^ np.uint32(0x85EBCA6B) ^ salt)
+        out[..., p] = (h & np.uint32(width - 1)).astype(np.int64)
+    return out
+
+
+def key_to_lanes(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """uint64 keys -> (lo, hi) uint32 lane pair."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys >> np.uint64(32)).astype(np.uint32)
+    return lo, hi

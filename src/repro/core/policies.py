@@ -1,0 +1,531 @@
+"""Host-side cache eviction/replacement policies (paper §2.1 & §5 baselines).
+
+Two interfaces:
+
+* ``Eviction`` — pluggable eviction primitive (contains/on_hit/add/remove/
+  peek_victim).  These compose with an admission policy via ``Cache`` — this
+  is exactly Figure 1 of the paper (eviction picks the victim, admission
+  decides the swap).  LRU, Random, FIFO, LFU (in-memory, O(1)), SLRU.
+* ``ReplacementPolicy`` — self-contained ``access(key)->hit`` policies that
+  entangle admission+eviction themselves and therefore cannot host TinyLFU:
+  ARC, LIRS, 2Q, WLFU (exact windowed LFU), PLFU (perfect LFU).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque, Counter
+import random
+from typing import Optional
+
+
+# ===========================================================================
+# Pluggable evictions
+# ===========================================================================
+
+class Eviction:
+    name = "base"
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = capacity
+
+    def __contains__(self, key) -> bool: raise NotImplementedError
+    def __len__(self) -> int: raise NotImplementedError
+    def on_hit(self, key) -> None: raise NotImplementedError
+    def add(self, key) -> None: raise NotImplementedError
+    def remove(self, key) -> None: raise NotImplementedError
+    def peek_victim(self): raise NotImplementedError
+    def keys(self): raise NotImplementedError
+
+
+class LRUEviction(Eviction):
+    name = "lru"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self.od: OrderedDict = OrderedDict()
+
+    def __contains__(self, key): return key in self.od
+    def __len__(self): return len(self.od)
+
+    def on_hit(self, key): self.od.move_to_end(key)
+    def add(self, key): self.od[key] = None
+    def remove(self, key): del self.od[key]
+    def peek_victim(self): return next(iter(self.od))
+    def keys(self): return self.od.keys()
+
+
+class FIFOEviction(Eviction):
+    name = "fifo"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self.od: OrderedDict = OrderedDict()
+
+    def __contains__(self, key): return key in self.od
+    def __len__(self): return len(self.od)
+    def on_hit(self, key): pass
+    def add(self, key): self.od[key] = None
+    def remove(self, key): del self.od[key]
+    def peek_victim(self): return next(iter(self.od))
+    def keys(self): return self.od.keys()
+
+
+class RandomEviction(Eviction):
+    name = "random"
+
+    def __init__(self, capacity: int, seed: int = 0):
+        super().__init__(capacity)
+        self.rng = random.Random(seed)
+        self.items: list = []
+        self.pos: dict = {}
+
+    def __contains__(self, key): return key in self.pos
+    def __len__(self): return len(self.items)
+    def on_hit(self, key): pass
+
+    def add(self, key):
+        self.pos[key] = len(self.items)
+        self.items.append(key)
+
+    def remove(self, key):
+        i = self.pos.pop(key)
+        last = self.items.pop()
+        if last != key:
+            self.items[i] = last
+            self.pos[last] = i
+
+    def peek_victim(self):
+        # fresh draw per access: a sticky victim with a maxed-out counter
+        # would freeze the cache behind an unbeatable incumbent
+        return self.items[self.rng.randrange(len(self.items))]
+
+    def keys(self): return list(self.items)
+
+
+class LFUEviction(Eviction):
+    """In-memory LFU with O(1) ops (freq-bucket linked structure) + the §3.6
+    synchronization hook: ``halve_all()`` is called by TinyLFU's reset so the
+    cache's counters age together with the sketch."""
+    name = "lfu"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self.freq: dict = {}
+        self.buckets: dict[int, OrderedDict] = {}
+        self.minf = 0
+
+    def __contains__(self, key): return key in self.freq
+    def __len__(self): return len(self.freq)
+
+    def _bump(self, key, newf):
+        oldf = self.freq.get(key)
+        if oldf is not None:
+            b = self.buckets[oldf]
+            del b[key]
+            if not b:
+                del self.buckets[oldf]
+                if self.minf == oldf:
+                    self.minf = newf if oldf != newf else self.minf
+        self.freq[key] = newf
+        self.buckets.setdefault(newf, OrderedDict())[key] = None
+        if newf < self.minf or len(self.freq) == 1:
+            self.minf = newf
+
+    def on_hit(self, key): self._bump(key, self.freq[key] + 1)
+    def add(self, key): self._bump(key, 1)
+
+    def remove(self, key):
+        f = self.freq.pop(key)
+        b = self.buckets[f]
+        del b[key]
+        if not b:
+            del self.buckets[f]
+            if self.minf == f and self.freq:
+                self.minf = min(self.buckets)   # rare; amortized fine
+        if not self.freq:
+            self.minf = 0
+
+    def peek_victim(self):
+        while self.minf not in self.buckets:
+            self.minf = min(self.buckets)
+        return next(iter(self.buckets[self.minf]))
+
+    def keys(self): return self.freq.keys()
+
+    def halve_all(self):
+        items = [(k, f // 2) for k, f in self.freq.items()]
+        self.freq.clear(); self.buckets.clear()
+        for k, f in items:
+            f = max(f, 1)
+            self.freq[k] = f
+            self.buckets.setdefault(f, OrderedDict())[k] = None
+        self.minf = min(self.buckets) if self.buckets else 0
+
+
+class SLRUEviction(Eviction):
+    """Segmented LRU (§2.1): probation (A1) + protected (A2).  New items ->
+    probation; hit in probation -> promote to protected; protected overflow
+    demotes its LRU victim back to probation.  Victim = probation LRU."""
+    name = "slru"
+
+    def __init__(self, capacity: int, protected_frac: float = 0.8):
+        super().__init__(capacity)
+        self.prot_cap = max(1, int(capacity * protected_frac))
+        self.probation: OrderedDict = OrderedDict()
+        self.protected: OrderedDict = OrderedDict()
+
+    def __contains__(self, key):
+        return key in self.probation or key in self.protected
+
+    def __len__(self): return len(self.probation) + len(self.protected)
+
+    def on_hit(self, key):
+        if key in self.protected:
+            self.protected.move_to_end(key)
+            return
+        del self.probation[key]
+        self.protected[key] = None
+        if len(self.protected) > self.prot_cap:      # demote protected LRU
+            demoted, _ = self.protected.popitem(last=False)
+            self.probation[demoted] = None
+
+    def add(self, key): self.probation[key] = None
+
+    def remove(self, key):
+        if key in self.probation: del self.probation[key]
+        else: del self.protected[key]
+
+    def peek_victim(self):
+        if self.probation:
+            return next(iter(self.probation))
+        return next(iter(self.protected))
+
+    def keys(self):
+        return list(self.probation.keys()) + list(self.protected.keys())
+
+
+# ===========================================================================
+# Cache driver: eviction ∘ admission   (paper Fig. 1)
+# ===========================================================================
+
+class Cache:
+    """``access(key) -> hit`` driver wiring an Eviction to an optional
+    admission policy object exposing record(key) and admit(cand, victim)."""
+
+    def __init__(self, eviction: Eviction, admission=None):
+        self.ev = eviction
+        self.admission = admission
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def capacity(self): return self.ev.capacity
+
+    def access(self, key) -> bool:
+        adm = self.admission
+        if adm is not None:
+            adm.record(key)
+        if key in self.ev:
+            self.ev.on_hit(key)
+            self.hits += 1
+            return True
+        self.misses += 1
+        if len(self.ev) < self.ev.capacity:
+            self.ev.add(key)
+            return False
+        victim = self.ev.peek_victim()
+        if adm is None or adm.admit(key, victim):
+            self.ev.remove(victim)
+            self.ev.add(key)
+        return False
+
+    @property
+    def hit_ratio(self):
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+# ===========================================================================
+# Self-contained replacement policies
+# ===========================================================================
+
+class ReplacementPolicy:
+    name = "base"
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, key) -> bool:
+        hit = self._access(key)
+        if hit: self.hits += 1
+        else: self.misses += 1
+        return hit
+
+    @property
+    def hit_ratio(self):
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class PLFU(ReplacementPolicy):
+    """Perfect LFU: unbounded global histogram; cache holds argmax-C keys.
+    Implemented incrementally: on access, bump global count; admit iff count
+    exceeds the cache's current minimum (classic PLFU behaviour)."""
+    name = "plfu"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self.counts: Counter = Counter()
+        self.lfu = LFUEviction(capacity)    # reuse bucket structure, freq=global count
+
+    def _access(self, key) -> bool:
+        self.counts[key] += 1
+        c = self.counts[key]
+        if key in self.lfu:
+            self.lfu._bump(key, c)
+            return True
+        if len(self.lfu) < self.capacity:
+            self.lfu._bump(key, c)
+            return False
+        victim = self.lfu.peek_victim()
+        if c > self.lfu.freq[victim]:
+            self.lfu.remove(victim)
+            self.lfu._bump(key, c)
+        return False
+
+
+class WLFU(ReplacementPolicy):
+    """Window LFU [38]: exact frequency over the last W requests; both the
+    eviction and the admission compare exact window counts."""
+    name = "wlfu"
+
+    def __init__(self, capacity: int, window: int):
+        super().__init__(capacity)
+        self.window = window
+        self.win: deque = deque()
+        self.wcount: Counter = Counter()
+        self.lfu = LFUEviction(capacity)
+
+    def _record(self, key):
+        self.win.append(key)
+        self.wcount[key] += 1
+        if len(self.win) > self.window:
+            old = self.win.popleft()
+            self.wcount[old] -= 1
+            if self.wcount[old] <= 0:
+                del self.wcount[old]
+            if old in self.lfu:
+                self.lfu._bump(old, max(1, self.wcount[old]))
+
+    def _access(self, key) -> bool:
+        self._record(key)
+        c = max(1, self.wcount[key])
+        if key in self.lfu:
+            self.lfu._bump(key, c)
+            return True
+        if len(self.lfu) < self.capacity:
+            self.lfu._bump(key, c)
+            return False
+        victim = self.lfu.peek_victim()
+        if c > self.lfu.freq[victim]:
+            self.lfu.remove(victim)
+            self.lfu._bump(key, c)
+        return False
+
+
+class TwoQ(ReplacementPolicy):
+    """2Q [37]: A1in FIFO (25%), A1out ghost FIFO (50% of capacity, keys
+    only), Am LRU (75%)."""
+    name = "2q"
+
+    def __init__(self, capacity: int, kin: float = 0.25, kout: float = 0.5):
+        super().__init__(capacity)
+        self.kin_cap = max(1, int(capacity * kin))
+        self.am_cap = max(1, capacity - self.kin_cap)
+        self.kout_cap = max(1, int(capacity * kout))
+        self.a1in: OrderedDict = OrderedDict()
+        self.a1out: OrderedDict = OrderedDict()
+        self.am: OrderedDict = OrderedDict()
+
+    def _access(self, key) -> bool:
+        if key in self.am:
+            self.am.move_to_end(key)
+            return True
+        if key in self.a1in:                 # stays in A1in until FIFO-evicted
+            return True
+        if key in self.a1out:                # ghost hit -> promote to Am
+            del self.a1out[key]
+            self.am[key] = None
+            if len(self.am) > self.am_cap:
+                self.am.popitem(last=False)
+            return False
+        self.a1in[key] = None
+        if len(self.a1in) > self.kin_cap:
+            old, _ = self.a1in.popitem(last=False)
+            self.a1out[old] = None
+            if len(self.a1out) > self.kout_cap:
+                self.a1out.popitem(last=False)
+        return False
+
+
+class ARC(ReplacementPolicy):
+    """ARC [44]: T1/T2 resident, B1/B2 ghosts, adaptive target p."""
+    name = "arc"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self.p = 0
+        self.t1: OrderedDict = OrderedDict()
+        self.t2: OrderedDict = OrderedDict()
+        self.b1: OrderedDict = OrderedDict()
+        self.b2: OrderedDict = OrderedDict()
+
+    def _replace(self, in_b2: bool):
+        if self.t1 and (len(self.t1) > self.p or (in_b2 and len(self.t1) == self.p)):
+            old, _ = self.t1.popitem(last=False)
+            self.b1[old] = None
+        else:
+            old, _ = self.t2.popitem(last=False)
+            self.b2[old] = None
+
+    def _access(self, key) -> bool:
+        c = self.capacity
+        if key in self.t1:
+            del self.t1[key]
+            self.t2[key] = None
+            return True
+        if key in self.t2:
+            self.t2.move_to_end(key)
+            return True
+        if key in self.b1:
+            self.p = min(c, self.p + max(1, len(self.b2) // max(1, len(self.b1))))
+            self._replace(False)
+            del self.b1[key]
+            self.t2[key] = None
+            return False
+        if key in self.b2:
+            self.p = max(0, self.p - max(1, len(self.b1) // max(1, len(self.b2))))
+            self._replace(True)
+            del self.b2[key]
+            self.t2[key] = None
+            return False
+        # brand-new key
+        if len(self.t1) + len(self.b1) == c:
+            if len(self.t1) < c:
+                self.b1.popitem(last=False)
+                self._replace(False)
+            else:
+                self.t1.popitem(last=False)
+        elif len(self.t1) + len(self.b1) < c:
+            total = len(self.t1) + len(self.t2) + len(self.b1) + len(self.b2)
+            if total >= c:
+                if total == 2 * c:
+                    self.b2.popitem(last=False)
+                self._replace(False)
+        self.t1[key] = None
+        return False
+
+
+class LIRS(ReplacementPolicy):
+    """LIRS [36].  Stack S tracks recency of LIR + recently-seen HIR (resident
+    and non-resident); queue Q holds resident HIR blocks.  ~1% HIR budget."""
+    name = "lirs"
+
+    LIR, HIR_RES, HIR_NONRES = 0, 1, 2
+
+    def __init__(self, capacity: int, hir_frac: float = 0.01,
+                 max_nonres_factor: float = 3.0):
+        super().__init__(capacity)
+        self.lhirs = max(1, int(capacity * hir_frac))
+        self.llirs = max(1, capacity - self.lhirs)
+        self.s: OrderedDict = OrderedDict()   # key -> state (front=LRU end=MRU)
+        self.q: OrderedDict = OrderedDict()   # resident HIR
+        self.lir_count = 0
+        self.state: dict = {}                  # key -> state for residents+ghosts
+        self.max_nonres = int(max_nonres_factor * capacity)
+        self.nonres: OrderedDict = OrderedDict()  # ghost order (oldest first)
+
+    def _prune(self):
+        # Bottom of S must be LIR.
+        while self.s:
+            k = next(iter(self.s))
+            if self.state.get(k) == self.LIR:
+                break
+            del self.s[k]
+            if self.state.get(k) == self.HIR_NONRES:
+                del self.state[k]              # fully forgotten
+                self.nonres.pop(k, None)
+
+    def _bound_nonres(self):
+        while len(self.nonres) > self.max_nonres:
+            k, _ = self.nonres.popitem(last=False)
+            if self.state.get(k) == self.HIR_NONRES:
+                del self.state[k]
+                self.s.pop(k, None)
+        self._prune()
+
+    def _evict_hir_resident(self):
+        k, _ = self.q.popitem(last=False)
+        if k in self.s:
+            self.state[k] = self.HIR_NONRES
+            self.nonres[k] = None
+        else:
+            del self.state[k]
+
+    def _demote_lir_bottom(self):
+        k = next(iter(self.s))
+        del self.s[k]
+        self.state[k] = self.HIR_RES
+        self.q[k] = None
+        self.lir_count -= 1
+        self._prune()
+
+    def _access(self, key) -> bool:
+        st = self.state.get(key)
+        if st == self.LIR:
+            was_bottom = next(iter(self.s)) == key
+            self.s.move_to_end(key)
+            if was_bottom:
+                self._prune()
+            return True
+        if st == self.HIR_RES:
+            in_s = key in self.s
+            if in_s:
+                self.s.move_to_end(key)
+                self.state[key] = self.LIR
+                self.lir_count += 1
+                del self.q[key]
+                if self.lir_count > self.llirs:
+                    self._demote_lir_bottom()
+            else:
+                self.s[key] = None
+                self.q.move_to_end(key)
+            return True
+        # miss (new or non-resident HIR ghost)
+        if self.lir_count < self.llirs and st is None and not self.q:
+            self.state[key] = self.LIR
+            self.s[key] = None
+            self.lir_count += 1
+            return False
+        if len(self.q) + self.lir_count >= self.capacity:
+            if self.q:
+                self._evict_hir_resident()
+            else:
+                self._demote_lir_bottom()
+                self._evict_hir_resident()
+        if st == self.HIR_NONRES and key in self.s:   # ghost hit -> LIR
+            self.nonres.pop(key, None)
+            self.s.move_to_end(key)
+            self.state[key] = self.LIR
+            self.lir_count += 1
+            if self.lir_count > self.llirs:
+                self._demote_lir_bottom()
+        else:
+            self.nonres.pop(key, None)
+            self.state[key] = self.HIR_RES
+            self.s[key] = None
+            self.q[key] = None
+        self._bound_nonres()
+        return False

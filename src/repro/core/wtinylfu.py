@@ -1,0 +1,63 @@
+"""W-TinyLFU (paper §4, Fig 5): LRU window cache (no admission) in front of an
+SLRU main cache guarded by TinyLFU admission.
+
+Flow per access:
+  * hit in window or main -> hit (window hit refreshes window LRU; main hit
+    follows SLRU promotion).
+  * miss -> insert into window.  If the window overflows, its LRU victim asks
+    for admission into the main cache; on rejection the window victim is
+    dropped (it *is* W-TinyLFU's victim), on admission the main cache's SLRU
+    victim is dropped instead.
+
+Caffeine 2.0 defaults: window = 1% of total capacity, main = 99% with an
+80/20 protected/probation SLRU split.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from .policies import SLRUEviction, ReplacementPolicy
+from .sketch import default_sketch
+from .tinylfu import TinyLFUAdmission
+
+
+class WTinyLFU(ReplacementPolicy):
+    name = "w-tinylfu"
+
+    def __init__(self, capacity: int, window_frac: float = 0.01,
+                 sample_factor: int = 8, protected_frac: float = 0.8,
+                 seed: int = 0, counters_per_item: float = 1.0,
+                 doorkeeper: bool = True):
+        super().__init__(capacity)
+        self.window_cap = max(1, int(round(capacity * window_frac)))
+        self.main_cap = max(1, capacity - self.window_cap)
+        self.window: OrderedDict = OrderedDict()
+        self.main = SLRUEviction(self.main_cap, protected_frac=protected_frac)
+        sketch = default_sketch(capacity, sample_factor=sample_factor,
+                                seed=seed, counters_per_item=counters_per_item,
+                                doorkeeper=doorkeeper)
+        self.admission = TinyLFUAdmission(sketch)
+
+    def __contains__(self, key):
+        return key in self.window or key in self.main
+
+    def _access(self, key) -> bool:
+        self.admission.record(key)
+        if key in self.window:
+            self.window.move_to_end(key)
+            return True
+        if key in self.main:
+            self.main.on_hit(key)
+            return True
+        # miss: admit to window unconditionally
+        self.window[key] = None
+        if len(self.window) > self.window_cap:
+            cand, _ = self.window.popitem(last=False)
+            if len(self.main) < self.main.capacity:
+                self.main.add(cand)
+            else:
+                victim = self.main.peek_victim()
+                if self.admission.admit(cand, victim):
+                    self.main.remove(victim)
+                    self.main.add(cand)
+        return False

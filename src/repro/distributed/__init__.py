@@ -1,0 +1,6 @@
+from .shardings import ShardingPolicy
+from .pipeline import pipeline_apply
+from .compression import compressed_allreduce_int8, compressed_tree_allreduce
+
+__all__ = ["ShardingPolicy", "pipeline_apply", "compressed_allreduce_int8",
+           "compressed_tree_allreduce"]

@@ -1,0 +1,56 @@
+"""Gradient compression for the data-parallel axis: int8 quantized
+all-reduce with error feedback (1-bit-Adam-style residual correction).
+
+Wire cost: an fp32 ring all-reduce moves ~2x4 bytes/element; quantize->
+all_gather(int8)->local dequant-sum moves ~1 byte/element — an ~8x reduction
+on the DP axis, at the price of quantization noise that the error-feedback
+state re-injects next step (so the *accumulated* gradient is unbiased).
+
+This is the manual-collective path: use inside shard_map over the 'data'
+axis (pjit's implicit gradient reductions cannot be intercepted).  See
+tests/test_compression.py for the equivalence + convergence checks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_allreduce_int8(x: jnp.ndarray, axis_name: str,
+                              error: jnp.ndarray | None = None):
+    """Mean over ``axis_name`` of per-shard tensors, int8 on the wire.
+
+    Returns (mean, new_error).  Call inside shard_map/pmap with ``x`` the
+    local shard's contribution and ``error`` the previous step's residual.
+    """
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    q, scale = _quantize_int8(xf)
+    new_error = xf - q.astype(jnp.float32) * scale       # feedback residual
+    # wire: int8 values + one f32 scale per participant
+    qg = jax.lax.all_gather(q, axis_name)                # (G, ...)
+    sg = jax.lax.all_gather(scale, axis_name)            # (G,)
+    n = qg.shape[0]
+    deq = (qg.astype(jnp.float32)
+           * sg.reshape((n,) + (1,) * x.ndim)).sum(0) / n
+    return deq.astype(x.dtype), new_error
+
+
+def compressed_tree_allreduce(grads, axis_name: str, error_tree=None):
+    """Pytree version; threads per-leaf error feedback."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    errs = (treedef.flatten_up_to(error_tree) if error_tree is not None
+            else [None] * len(leaves))
+    out, new_err = [], []
+    for g, e in zip(leaves, errs):
+        m, ne = compressed_allreduce_int8(g, axis_name, e)
+        out.append(m)
+        new_err.append(ne)
+    return treedef.unflatten(out), treedef.unflatten(new_err)

@@ -1,0 +1,209 @@
+"""Sharding rules: parameter PartitionSpecs by tree path, activation
+constraints by semantic kind, cache/batch specs per shape kind.
+
+Axes: 'data' (+ 'pod' composed in for multi-pod DP) and 'model' (TP/EP).
+Strategy (DESIGN.md §4):
+  * 2D weight sharding = Megatron TP on 'model' + FSDP on 'data' (GSPMD
+    all-gathers the data-axis shards at use; optimizer state inherits the
+    spec, giving ZeRO semantics for free).
+  * MoE experts on 'model' (expert parallelism; dispatch all-to-all emerges
+    from the (B, E, C, M) constraint).
+  * decode KV caches are sequence-sharded on 'model' (flash-decoding style:
+    every assigned shape divides evenly, unlike head counts) and
+    batch-sharded on DP; long_500k (batch=1) shards the sequence across
+    every axis.
+  * head-count dims not divisible by 16 rely on GSPMD uneven sharding
+    (internal padding) — measured, not assumed, in §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# parameter rules: (regex on path, spec for the trailing dims)
+# ---------------------------------------------------------------------------
+
+def _param_rules(fsdp: str | None):
+    d = fsdp           # 'data' or None
+    return [
+        # embeddings / heads
+        (r"embed$",            {3: P(None, "model", d), 2: P("model", d)}),
+        (r"out_head$",         {3: P(None, d, "model"), 2: P(d, "model")}),
+        # attention
+        (r"attn\d*/(wq|wk|wv)$", {2: P(d, "model")}),
+        (r"shared_attn/(wq|wk|wv)$", {2: P(d, "model")}),
+        (r"wo$",               {2: P("model", d)}),
+        # dense mlp
+        (r"(w_gate|w_up|shared_gate|shared_up|up_x|up_z)$", {2: P(d, "model")}),
+        (r"(w_down|shared_down|down)$", {2: P("model", d)}),
+        # moe experts: E on 'model'
+        (r"moe\d*/w_gate$",    {3: P("model", d, None)}),
+        (r"moe\d*/w_up$",      {3: P("model", d, None)}),
+        (r"moe\d*/w_down$",    {3: P("model", None, d)}),
+        (r"router$",           {2: P(None, None)}),
+        # mamba2
+        (r"in_proj$",          {2: P(d, "model")}),
+        (r"out_proj$",         {2: P("model", d)}),
+        (r"conv_w$",           {2: P(None, "model")}),
+        (r"conv_b$",           {1: P("model")}),
+        # xlstm
+        (r"w_[qkv]$",          {2: P(None, "model")}),
+        (r"w_gates$",          {2: P(None, None)}),
+        (r"/r$",               {3: P(None, None, "model")}),
+        (r"w_x$",              {2: P(d, "model")}),
+        (r"/out$",             {2: P("model", d)}),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    fsdp: bool = True
+    seq_parallel: bool = False   # shard the residual stream's seq dim over
+                                 # 'model' (Megatron-SP): norm/residual
+                                 # fusions shard TP-ways; TP boundaries turn
+                                 # into RS/AG pairs
+
+    def __post_init__(self):
+        self.dp = ("pod", "data") if "pod" in self.mesh.axis_names else "data"
+        self._rules = _param_rules("data" if self.fsdp else None)
+
+    # -- parameters -----------------------------------------------------------
+    def param_spec(self, path: str, ndim: int) -> P:
+        for pat, by_rank in self._rules:
+            if re.search(pat, path):
+                for rank in sorted(by_rank, reverse=True):
+                    if ndim >= rank:
+                        spec = by_rank[rank]
+                        pad = ndim - len(spec)
+                        return P(*([None] * pad + list(spec)))
+        return P()     # replicate (norm weights, biases, scalars)
+
+    def tree_specs(self, tree) -> Any:
+        """PartitionSpec tree for a parameter/TrainState-shaped pytree.
+        Optimizer-state wrappers (m/v/f, vr/vc) reuse the parameter rule on
+        the cleaned path, with factored dims dropped."""
+        def one(path, leaf):
+            p = _path_str(path)
+            clean = re.sub(r"^(0/)?(params|opt|m|v|f)/", "", p)
+            clean = re.sub(r"^(m|v|f)/", "", clean)
+            is_vr = clean.endswith("/vr")
+            is_vc = clean.endswith("/vc")
+            clean = re.sub(r"/(vr|vc|v)$", "", clean)
+            nd = leaf.ndim + (1 if is_vr or is_vc else 0)
+            spec = self.param_spec(clean, nd)
+            names = list(spec) + [None] * (nd - len(spec))
+            if is_vr:
+                names = names[:-1]            # mean over last dim
+            elif is_vc:
+                names = names[:-2] + names[-1:]
+            return P(*names[:leaf.ndim])
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    def shardings(self, tree) -> Any:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.tree_specs(tree))
+
+    # -- activations -------------------------------------------------------------
+    def act(self, x, kind: str):
+        spec = self.act_spec(kind, x.ndim, x.shape)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def act_spec(self, kind: str, ndim: int, shape=None) -> Optional[P]:
+        dp = self.dp
+        if kind == "residual":
+            if self.seq_parallel and shape is not None and shape[1] % 16 == 0:
+                return P(dp, "model", None)
+            return P(dp, None, None)
+        if kind == "logits":
+            return P(dp, None, "model") if ndim == 3 else P(dp, None, None, "model")
+        if kind in ("attn_q", "attn_kv"):
+            return P(dp, None, "model", None)
+        if kind == "attn_blk":                 # (B, nblk, blk, H, D)
+            return P(dp, None, None, "model", None)
+        if kind == "ffn_hidden":
+            return P(dp, None, "model")
+        if kind in ("moe_dispatch", "moe_hidden", "moe_combine"):
+            return P(dp, "model", None, None)
+        if kind == "mamba_proj":               # (B, S, channels)
+            return P(dp, None, "model")
+        if kind == "mamba_chunk":              # (B, nc, L, H, P)
+            return P(dp, None, None, "model", None)
+        if kind == "mamba_att":                # (B, nc, L, L, H)
+            return P(dp, None, None, None, "model")
+        return None
+
+    # -- batches -------------------------------------------------------------------
+    def batch_specs(self, batch_tree) -> Any:
+        def one(path, leaf):
+            if leaf.shape[0] == 1:                 # long_500k: replicate batch
+                return NamedSharding(self.mesh, P())
+            return NamedSharding(
+                self.mesh, P(self.dp, *([None] * (leaf.ndim - 1))))
+        return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+    # -- caches -----------------------------------------------------------------------
+    def cache_specs(self, cache_tree, batch: int) -> Any:
+        """Decode-cache shardings: sequence-sharded KV (flash-decoding),
+        batch over DP; batch=1 shards the sequence over every axis."""
+        long_ctx = batch == 1
+        all_axes = tuple(self.mesh.axis_names)
+
+        def one(path, leaf):
+            p = _path_str(path)
+            nd = leaf.ndim
+            if p.endswith("pos"):
+                return NamedSharding(self.mesh, P())
+            if re.search(r"(^|/)(k|v)$", p):       # (L_or_G, B, S, H, D)
+                if long_ctx:
+                    return NamedSharding(self.mesh,
+                                         P(None, None, all_axes, None, None))
+                return NamedSharding(self.mesh,
+                                     P(None, self.dp, "model", None, None))
+            if "mamba" in p or "mlstm" in p:       # states: shard heads/dk
+                axes = [None] * nd
+                # batch axis = first axis with size == batch
+                for i, s in enumerate(leaf.shape):
+                    if s == batch and not long_ctx:
+                        axes[i] = self.dp
+                        break
+                # shard the largest remaining dim on 'model'
+                cand = [(s, i) for i, s in enumerate(leaf.shape)
+                        if axes[i] is None and s % 16 == 0]
+                if cand:
+                    axes[max(cand)[1]] = "model"
+                return NamedSharding(self.mesh, P(*axes))
+            if "slstm" in p:
+                axes = [None] * nd
+                if not long_ctx and nd >= 2:
+                    for i, s in enumerate(leaf.shape):
+                        if s == batch:
+                            axes[i] = self.dp
+                            break
+                if nd >= 1 and leaf.shape[-1] % 16 == 0:
+                    axes[-1] = "model"
+                return NamedSharding(self.mesh, P(*axes))
+            return NamedSharding(self.mesh, P())
+        return jax.tree_util.tree_map_with_path(one, cache_tree)

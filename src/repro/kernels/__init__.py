@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the TinyLFU sketch hot path + jnp oracles.
+
+Layout (per the kernel deliverable spec):
+  sketch_estimate.py / sketch_update.py / sketch_reset.py / admission.py —
+      pl.pallas_call kernels with explicit BlockSpec/memory-space placement
+  ops.py — jit'd public wrappers (+ DeviceTinyLFU facade)
+  ref.py — pure-jnp oracles, bit-exact ground truth for the kernels
+"""
+from .sketch_common import DeviceSketchConfig, init_state, keys_to_lanes
+from .ops import estimate, add, reset, admit, make_config, DeviceTinyLFU
+
+__all__ = ["DeviceSketchConfig", "init_state", "keys_to_lanes", "estimate",
+           "add", "reset", "admit", "make_config", "DeviceTinyLFU"]

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused batched admission decision (paper Fig 1).
+
+One launch answers B independent "admit candidate_i over victim_i?" queries:
+both estimates (main table min + doorkeeper bonus) and the comparison are
+fused so the sketch is read from VMEM once per batch.  This is the kernel the
+serving scheduler calls every tick for prefix-block retention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sketch_common import DeviceSketchConfig
+from .sketch_estimate import vectorized_estimate
+
+
+def _admission_kernel(cfg: DeviceSketchConfig, counters_ref, dk_ref,
+                      clo_ref, chi_ref, vlo_ref, vhi_ref, out_ref):
+    counters = counters_ref[...]
+    dk = dk_ref[...]
+    ce = vectorized_estimate(cfg, counters, dk, clo_ref[...], chi_ref[...])
+    ve = vectorized_estimate(cfg, counters, dk, vlo_ref[...], vhi_ref[...])
+    out_ref[...] = (ce > ve).astype(jnp.int32)
+
+
+def admit_pallas(cfg: DeviceSketchConfig, state: dict, cand_lo, cand_hi,
+                 victim_lo, victim_hi, *, interpret: bool = True):
+    (b,) = cand_lo.shape
+    kernel = functools.partial(_admission_kernel, cfg)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 6,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        interpret=interpret,
+    )(state["counters"], state["doorkeeper"],
+      cand_lo.astype(jnp.uint32), cand_hi.astype(jnp.uint32),
+      victim_lo.astype(jnp.uint32), victim_hi.astype(jnp.uint32))
+    return out.astype(jnp.bool_)

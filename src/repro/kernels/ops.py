@@ -1,0 +1,148 @@
+"""Jitted public wrappers around the sketch kernels.
+
+* pads batches to lane multiples,
+* selects Pallas (TPU) vs interpret-mode Pallas vs the pure-jnp oracle,
+* composes `add` with the automatic reset (paper §3.3: reset once the sample
+  counter reaches W).
+
+`DeviceTinyLFU` is the stateful convenience facade used by the serving
+scheduler (serve/prefix_cache.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .sketch_common import DeviceSketchConfig, init_state, keys_to_lanes
+from .sketch_estimate import estimate_pallas
+from .sketch_update import add_pallas
+from .sketch_reset import reset_pallas
+from .admission import admit_pallas
+
+LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_lanes(x: jnp.ndarray, mult: int = LANE) -> jnp.ndarray:
+    b = x.shape[0]
+    pad = (-b) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# functional ops (jit-friendly; cfg static)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def estimate(cfg: DeviceSketchConfig, state: dict, lo: jnp.ndarray,
+             hi: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    b = lo.shape[0]
+    if not use_pallas:
+        return ref.estimate_ref(cfg, state, lo, hi)
+    out = estimate_pallas(cfg, state, _pad_lanes(lo), _pad_lanes(hi),
+                          interpret=_default_interpret())
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def add(cfg: DeviceSketchConfig, state: dict, lo: jnp.ndarray,
+        hi: jnp.ndarray, use_pallas: bool = True) -> dict:
+    """Batch add + automatic reset when the sample counter crosses W."""
+    b = lo.shape[0]
+    if use_pallas:
+        new = add_pallas(cfg, state, _pad_lanes(lo), _pad_lanes(hi),
+                         n_valid=b, interpret=_default_interpret())
+    else:
+        new = ref.add_ref(cfg, state, lo, hi)
+    if cfg.sample_size:
+        def do_reset(s):
+            if use_pallas:
+                return reset_pallas(cfg, s, interpret=_default_interpret())
+            return ref.reset_ref(cfg, s)
+        new = jax.lax.cond(new["size"] >= cfg.sample_size, do_reset,
+                           lambda s: s, new)
+    return new
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def reset(cfg: DeviceSketchConfig, state: dict) -> dict:
+    return reset_pallas(cfg, state, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def admit(cfg: DeviceSketchConfig, state: dict, cand_lo, cand_hi,
+          victim_lo, victim_hi, use_pallas: bool = True) -> jnp.ndarray:
+    b = cand_lo.shape[0]
+    if not use_pallas:
+        return ref.admission_ref(cfg, state, cand_lo, cand_hi,
+                                 victim_lo, victim_hi)
+    out = admit_pallas(cfg, state, _pad_lanes(cand_lo), _pad_lanes(cand_hi),
+                       _pad_lanes(victim_lo), _pad_lanes(victim_hi),
+                       interpret=_default_interpret())
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# stateful facade
+# ---------------------------------------------------------------------------
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def make_config(num_blocks: int, sample_factor: int = 8,
+                counters_per_item: float = 2.0, rows: int = 4,
+                dk_bits_per_item: float = 4.0) -> DeviceSketchConfig:
+    """Same sizing rule as core.sketch.default_sketch (≈1.5 B/sample elem)."""
+    sample = sample_factor * num_blocks
+    width = _pow2ceil(max(8, counters_per_item * sample / rows))
+    width = max(width, 8)
+    return DeviceSketchConfig(
+        width=width, rows=rows, cap=min(15, max(1, sample_factor - 1)),
+        dk_bits=max(32, _pow2ceil(sample * dk_bits_per_item)),
+        sample_size=sample)
+
+
+class DeviceTinyLFU:
+    """Stateful TinyLFU over device arrays (serving-side admission).
+
+    Keys are uint64 (block hashes); batches are converted to 32-bit lanes on
+    the way in.  All methods are O(batch) with the sketch resident on device.
+    """
+
+    def __init__(self, num_blocks: int, sample_factor: int = 8,
+                 use_pallas: bool = True, **kw):
+        self.cfg = make_config(num_blocks, sample_factor=sample_factor, **kw)
+        self.state = init_state(self.cfg)
+        self.use_pallas = use_pallas
+
+    def record(self, keys: np.ndarray) -> None:
+        if len(keys) == 0:
+            return
+        lo, hi = keys_to_lanes(keys)
+        self.state = add(self.cfg, self.state, lo, hi, self.use_pallas)
+
+    def estimate(self, keys: np.ndarray) -> np.ndarray:
+        if len(keys) == 0:
+            return np.zeros(0, np.int32)
+        lo, hi = keys_to_lanes(keys)
+        return np.asarray(estimate(self.cfg, self.state, lo, hi,
+                                   self.use_pallas))
+
+    def admit(self, cands: np.ndarray, victims: np.ndarray) -> np.ndarray:
+        if len(cands) == 0:
+            return np.zeros(0, bool)
+        clo, chi = keys_to_lanes(cands)
+        vlo, vhi = keys_to_lanes(victims)
+        return np.asarray(admit(self.cfg, self.state, clo, chi, vlo, vhi,
+                                self.use_pallas))

@@ -1,0 +1,127 @@
+"""Shared device-sketch configuration, state, and 32-bit-lane hashing.
+
+The device sketch is the TPU-resident twin of ``core.sketch.FrequencySketch``:
+4-bit counters packed 8-per-int32 word (paper §3.4.1 small counters), a
+doorkeeper bitset packed 32-per-int32 (§3.4.2), and the reset/aging rule
+(§3.3).  Keys arrive as (lo, hi) uint32 lane pairs — TPU has no 64-bit int
+multiply, so hashing runs the 32-bit prospector mixer per lane (DESIGN.md §2).
+
+Everything here is plain jnp (usable both inside Pallas kernel bodies and in
+the pure-jnp oracles in ref.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import MIX32_M1, MIX32_M2, PROBE_SALTS
+
+DK_SALT_XOR = 0xDEADBEEF        # doorkeeper probes use salted variants
+HI_MIX_XOR = 0x85EBCA6B
+
+
+def _pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclass(frozen=True)
+class DeviceSketchConfig:
+    width: int                    # counters per row (power of two)
+    rows: int = 4
+    cap: int = 15                 # <= 15 (4-bit nibbles)
+    dk_bits: int = 0              # doorkeeper bits (power of two); 0 = off
+    dk_probes: int = 3
+    sample_size: int = 0          # W; 0 = never reset automatically
+
+    def __post_init__(self):
+        assert _pow2(self.width) and self.width % 8 == 0
+        assert 1 <= self.cap <= 15
+        assert self.dk_bits == 0 or (_pow2(self.dk_bits) and self.dk_bits >= 32)
+        assert self.rows <= len(PROBE_SALTS)
+
+    @property
+    def words_per_row(self) -> int:
+        return self.width // 8
+
+    @property
+    def dk_words(self) -> int:
+        return max(1, self.dk_bits // 32)
+
+
+def init_state(cfg: DeviceSketchConfig) -> dict:
+    """Functional sketch state (a pytree of device arrays)."""
+    return {
+        "counters": jnp.zeros((cfg.rows, cfg.words_per_row), jnp.int32),
+        "doorkeeper": jnp.zeros((1, cfg.dk_words), jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# hashing (jnp; identical math to core.hashing.probe_indices32_np)
+# ---------------------------------------------------------------------------
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(MIX32_M1)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(MIX32_M2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def probe_index(lo: jnp.ndarray, hi: jnp.ndarray, p: int,
+                width: int) -> jnp.ndarray:
+    """Index of probe ``p`` into a row of ``width`` (pow2) counters."""
+    salt = jnp.uint32(PROBE_SALTS[p % len(PROBE_SALTS)]
+                      + 0x9E3779B9 * (p // len(PROBE_SALTS)))
+    h = mix32(lo.astype(jnp.uint32) + salt) ^ \
+        mix32(hi.astype(jnp.uint32) ^ jnp.uint32(HI_MIX_XOR) ^ salt)
+    return (h & jnp.uint32(width - 1)).astype(jnp.int32)
+
+
+def dk_probe_index(lo: jnp.ndarray, hi: jnp.ndarray, p: int,
+                   dk_bits: int) -> jnp.ndarray:
+    salt = jnp.uint32((PROBE_SALTS[p % len(PROBE_SALTS)] ^ DK_SALT_XOR)
+                      + 0x9E3779B9 * (p // len(PROBE_SALTS)))
+    h = mix32(lo.astype(jnp.uint32) + salt) ^ \
+        mix32(hi.astype(jnp.uint32) ^ jnp.uint32(HI_MIX_XOR) ^ salt)
+    return (h & jnp.uint32(dk_bits - 1)).astype(jnp.int32)
+
+
+# -- nibble helpers (int32-safe: masks clear any sign-extension bits) --------
+
+def nibble_get(word: jnp.ndarray, nib: jnp.ndarray) -> jnp.ndarray:
+    """Extract 4-bit counter ``nib`` (0..7) from an int32 word."""
+    return (word >> (nib * 4)) & jnp.int32(0xF)
+
+
+def nibble_inc(word: jnp.ndarray, nib: jnp.ndarray) -> jnp.ndarray:
+    """Increment 4-bit counter ``nib`` (caller guarantees value < 15)."""
+    return word + (jnp.int32(1) << (nib * 4))
+
+
+def halve_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-nibble halving of packed counters: the paper's reset as one VPU op.
+    (x >> 1) & 0x77777777 clears both cross-nibble borrow bits and the sign
+    extension."""
+    return (words >> 1) & jnp.int32(0x77777777)
+
+
+def bit_get(words: jnp.ndarray, bit: jnp.ndarray) -> jnp.ndarray:
+    """Read bit ``bit`` from a packed int32 bitset (flat indexing)."""
+    word = words.reshape(-1)[bit >> 5]
+    return (word >> (bit & 31)) & jnp.int32(1)
+
+
+def keys_to_lanes(keys: np.ndarray | jnp.ndarray):
+    """uint64 numpy keys -> (lo, hi) uint32 jnp arrays (host-side helper)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    return lo, hi

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: batched TinyLFU frequency estimation.
+
+Adapted for the TPU memory hierarchy (DESIGN.md §2): the whole sketch
+(packed 4-bit counters + doorkeeper bitset, ≲1 MiB) is pinned in VMEM for the
+duration of a batch — the TPU analogue of the paper's "fits in a single
+memory page".  Per-key gathers are vectorized as one-hot matmuls on the MXU:
+an int32 word is gathered exactly by splitting it into two 16-bit halves
+(each < 2^24, exact in fp32), gathering both with a (B × W) one-hot × (W,)
+word-vector product, and recombining.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sketch_common import (DeviceSketchConfig, probe_index, dk_probe_index,
+                            nibble_get)
+
+
+def _onehot_gather_words(words_row: jnp.ndarray, w_idx: jnp.ndarray) -> jnp.ndarray:
+    """Exact int32 gather words_row[w_idx] via two fp32 MXU matmuls.
+
+    words_row: (W,) int32; w_idx: (B,) int32 -> (B,) int32.
+    """
+    W = words_row.shape[0]
+    B = w_idx.shape[0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
+              == w_idx[:, None]).astype(jnp.float32)
+    lo16 = (words_row & jnp.int32(0xFFFF)).astype(jnp.float32)
+    hi16 = ((words_row >> 16) & jnp.int32(0xFFFF)).astype(jnp.float32)
+    g_lo = jnp.dot(onehot, lo16, preferred_element_type=jnp.float32)
+    g_hi = jnp.dot(onehot, hi16, preferred_element_type=jnp.float32)
+    return g_lo.astype(jnp.int32) | (g_hi.astype(jnp.int32) << 16)
+
+
+def vectorized_estimate(cfg: DeviceSketchConfig, counters: jnp.ndarray,
+                        dk: jnp.ndarray, lo: jnp.ndarray,
+                        hi: jnp.ndarray) -> jnp.ndarray:
+    """(B,) int32 estimates; pure jnp so it runs inside kernel bodies."""
+    est = jnp.full(lo.shape, 15, jnp.int32)
+    for r in range(cfg.rows):
+        idx = probe_index(lo, hi, r, cfg.width)
+        word = _onehot_gather_words(counters[r], idx >> 3)
+        est = jnp.minimum(est, nibble_get(word, idx & 7))
+    if cfg.dk_bits:
+        dk_flat = dk.reshape(-1)
+        ok = jnp.ones(lo.shape, jnp.bool_)
+        for p in range(cfg.dk_probes):
+            bit = dk_probe_index(lo, hi, p, cfg.dk_bits)
+            word = _onehot_gather_words(dk_flat, bit >> 5)
+            ok &= ((word >> (bit & 31)) & 1).astype(jnp.bool_)
+        est = est + ok.astype(jnp.int32)
+    return est
+
+
+def _estimate_kernel(cfg: DeviceSketchConfig, counters_ref, dk_ref, lo_ref,
+                     hi_ref, out_ref):
+    out_ref[...] = vectorized_estimate(
+        cfg, counters_ref[...], dk_ref[...], lo_ref[...], hi_ref[...])
+
+
+def estimate_pallas(cfg: DeviceSketchConfig, state: dict, lo: jnp.ndarray,
+                    hi: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Batched estimate.  B should be a multiple of 128 (ops.py pads)."""
+    (b,) = lo.shape
+    kernel = functools.partial(_estimate_kernel, cfg)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # counters: whole table
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # doorkeeper
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # lo
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # hi
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        interpret=interpret,
+    )(state["counters"], state["doorkeeper"], lo.astype(jnp.uint32),
+      hi.astype(jnp.uint32))

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: the paper's reset (§3.3) as one vectorized VPU pass.
+
+Per-nibble halving of the packed counters — ``(x >> 1) & 0x77777777`` — maps
+the paper's "shift registers in hardware" observation directly onto TPU VPU
+lanes; the doorkeeper is zeroed in the same launch.  Tiled over counter rows
+with an explicit BlockSpec grid (the one kernel here whose working set could
+exceed VMEM for very large samples).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sketch_common import DeviceSketchConfig, halve_words
+
+
+def _reset_kernel(counters_ref, dk_ref, counters_out, dk_out):
+    r = pl.program_id(0)
+    counters_out[...] = halve_words(counters_ref[...])
+
+    @pl.when(r == 0)
+    def _():
+        dk_out[...] = jnp.zeros_like(dk_ref[...])
+
+
+def reset_pallas(cfg: DeviceSketchConfig, state: dict,
+                 *, interpret: bool = True) -> dict:
+    rows, w8 = state["counters"].shape
+    counters, dk = pl.pallas_call(
+        _reset_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, w8), jnp.int32),
+            jax.ShapeDtypeStruct(state["doorkeeper"].shape, jnp.int32),
+        ),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, w8), lambda r: (r, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec(state["doorkeeper"].shape, lambda r: (0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, w8), lambda r: (r, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec(state["doorkeeper"].shape, lambda r: (0, 0),
+                         memory_space=pltpu.VMEM),
+        ),
+        interpret=interpret,
+    )(state["counters"], state["doorkeeper"])
+    return {"counters": counters, "doorkeeper": dk, "size": state["size"] // 2}

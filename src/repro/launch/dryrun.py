@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+against the production meshes (16x16 single pod, 2x16x16 two pods) with 512
+placeholder host devices, print memory/cost analysis, and emit the roofline
+terms (analysis/roofline.py) to experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model, SHAPES, is_subquadratic
+from repro.models.common import param_count
+from repro.optim import make_optimizer, wsd
+from repro.train import make_train_state, build_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.shardings import ShardingPolicy
+from repro.analysis.roofline import Roofline, SimpleColl, model_flops
+from repro.analysis.hlo_cost import analyze_hlo
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../..",
+                       "experiments", "dryrun")
+
+# archs where AdamW's fp32 m+v cannot fit a single pod (DESIGN.md §4)
+ADAFACTOR_ARCHS = {"llama4-maverick-400b-a17b"}
+
+# loss chunking keeps fp32 logits bounded; larger vocab -> smaller chunk
+def _loss_chunk(cfg):
+    return 128 if cfg.vocab_size >= 100_000 else 256
+
+
+def should_skip(arch_cfg, shape_kind: str) -> str | None:
+    if shape_kind == "long_500k" and not is_subquadratic(arch_cfg):
+        return ("pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §5)")
+    return None
+
+
+def build_cell(model, shape_kind: str, policy: ShardingPolicy):
+    """Returns (fn, args, in_shardings, tokens_for_model_flops, kind)."""
+    cfg = model.cfg
+    sh = SHAPES[shape_kind]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    specs = model.input_specs(shape_kind)
+
+    if kind == "train":
+        opt = make_optimizer(
+            "adafactor" if cfg.name in ADAFACTOR_ARCHS else "adamw",
+            wsd(3e-4, 2000, 100_000, 20_000))
+        state_shapes = jax.eval_shape(
+            lambda k: make_train_state(model, opt, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        step = build_train_step(model, opt, policy=policy,
+                                loss_chunk=_loss_chunk(cfg))
+        batch = {k: v for k, v in specs.items()}
+        in_sh = (policy.shardings(state_shapes), policy.batch_specs(batch))
+        return step, (state_shapes, batch), in_sh, B * S, kind
+
+    params_shapes = jax.eval_shape(
+        lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    param_sh = policy.shardings(params_shapes)
+
+    if kind == "prefill":
+        S_cache = S + (cfg.n_vis_tokens or 0)
+        cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S_cache))
+        cache_sh = policy.cache_specs(cache_shapes, B)
+        batch = dict(specs)
+
+        def prefill_step(params, batch, cache):
+            cache, last_h = model.prefill(params, batch, cache,
+                                          policy=policy)
+            return cache, model.lm_head(params, last_h, policy=policy)
+
+        in_sh = (param_sh, policy.batch_specs(batch), cache_sh)
+        return prefill_step, (params_shapes, batch, cache_shapes), in_sh, \
+            B * S, kind
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes = specs["cache"]
+    cache_sh = policy.cache_specs(cache_shapes, B)
+    tokens = specs["tokens"]
+
+    def serve_step(params, tokens, cache):
+        return model.decode(params, tokens, cache, policy=policy)
+
+    in_sh = (param_sh, policy.batch_specs({"t": tokens})["t"], cache_sh)
+    return serve_step, (params_shapes, tokens, cache_shapes), in_sh, B, kind
+
+
+def run_cell(arch: str, shape_kind: str, multi_pod: bool,
+             policy_overrides: dict | None = None,
+             cfg_overrides: dict | None = None, tag: str = "",
+             save: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    t0 = time.time()
+    skip = should_skip(cfg, shape_kind)
+    mesh_name = "multi" if multi_pod else "single"
+    result = {"arch": cfg.name, "shape": shape_kind, "mesh": mesh_name,
+              "status": "skip", "reason": skip, "tag": tag,
+              "cfg_overrides": {k: str(v) for k, v in
+                                (cfg_overrides or {}).items()}}
+    if skip:
+        if verbose:
+            print(f"[dryrun] {cfg.name} x {shape_kind} x {mesh_name}: "
+                  f"SKIP ({skip})", flush=True)
+        if save:
+            _save(result)
+        return result
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    policy = ShardingPolicy(mesh, **(policy_overrides or {}))
+    fn, args, in_sh, tokens, kind = build_cell(model, shape_kind, policy)
+
+    donate = {"train": (0,), "prefill": (2,), "decode": (2,)}[kind]
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "arg_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:                                    # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    # trip-count-aware cost over the partitioned (per-device) module;
+    # XLA's cost_analysis counts while bodies once (kept raw for reference)
+    hlo = compiled.as_text()
+    try:
+        import gzip
+        hlo_dir = os.path.join(OUT_DIR, "..", "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag_ = tag or ""
+        with gzip.open(os.path.join(
+                hlo_dir, f"{cfg.name}_{shape_kind}_{mesh_name}{tag_}.hlo.gz"),
+                "wt") as f:
+            f.write(hlo)
+    except Exception:
+        pass
+    hc = analyze_hlo(hlo)
+    coll = SimpleColl(counts=dict(hc.coll_counts),
+                      out_bytes=dict(hc.coll_bytes),
+                      wire_bytes=hc.coll_wire_bytes)
+
+    params_shapes = jax.eval_shape(
+        lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    n_params = param_count(params_shapes)
+
+    rl = Roofline(chips=chips, hlo_flops=hc.flops * chips,
+                  hlo_bytes=hc.bytes * chips, coll=coll,
+                  model_flops=model_flops(cfg, n_params, tokens, kind))
+
+    result.update({
+        "status": "ok", "reason": None,
+        "chips": chips, "kind": kind, "n_params": n_params,
+        "compile_s": round(t_compile, 1),
+        "xla_cost_flops_loop_once": float(cost.get("flops", 0.0)),
+        "hlo_flops_per_device": hc.flops,
+        "hlo_bytes_per_device": hc.bytes,
+        "hlo_warnings": hc.warnings[:10],
+        "bytes_by_kind": {k: v for k, v in hc.bytes_by_kind.items()},
+        "top_collectives": dict(sorted(hc.coll_ops.items(),
+                                       key=lambda x: -x[1])[:12]),
+        "top_fusions": dict(sorted(hc.fusion_ops.items(),
+                                   key=lambda x: -x[1])[:12]),
+        "memory": mem_d,
+        "roofline": rl.as_dict(),
+    })
+    if verbose:
+        r = rl.as_dict()
+        print(f"[dryrun] {cfg.name} x {shape_kind} x {mesh_name}: OK "
+              f"compile={t_compile:.0f}s "
+              f"tc={r['t_compute_s']:.4f} tm={r['t_memory_s']:.4f} "
+              f"tcoll={r['t_collective_s']:.4f} "
+              f"bound={r['bottleneck']} frac={r['roofline_frac']:.3f} "
+              f"useful={r['useful_flops_frac']:.2f}", flush=True)
+    if save:
+        _save(result)
+    return result
+
+
+def _save(result: dict) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = result.get("tag") or ""
+    name = f"{result['arch']}_{result['shape']}_{result['mesh']}{tag}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = {"fsdp": not args.no_fsdp}
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, policy_overrides=overrides)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] {arch} x {shape} x "
+                          f"{'multi' if mp else 'single'}: FAIL {e}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(f"{a}/{s}" for a, s, _, _ in failures))
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run tagged optimization iterations on the three
+chosen cells and print before/after roofline terms + byte breakdowns.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --iter 1
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+CELLS = [
+    # (arch, shape, why chosen)
+    ("zamba2-1.2b", "prefill_32k", "worst roofline fraction (0.0022)"),
+    ("llama4-maverick-400b-a17b", "train_4k",
+     "most collective-bound (t_coll 19.9s)"),
+    ("qwen3-4b", "decode_32k", "paper-representative serve_step"),
+]
+
+# iteration -> per-cell cfg overrides (None = skip cell this iteration)
+ITERS = {
+    # it1: buffer donation (in-place cache/state) + bf16 param gathers
+    # (cast-before-gather). Code-level changes; cfg stays default.
+    1: {c[0] + "/" + c[1]: {} for c in CELLS},
+    # it2: per-cell targeted knobs
+    2: {
+        "zamba2-1.2b/prefill_32k": {"ssm_chunk": 128},
+        "llama4-maverick-400b-a17b/train_4k": {
+            "causal_skip": True, "attn_scores_bf16": True},
+        "qwen3-4b/decode_32k": None,      # breakdown-driven; see it3
+    },
+    3: {
+        "zamba2-1.2b/prefill_32k": {"ssm_chunk": 64},
+        "llama4-maverick-400b-a17b/train_4k": None,
+        "qwen3-4b/decode_32k": None,
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iter", type=int, required=True)
+    ap.add_argument("--cell", type=str, default=None)
+    ap.add_argument("--override", type=str, default=None,
+                    help="JSON cfg overrides (ad-hoc iteration)")
+    ap.add_argument("--policy", type=str, default=None,
+                    help="JSON ShardingPolicy overrides")
+    args = ap.parse_args()
+
+    pol = json.loads(args.policy) if args.policy else None
+    for arch, shape, why in CELLS:
+        key = f"{arch}/{shape}"
+        if args.cell and args.cell != key:
+            continue
+        ov = (json.loads(args.override) if args.override
+              else ITERS.get(args.iter, {}).get(key))
+        if ov is None:
+            continue
+        tag = f"_it{args.iter}"
+        r = run_cell(arch, shape, multi_pod=False, cfg_overrides=ov,
+                     policy_overrides=pol, tag=tag)
+        if r["status"] == "ok":
+            bb = r.get("bytes_by_kind", {})
+            top = sorted(bb.items(), key=lambda x: -x[1])[:4]
+            print("  bytes_by_kind:",
+                  {k: f"{v:.2e}" for k, v in top}, flush=True)
+
+
+if __name__ == "__main__":
+    main()

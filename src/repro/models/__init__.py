@@ -1,0 +1,5 @@
+from .common import ModelConfig, NULL_POLICY, param_count
+from .api import Model, build_model, SHAPES, is_subquadratic
+
+__all__ = ["ModelConfig", "NULL_POLICY", "param_count", "Model",
+           "build_model", "SHAPES", "is_subquadratic"]

@@ -1,0 +1,110 @@
+"""Unified model API over the four family implementations.
+
+Every architecture exposes the same five entry points (the training loop,
+serving runtime, and multi-pod dry-run are family-agnostic):
+
+  model.init(key)                         -> params
+  model.hidden_train(params, batch, ...)  -> (hidden, aux_loss)   # pre-head
+  model.prefill(params, batch, cache)     -> (cache, last_hidden)
+  model.decode(params, tokens, cache)     -> (logits, cache)
+  model.init_cache(batch, max_len)        -> cache pytree
+
+plus ``input_specs(kind)`` returning jax.ShapeDtypeStruct stand-ins for each
+assigned input-shape kind (train_4k / prefill_32k / decode_32k / long_500k) —
+the dry-run lowers against these without allocating anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, NULL_POLICY
+from . import transformer, zamba, xlstm
+
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _family_mod(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return transformer
+    if cfg.family == "hybrid_ssm":
+        return zamba
+    if cfg.family == "xlstm":
+        return xlstm
+    raise ValueError(cfg.family)
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """Archs eligible for the long_500k cell (SSM / hybrid / linear-attn)."""
+    return cfg.family in ("hybrid_ssm", "xlstm")
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self._mod = _family_mod(self.cfg)
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key):
+        if self._mod is transformer:
+            return transformer.init_params(self.cfg, key)
+        return self._mod.init_params(self.cfg, key)
+
+    # -- training forward (head applied by train/losses.py, chunked) ----------
+    def hidden_train(self, params, batch, policy=NULL_POLICY, remat=True):
+        return self._mod.forward_train(
+            params, batch["tokens"], self.cfg,
+            vision_embeds=batch.get("vision_embeds"), policy=policy,
+            remat=remat)
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self._mod is transformer:
+            return transformer.init_kv_cache(self.cfg, batch, max_len, dtype)
+        return self._mod.init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch, cache, policy=NULL_POLICY):
+        return self._mod.forward_prefill(
+            params, batch["tokens"], self.cfg, cache,
+            vision_embeds=batch.get("vision_embeds"), policy=policy)
+
+    def decode(self, params, tokens, cache, policy=NULL_POLICY):
+        return self._mod.forward_decode(params, tokens, self.cfg, cache,
+                                        policy=policy)
+
+    def lm_head(self, params, hidden, policy=NULL_POLICY):
+        return transformer.lm_head(params, hidden, self.cfg, policy)
+
+    # -- dry-run input specs -----------------------------------------------------
+    def input_specs(self, kind: str) -> dict:
+        cfg = self.cfg
+        sh = SHAPES[kind]
+        B, S = sh["global_batch"], sh["seq_len"]
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+        specs: dict[str, Any] = {}
+        if sh["kind"] in ("train", "prefill"):
+            specs["tokens"] = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+            if cfg.n_vis_tokens:
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16)
+        else:  # decode: one new token against a seq_len-deep cache
+            one = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+            specs["tokens"] = jax.ShapeDtypeStruct(one, jnp.int32)
+            specs["cache"] = jax.eval_shape(
+                lambda: self.init_cache(B, S))
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

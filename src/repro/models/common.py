@@ -1,0 +1,145 @@
+"""Model configuration + parameter-init utilities shared by every assigned
+architecture.  Pure JAX (no flax): params are plain dict pytrees; layer stacks
+are stored with a leading layer axis and executed with ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid_ssm | xlstm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    # attention
+    rope_theta: float = 1_000_000.0
+    rotary_pct: float = 1.0        # chatglm3: 0.5 ("RoPE 2d")
+    qk_norm: bool = False          # qwen3
+    attn_logit_softcap: float = 0.0
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 1
+    moe_every: int = 1             # llama4-maverick: 2 (alternating dense/MoE)
+    n_shared_experts: int = 0      # llama4: 1 shared expert
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # hybrid SSM (zamba2)
+    ssm_state: int = 0             # Mamba2 d_state
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_every: int = 0            # shared attention block period (zamba2: 6)
+    # xLSTM
+    slstm_period: int = 0          # 1 sLSTM per this many blocks (xlstm: 8)
+    proj_factor: float = 2.0       # mLSTM up-projection
+    # audio (musicgen)
+    n_codebooks: int = 0
+    # vlm (llava-next) — vision frontend is a stub; embeddings arrive as input
+    n_vis_tokens: int = 0
+    # scaling tricks
+    scale_emb: float = 1.0         # minicpm: 12.0
+    scale_depth: float = 0.0       # minicpm: 1.4 (residual scaled by this/sqrt(L))
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    # attention blocking (flash-style jnp attention)
+    q_block: int = 512
+    kv_block: int = 1024
+    ssm_chunk: int = 256
+    # perf knobs (see EXPERIMENTS.md §Perf — each is one hillclimb hypothesis)
+    attn_scores_bf16: bool = False   # materialize score/prob tiles in bf16
+    causal_skip: bool = False        # static triangular tiling (skip masked
+                                     # kv tiles; unrolled outer q loop)
+    cast_params_once: bool = True    # cast fp32 params->bf16 BEFORE layer use
+                                     # so FSDP all-gathers move bf16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head storage rows: padded to a shardable multiple when
+        the published vocab isn't divisible by the TP degree (minicpm's
+        122753).  Padded logit columns are masked in the loss and sliced off
+        the head — the model is functionally exactly ``vocab_size``."""
+        if self.vocab_size % 16 == 0:
+            return self.vocab_size
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def residual_scale(self) -> float:
+        return (self.scale_depth / float(np.sqrt(self.n_layers))
+                if self.scale_depth else 1.0)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (fan-in = shape[-2] unless overridden)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic key splitter: kg = KeyGen(key); kg() -> fresh key."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def stack_layer_params(per_layer: list[dict]) -> dict:
+    """[{name: arr}, ...] -> {name: arr[L, ...]} for lax.scan stacks."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# sharding policy hook (distributed/shardings.py provides the real one)
+# ---------------------------------------------------------------------------
+
+class NullPolicy:
+    """No-op activation-sharding policy (single-device paths, smoke tests)."""
+
+    def act(self, x, kind: str):
+        return x
+
+
+NULL_POLICY = NullPolicy()

@@ -1,0 +1,218 @@
+"""Core layers: RMSNorm, RoPE (incl. partial/"2d"), GQA flash-style blocked
+attention (train/prefill) + decode attention, SwiGLU MLP.
+
+Attention never materializes the full (S x S) score matrix: it runs an online
+-softmax over (q_block x kv_block) tiles via nested lax.scan — the jnp analogue
+of FlashAttention, sized so tiles stay within a few hundred MB at 32k context.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, NULL_POLICY
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, rot_dim: int, theta: float):
+    """positions (...,) int -> cos/sin (..., rot_dim//2) fp32."""
+    inv = 1.0 / (theta ** (np.arange(0, rot_dim, 2, dtype=np.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rotary_pct: float = 1.0) -> jnp.ndarray:
+    """x (B, S, H, D); cos/sin (B, S, rot//2).  Rotates the first
+    ``rotary_pct * D`` dims (half-split convention); chatglm3's 2d-RoPE is the
+    rotary_pct=0.5 case (second half carries no positional signal)."""
+    d = x.shape[-1]
+    rot = int(d * rotary_pct)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention — training & prefill
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, x.shape[axis]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), x.shape[axis]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    q_block: int = 512, kv_block: int = 1024,
+                    q_offset: int | jnp.ndarray = 0,
+                    kv_len: Optional[jnp.ndarray] = None,
+                    softcap: float = 0.0,
+                    scores_bf16: bool = False,
+                    causal_skip: bool = False,
+                    policy=NULL_POLICY) -> jnp.ndarray:
+    """Online-softmax tiled attention with a single head axis.
+
+    q (B, Sq, H, D); k, v (B, Skv, H, D) — GQA callers repeat KV heads before
+    the call so every tensor in the scan shares one head axis (keeps the
+    'model'-axis sharding stable across iterations; grouped layouts made
+    GSPMD thrash reshardings inside the loop).
+    q_offset: global position of q[0] (prefill chunks); kv_len (B,) masks a
+    padded KV cache.  Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, _, _ = k.shape
+    scale = float(1.0 / np.sqrt(D))
+
+    q, _ = _pad_to(q, 1, q_block)
+    k, _ = _pad_to(k, 1, kv_block)
+    v, _ = _pad_to(v, 1, kv_block)
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+
+    cst = (lambda x: policy.act(x, "attn_blk")) if policy else (lambda x: x)
+    qb = cst(q.reshape(B, nq, q_block, H, D)).transpose(1, 0, 2, 3, 4)
+    kb = cst(k.reshape(B, nk, kv_block, H, D)).transpose(1, 0, 2, 3, 4)
+    vb = cst(v.reshape(B, nk, kv_block, H, D)).transpose(1, 0, 2, 3, 4)
+
+    kv_limit = kv_len if kv_len is not None else jnp.full((B,), Skv, jnp.int32)
+    score_dtype = jnp.bfloat16 if scores_bf16 else jnp.float32
+
+    def kv_tile(carry, ki, kblk, vblk, qblk, q_pos, *, need_mask: bool):
+        m, l, acc = carry
+        k_pos = ki * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        if need_mask:
+            mask = k_pos[None, :] < kv_limit[:, None]          # (B, kb)
+            if causal:
+                mask = mask[:, None, :] \
+                    & (q_pos[:, None] >= k_pos[None, :])[None]
+            else:
+                mask = jnp.broadcast_to(mask[:, None, :],
+                                        (B, q_block, kv_block))
+            s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+        # optional low-precision materialization of the score tile (halves
+        # the dominant HBM traffic of unfused attention; §Perf)
+        s = s.astype(score_dtype)
+        m_new = jnp.maximum(m, s.max(-1).astype(jnp.float32))
+        p = jnp.exp(s.astype(jnp.float32) - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        return (jnp.full((B, H, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, q_block), jnp.float32),
+                jnp.zeros((B, H, q_block, D), jnp.float32))
+
+    def finish(qi_out):
+        m, l, acc = qi_out
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,qb,H,D)
+
+    static_q_offset = isinstance(q_offset, int)
+    if causal_skip and causal and static_q_offset and nq <= 16 \
+            and kv_len is None:
+        # static triangular tiling: unrolled q loop; each q-block scans only
+        # its causal kv prefix; only the diagonal tile needs a mask.
+        outs = []
+        for qi in range(nq):
+            qblk = qb[qi]
+            q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+            hi = (q_offset + (qi + 1) * q_block + kv_block - 1) // kv_block
+            hi = min(hi, nk)
+            carry = init_carry()
+            if hi > 1:
+                def body(c, ki_kv):
+                    ki, kblk, vblk = ki_kv
+                    return kv_tile(c, ki, kblk, vblk, qblk, q_pos,
+                                   need_mask=False), None
+                carry, _ = jax.lax.scan(
+                    body, carry,
+                    (jnp.arange(hi - 1), kb[:hi - 1], vb[:hi - 1]))
+            carry = kv_tile(carry, jnp.int32(hi - 1), kb[hi - 1], vb[hi - 1],
+                            qblk, q_pos, need_mask=True)
+            outs.append(finish(carry))
+        ob = jnp.stack(outs)
+    else:
+        def q_step(_, qi_qblk):
+            qi, qblk = qi_qblk                      # qblk (B, qb, H, D)
+            q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+            def kv_step(carry, ki_kv):
+                ki, kblk, vblk = ki_kv
+                return kv_tile(carry, ki, kblk, vblk, qblk, q_pos,
+                               need_mask=True), None
+
+            carry, _ = jax.lax.scan(kv_step, init_carry(),
+                                    (jnp.arange(nk), kb, vb))
+            return None, finish(carry)
+
+        _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, *, softcap: float = 0.0,
+                     policy=NULL_POLICY) -> jnp.ndarray:
+    """Single-token attention over a (padded) KV cache.
+
+    q (B, 1, Hq, D); caches (B, Smax, Hkv, D); pos (B,) = #valid cache slots
+    (the new token's k/v must already be written at pos-1).
+    """
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(Smax)[None, :] < pos[:, None]            # (B, Smax)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray, policy=NULL_POLICY) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = policy.act(h, "ffn_hidden")
+    return h @ w_down

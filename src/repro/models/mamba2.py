@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) mixer — chunked parallel scan for train/prefill, O(1)-state
+recurrent step for decode (zamba2 hybrid backbone).
+
+Chunked algorithm (Mamba2 paper §6): sequence split into chunks of L;
+intra-chunk term is a masked (L x L) "attention" with cumulative decay;
+inter-chunk term propagates the (H, P, N) state with a tiny lax.scan over
+chunks.  All matmuls in bf16 with fp32 softplus/exp gate math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, NULL_POLICY, dense_init
+
+NEG_INF = -1e30
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba_params(kg, cfg: ModelConfig, dtype):
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N                       # x + B + C (single group)
+    return {
+        "in_proj": dense_init(kg(), (cfg.d_model, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(kg(), (d_in, cfg.d_model), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv1d.  x (B,S,C); w (K,C).  state (B,K-1,C) holds the
+    trailing inputs of the previous segment (decode).  Returns y, new_state."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(y), xp[:, -(K - 1):]
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                   initial_state=None, policy=NULL_POLICY):
+    """x (B,S,M) -> (y (B,S,M), final_state dict(conv, ssm))."""
+    B, S, M = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    L = min(cfg.ssm_chunk, S)
+
+    zxbcdt = policy.act(x @ p["in_proj"].astype(x.dtype), "mamba_proj")
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_state0 = None if initial_state is None else initial_state["conv"]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype), conv_state0)
+    xbc = policy.act(xbc, "mamba_proj")
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+
+    # pad the time axis to a chunk multiple; padded steps are inert
+    # (dt=0 -> decay=1 and zero input contribution)
+    S_orig = S
+    pad = (-S) % L
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S += pad
+    nc = S // L
+    dlog = dt * A                                                  # log decay, <=0
+
+    # chunked views
+    xs_c = (xs * dt.astype(xs.dtype)[..., None]).reshape(B, nc, L, H, P)
+    xs_c = policy.act(xs_c, "mamba_chunk")
+    B_c = Bm.reshape(B, nc, L, N)
+    C_c = Cm.reshape(B, nc, L, N)
+    dlog_c = dlog.reshape(B, nc, L, H)
+    cum = jnp.cumsum(dlog_c, axis=2)                               # (B,nc,L,H)
+    total = cum[:, :, -1]                                          # (B,nc,H)
+
+    # ---- intra-chunk: masked decay attention -------------------------------
+    cb = jnp.einsum("bcln,bcsn->bcls", C_c, B_c,
+                    preferred_element_type=jnp.float32)            # (B,nc,L,L)
+    dmask = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: non-causal entries have dmask > 0 and would overflow,
+    # poisoning the backward pass (inf * 0 = nan)
+    dmask = jnp.where(causal[None, None, :, :, None], dmask, NEG_INF)
+    att = (jnp.exp(dmask) * cb[..., None]).astype(x.dtype)         # (B,nc,L,L,H)
+    att = policy.act(att, "mamba_att")
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", att, xs_c)
+
+    # ---- chunk states + inter-chunk scan ------------------------------------
+    # state contribution of step s within chunk: exp(total - cum_s) * dt x B
+    w_end = jnp.exp(total[:, :, None, :] - cum).astype(x.dtype)    # (B,nc,L,H)
+    S_c = jnp.einsum("bclhp,bcln,bclh->bchpn", xs_c, B_c, w_end)   # (B,nc,H,P,N)
+
+    ssm0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+            else initial_state["ssm"])
+
+    def chunk_step(h, inp):
+        s_c, tot = inp                                             # (B,H,P,N),(B,H)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + s_c.astype(jnp.float32)
+        return h_new, h                                            # emit state BEFORE chunk
+
+    (ssm_final, h_prevs) = jax.lax.scan(
+        chunk_step, ssm0,
+        (S_c.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: C_t · exp(cum_t) h_prev -------------------------
+    w_in = jnp.exp(cum).astype(x.dtype)                            # (B,nc,L,H)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", C_c, w_in,
+                         h_prev.astype(x.dtype))
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)[:, :S_orig]
+
+    # gated output norm + projection
+    y = y * jax.nn.silu(z)
+    from .layers import rmsnorm
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": conv_state, "ssm": ssm_final}
+
+
+def mamba2_decode_step(p: dict, x: jnp.ndarray, state: dict, cfg: ModelConfig,
+                       policy=NULL_POLICY):
+    """Single-token recurrent step.  x (B,1,M); state {conv (B,K-1,C),
+    ssm (B,H,P,N)} -> (y (B,1,M), new state)."""
+    B = x.shape[0]
+    d_in, H, P, N = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype), state["conv"])
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                          # (B,H)
+    dx = xs.astype(jnp.float32) * dt[..., None]                      # (B,H,P)
+    ssm = state["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", dx, Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z)
+    from .layers import rmsnorm
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), {"conv": conv_state, "ssm": ssm}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

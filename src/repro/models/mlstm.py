@@ -1,0 +1,239 @@
+"""xLSTM blocks: chunked-parallel mLSTM (matrix memory) and strictly
+recurrent sLSTM (scalar memory with block-diagonal recurrence), per
+arXiv:2405.04517, adapted for TPU:
+
+* mLSTM uses the same chunked decay-attention machinery as our Mamba2 SSD —
+  the normalizer state n is carried as an extra value column, and the input
+  gate is sigmoid (bounded) instead of exp+stabilizer so the chunked form
+  stays in bf16-safe range (deviation noted in DESIGN.md §6).
+* sLSTM keeps the paper's exponential gating with the m stabilizer state —
+  it is inherently sequential (h feeds the block-diagonal recurrence R), so
+  training runs a lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, NULL_POLICY, dense_init
+from .layers import rmsnorm
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(kg, cfg: ModelConfig, dtype):
+    M = cfg.d_model
+    d_in, H, hd = mlstm_dims(cfg)
+    return {
+        "up_x": dense_init(kg(), (M, d_in), dtype),
+        "up_z": dense_init(kg(), (M, d_in), dtype),
+        "w_q": dense_init(kg(), (d_in, d_in), dtype),
+        "w_k": dense_init(kg(), (d_in, d_in), dtype),
+        "w_v": dense_init(kg(), (d_in, d_in), dtype),
+        "w_gates": dense_init(kg(), (d_in, 2 * H), dtype),   # i, f per head
+        "gate_bias": jnp.concatenate([jnp.zeros((H,)),       # igate bias 0
+                                      3.0 + jnp.arange(H) * 0.5]).astype(dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "down": dense_init(kg(), (d_in, M), dtype),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, lf, li, chunk: int, h0=None):
+    """Chunked gated linear attention with normalizer column.
+
+    q,k,v (B,S,H,D); lf (B,S,H) log-forget (<=0); li (B,S,H) log-input (<=0).
+    Returns (y (B,S,H,D), final_state (B,H,D,D+1) fp32).
+    """
+    B, S, H, D = q.shape
+    L = min(chunk, S)
+    scale = float(1.0 / np.sqrt(D))   # python float: weak type, keeps bf16
+
+    # pad time axis to a chunk multiple; padded steps: forget=1 (lf=0) and
+    # input weight exp(li)=0, so states pass through untouched.
+    S_orig = S
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e30)
+        S += pad
+    nc = S // L
+
+    vn = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    qc = (q * scale).reshape(B, nc, L, H, D)
+    kc = k.reshape(B, nc, L, H, D)
+    vc = vn.reshape(B, nc, L, H, D + 1)
+    lf_c = lf.reshape(B, nc, L, H)
+    li_c = li.reshape(B, nc, L, H)
+    cum = jnp.cumsum(lf_c, axis=2)                      # (B,nc,L,H)
+    total = cum[:, :, -1]
+
+    # intra-chunk: att[t,s] = exp(cum_t - cum_s + li_s) * (q_t . k_s), s<=t
+    qk = jnp.einsum("bclhd,bcshd->bclsh", qc, kc,
+                    preferred_element_type=jnp.float32)
+    dmask = cum[:, :, :, None, :] - cum[:, :, None, :, :] \
+        + li_c[:, :, None, :, :]                        # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp (non-causal dmask > 0 would overflow -> nan in bwd)
+    dmask = jnp.where(causal[None, None, :, :, None], dmask, -1e30)
+    att = (jnp.exp(dmask) * qk).astype(q.dtype)
+    y_intra = jnp.einsum("bclsh,bcshd->bclhd", att, vc)
+
+    # chunk states
+    w_end = jnp.exp(total[:, :, None, :] - cum + li_c).astype(q.dtype)
+    S_c = jnp.einsum("bclhd,bclh,bclhe->bchde", kc, w_end, vc)
+
+    h_init = (jnp.zeros((B, H, D, D + 1), jnp.float32) if h0 is None else h0)
+
+    def chunk_step(h, inp):
+        s_c, tot = inp
+        return h * jnp.exp(tot)[:, :, None, None] + s_c.astype(jnp.float32), h
+
+    h_final, h_prevs = jax.lax.scan(
+        chunk_step, h_init,
+        (S_c.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,D,D+1)
+
+    w_in = jnp.exp(cum).astype(q.dtype)
+    y_inter = jnp.einsum("bclhd,bclh,bchde->bclhe", qc, w_in,
+                         h_prev.astype(q.dtype))
+    y = (y_intra + y_inter).reshape(B, S, H, D + 1)[:, :S_orig]
+    num, den = y[..., :-1], y[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    return y, h_final
+
+
+def mlstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  initial_state=None, policy=NULL_POLICY):
+    B, S, M = x.shape
+    d_in, H, hd = mlstm_dims(cfg)
+    xin = x @ p["up_x"].astype(x.dtype)
+    z = x @ p["up_z"].astype(x.dtype)
+    q = (xin @ p["w_q"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xin @ p["w_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xin @ p["w_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    gates = (xin @ p["w_gates"].astype(x.dtype)).astype(jnp.float32) \
+        + p["gate_bias"].astype(jnp.float32)
+    li = jax.nn.log_sigmoid(gates[..., :H])             # log input gate <= 0
+    lf = jax.nn.log_sigmoid(gates[..., H:])             # log forget gate <= 0
+    y, state = _mlstm_core_chunked(q, k, v, lf, li, cfg.ssm_chunk,
+                                   h0=None if initial_state is None
+                                   else initial_state)
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype), state
+
+
+def mlstm_decode_step(p: dict, x: jnp.ndarray, state: jnp.ndarray,
+                      cfg: ModelConfig, policy=NULL_POLICY):
+    """x (B,1,M); state (B,H,D,D+1) fp32."""
+    B = x.shape[0]
+    d_in, H, hd = mlstm_dims(cfg)
+    xin = x @ p["up_x"].astype(x.dtype)
+    z = x @ p["up_z"].astype(x.dtype)
+    q = (xin @ p["w_q"].astype(x.dtype)).reshape(B, H, hd)
+    k = (xin @ p["w_k"].astype(x.dtype)).reshape(B, H, hd)
+    v = (xin @ p["w_v"].astype(x.dtype)).reshape(B, H, hd)
+    gates = (xin @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)[:, 0] \
+        + p["gate_bias"].astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :H])
+    f_g = jax.nn.sigmoid(gates[..., H:])
+    vn = jnp.concatenate([v, jnp.ones((B, H, 1), v.dtype)], -1)
+    kv = jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                    vn.astype(jnp.float32))
+    state = state * f_g[:, :, None, None] + kv * i_g[:, :, None, None]
+    y = jnp.einsum("bhd,bhde->bhe", (q / np.sqrt(hd)).astype(jnp.float32),
+                   state)
+    num, den = y[..., :-1], y[..., -1:]
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)).astype(x.dtype)
+    y = y.reshape(B, 1, d_in)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["down"].astype(x.dtype), state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_in, H, hd = mlstm_dims(cfg)
+    return jnp.zeros((batch, H, hd, hd + 1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(kg, cfg: ModelConfig, dtype):
+    M = cfg.d_model
+    H = cfg.n_heads
+    hd = M // H
+    return {
+        "w_x": dense_init(kg(), (M, 4 * M), dtype),
+        "r": dense_init(kg(), (H, hd, 4 * hd), dtype, scale=1.0 / np.sqrt(hd)),
+        "b": jnp.zeros((4 * M,), dtype),
+        "norm_w": jnp.ones((M,), dtype),
+        "out": dense_init(kg(), (M, M), dtype),
+    }
+
+
+def _slstm_cell(p, xt, state, cfg: ModelConfig):
+    """One timestep.  xt (B, 4M) precomputed x @ w_x + b.  state: dict of
+    (B, M) fp32 arrays h, c, n, m."""
+    M = cfg.d_model
+    H = cfg.n_heads
+    hd = M // H
+    B = xt.shape[0]
+    hr = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hr.astype(xt.dtype),
+                     p["r"].astype(xt.dtype)).reshape(B, 4 * M)
+    pre = (xt + rec).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    # exponential gating with stabilizer (xLSTM eq. 15-17)
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * jnp.tanh(zt)
+    n = f_p * state["n"] + i_p
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  initial_state=None, policy=NULL_POLICY):
+    B, S, M = x.shape
+    xw = x @ p["w_x"].astype(x.dtype) + p["b"].astype(x.dtype)
+    st = initial_state if initial_state is not None \
+        else init_slstm_state(cfg, B)
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, cfg)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, st, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    return y @ p["out"].astype(x.dtype), final
+
+
+def slstm_decode_step(p: dict, x: jnp.ndarray, state: dict, cfg: ModelConfig,
+                      policy=NULL_POLICY):
+    xw = (x @ p["w_x"].astype(x.dtype) + p["b"].astype(x.dtype))[:, 0]
+    new = _slstm_cell(p, xw, state, cfg)
+    y = rmsnorm(new["h"].astype(x.dtype)[:, None, :], p["norm_w"],
+                cfg.norm_eps)
+    return y @ p["out"].astype(x.dtype), new
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    M = cfg.d_model
+    z = lambda: jnp.zeros((batch, M), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": z()}

@@ -1,0 +1,95 @@
+"""Switch-style top-1 MoE with capacity-bounded scatter dispatch + optional
+shared expert (llama4 family).
+
+Dispatch strategy (DESIGN.md §4): groups = batch elements.  Each batch row
+scatters its tokens into (E, C) slots (C = S/E * capacity_factor); the
+dispatched tensor (B, E, C, M) carries a sharding hint P(data, model, ...) so
+GSPMD materializes the expert-parallel all-to-all; expert FFNs run as stacked
+einsums over the expert axis; tokens gather back and the inverse all-to-all
+emerges.  Over-capacity tokens are dropped (their residual passes through),
+standard Switch semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, NULL_POLICY
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(np.ceil(seq / cfg.n_experts * cfg.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)      # pad to lane-friendly size
+
+
+def init_moe_params(kg, cfg: ModelConfig, dtype):
+    from .common import dense_init
+    M, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(kg(), (M, E), dtype),
+        "w_gate": dense_init(kg(), (E, M, F), dtype),
+        "w_up": dense_init(kg(), (E, M, F), dtype),
+        "w_down": dense_init(kg(), (E, F, M), dtype, scale=1.0 / np.sqrt(F)),
+    }
+    if cfg.n_shared_experts:
+        p["shared_gate"] = dense_init(kg(), (M, F * cfg.n_shared_experts), dtype)
+        p["shared_up"] = dense_init(kg(), (M, F * cfg.n_shared_experts), dtype)
+        p["shared_down"] = dense_init(kg(), (F * cfg.n_shared_experts, M), dtype,
+                                      scale=1.0 / np.sqrt(F))
+    return p
+
+
+def moe_layer(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+              policy=NULL_POLICY):
+    """x (B, S, M) -> (out (B, S, M), aux_loss scalar)."""
+    B, S, M = x.shape
+    E = cfg.n_experts
+    C = moe_capacity(cfg, S)
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, e_idx = jnp.max(probs, -1), jnp.argmax(probs, -1)         # (B,S)
+
+    # ---- load-balancing aux loss (Switch eq. 4-6) --------------------------
+    onehot = jax.nn.one_hot(e_idx, E, dtype=jnp.float32)            # (B,S,E)
+    density = onehot.mean(axis=1)                                   # (B,E)
+    density_proxy = probs.mean(axis=1)
+    aux = (density * density_proxy).sum(-1).mean() * E * cfg.router_aux_coef
+
+    # ---- capacity assignment: position within expert, per batch row --------
+    pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1.0  # (B,S)
+    pos_in_e = pos_in_e.astype(jnp.int32)
+    keep = pos_in_e < C                                             # (B,S)
+    slot = e_idx * C + jnp.where(keep, pos_in_e, 0)                 # (B,S)
+
+    # ---- scatter dispatch: (B, S, M) -> (B, E*C, M) -------------------------
+    def scatter_row(slots, val, kp):
+        buf = jnp.zeros((E * C, M), x.dtype)
+        return buf.at[slots].add(val * kp[:, None].astype(x.dtype))
+
+    dispatched = jax.vmap(scatter_row)(slot, x, keep)               # (B,E*C,M)
+    dispatched = dispatched.reshape(B, E, C, M)
+    dispatched = policy.act(dispatched, "moe_dispatch")             # all-to-all
+
+    # ---- expert FFNs (E sharded over 'model') -------------------------------
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becm,emf->becf", dispatched, wg)) \
+        * jnp.einsum("becm,emf->becf", dispatched, wu)
+    h = policy.act(h, "moe_hidden")
+    eout = jnp.einsum("becf,efm->becm", h, wd)                      # (B,E,C,M)
+    eout = policy.act(eout, "moe_combine")                          # a2a back
+
+    # ---- gather combine ------------------------------------------------------
+    flat = eout.reshape(B, E * C, M)
+    out = jax.vmap(lambda f, s: f[s])(flat, slot)                   # (B,S,M)
+    out = out * (gate * keep.astype(gate.dtype))[..., None].astype(x.dtype)
+
+    # ---- shared expert (always-on dense path) --------------------------------
+    if cfg.n_shared_experts:
+        sh = jax.nn.silu(x @ p["shared_gate"].astype(x.dtype)) \
+            * (x @ p["shared_up"].astype(x.dtype))
+        out = out + sh @ p["shared_down"].astype(x.dtype)
+    return out, aux

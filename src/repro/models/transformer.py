@@ -1,0 +1,339 @@
+"""Attention-based model families: dense / moe / vlm / audio.
+
+One parameterized decoder-only stack covers:
+  dense  — mistral-nemo, chatglm3, minicpm, qwen3 (GQA, partial RoPE, qk-norm,
+           scaled residuals)
+  moe    — llama4-scout (all-MoE), llama4-maverick (alternating dense/MoE),
+           shared expert + top-1 routed experts
+  vlm    — llava-next: precomputed vision patch embeddings (frontend stub)
+           are prepended to the token sequence
+  audio  — musicgen: K codebooks summed at the input, K output heads
+
+Layers execute under lax.scan with stacked parameters (homogeneous stacks; MoE
+interleaving scans over superblocks of ``moe_every`` layers).  Attention is
+the blocked online-softmax implementation in layers.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (ModelConfig, KeyGen, dense_init, embed_init,
+                     stack_layer_params, NULL_POLICY)
+from .layers import (rmsnorm, rope_cos_sin, apply_rope, flash_attention,
+                     decode_attention, swiglu)
+from .moe import init_moe_params, moe_layer
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _init_attn(kg, cfg: ModelConfig, dtype):
+    M, hd = cfg.d_model, cfg.hd
+    p = {
+        "norm": jnp.ones((M,), dtype),
+        "wq": dense_init(kg(), (M, cfg.n_heads * hd), dtype),
+        "wk": dense_init(kg(), (M, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(kg(), (M, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(kg(), (cfg.n_heads * hd, M), dtype,
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_mlp(kg, cfg: ModelConfig, dtype):
+    M, F = cfg.d_model, cfg.d_ff
+    return {
+        "norm": jnp.ones((M,), dtype),
+        "w_gate": dense_init(kg(), (M, F), dtype),
+        "w_up": dense_init(kg(), (M, F), dtype),
+        "w_down": dense_init(kg(), (F, M), dtype, scale=1.0 / np.sqrt(F)),
+    }
+
+
+def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    """MoE sits on the last slot of each ``moe_every`` superblock."""
+    return cfg.n_experts > 0 and (layer_idx % cfg.moe_every == cfg.moe_every - 1)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg = KeyGen(key)
+    dt = cfg.param_dtype
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": embed_init(kg(), (V, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.n_codebooks:          # musicgen: per-codebook embeddings + heads
+        params["embed"] = embed_init(
+            kg(), (cfg.n_codebooks, V, cfg.d_model), dt)
+        params["out_head"] = dense_init(
+            kg(), (cfg.n_codebooks, cfg.d_model, V), dt)
+    elif not cfg.tie_embeddings:
+        params["out_head"] = dense_init(kg(), (cfg.d_model, V), dt)
+
+    n_super = cfg.n_layers // cfg.moe_every if cfg.n_experts else cfg.n_layers
+    per = []
+    for s in range(n_super):
+        block = {}
+        if cfg.n_experts:
+            for j in range(cfg.moe_every):
+                li = s * cfg.moe_every + j
+                block[f"attn{j}"] = _init_attn(kg, cfg, dt)
+                if _is_moe_layer(cfg, li):
+                    block[f"moe{j}"] = init_moe_params(kg, cfg, dt)
+                    block[f"moe{j}_norm"] = jnp.ones((cfg.d_model,), dt)
+                else:
+                    block[f"mlp{j}"] = _init_mlp(kg, cfg, dt)
+        else:
+            block["attn0"] = _init_attn(kg, cfg, dt)
+            block["mlp0"] = _init_mlp(kg, cfg, dt)
+        per.append(block)
+    params["layers"] = stack_layer_params(per)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg: ModelConfig, positions, policy):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (h @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    rot = int(hd * cfg.rotary_pct)
+    cos, sin = rope_cos_sin(positions, rot - rot % 2, cfg.rope_theta)
+    q = apply_rope(q, cos, sin, cfg.rotary_pct)
+    k = apply_rope(k, cos, sin, cfg.rotary_pct)
+    q = policy.act(q, "attn_q")
+    return q, k, v
+
+
+def repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,Hkv,D) -> (B,S,Hq,D): single head axis keeps TP sharding stable
+    through the flash scans (grouped layouts reshard every iteration)."""
+    if groups == 1:
+        return x
+    B, S, Hkv, D = x.shape
+    return jnp.repeat(x, groups, axis=2)
+
+
+def attn_block_train(p, x, cfg: ModelConfig, positions, policy):
+    q, k, v = _qkv(p, x, cfg, positions, policy)
+    kr = policy.act(repeat_kv(k, cfg.q_groups), "attn_q")
+    vr = policy.act(repeat_kv(v, cfg.q_groups), "attn_q")
+    o = flash_attention(q, kr, vr, causal=True, q_block=cfg.q_block,
+                        kv_block=cfg.kv_block,
+                        softcap=cfg.attn_logit_softcap,
+                        scores_bf16=cfg.attn_scores_bf16,
+                        causal_skip=cfg.causal_skip, policy=policy)
+    o = o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype)
+    return x + o * cfg.residual_scale, (k, v)
+
+
+def attn_block_decode(p, x, cfg: ModelConfig, pos, k_cache, v_cache, policy):
+    """x (B,1,M); pos (B,) index of the new token; caches (B,Smax,Hkv,hd)."""
+    q, k, v = _qkv(p, x, cfg, pos[:, None], policy)
+    k_cache = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice_in_dim(c, upd, i, 0)
+    )(k_cache, k[:, 0:1].astype(k_cache.dtype), pos)
+    v_cache = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice_in_dim(c, upd, i, 0)
+    )(v_cache, v[:, 0:1].astype(v_cache.dtype), pos)
+    o = decode_attention(q, k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+                         pos + 1, softcap=cfg.attn_logit_softcap,
+                         policy=policy)
+    o = o.reshape(x.shape[0], 1, -1) @ p["wo"].astype(x.dtype)
+    return x + o * cfg.residual_scale, k_cache, v_cache
+
+
+def mlp_block(p, x, cfg: ModelConfig, policy):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + swiglu(h, p["w_gate"].astype(x.dtype),
+                      p["w_up"].astype(x.dtype),
+                      p["w_down"].astype(x.dtype),
+                      policy=policy) * cfg.residual_scale
+
+
+def ffn_or_moe(block, j, x, cfg: ModelConfig, layer_idx, policy):
+    """Returns (x, aux_loss)."""
+    if f"moe{j}" in block:
+        h = rmsnorm(x, block[f"moe{j}_norm"], cfg.norm_eps)
+        out, aux = moe_layer(block[f"moe{j}"], h, cfg, policy=policy)
+        return x + out * cfg.residual_scale, aux
+    return mlp_block(block[f"mlp{j}"], x, cfg, policy), 0.0
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig, vision_embeds=None):
+    """tokens (B,S) or (B,S,K) -> (B,S',M) with optional vision prefix."""
+    emb = params["embed"]
+    if cfg.n_codebooks:
+        x = sum(jnp.take(emb[k], tokens[..., k], axis=0)
+                for k in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(emb, tokens, axis=0)
+    x = x.astype(cfg.compute_dtype) * cfg.scale_emb
+    if cfg.n_vis_tokens and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_head(params, x, cfg: ModelConfig, policy=NULL_POLICY):
+    """x (B,S,M) -> logits (B,S,V) or (B,S,K,V) fp32."""
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks:
+        w = params["out_head"].astype(h.dtype)          # (K,M,V)
+        logits = jnp.einsum("bsm,kmv->bskv", h, w)
+    elif cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ params["out_head"].astype(h.dtype)
+    logits = policy.act(logits.astype(jnp.float32), "logits")
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+def cast_params(params, cfg: ModelConfig):
+    """fp32 -> compute-dtype cast at the sharded source, so FSDP all-gathers
+    move bf16 instead of fp32 (cfg.cast_params_once; §Perf)."""
+    if not cfg.cast_params_once:
+        return params
+    import jax as _jax
+    return _jax.tree_util.tree_map(
+        lambda p: p.astype(cfg.compute_dtype)
+        if p.ndim >= 2 and p.dtype == jnp.float32 else p, params)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
+                  policy=NULL_POLICY, remat: bool = True):
+    """Returns (hidden (B,S',M), aux_loss).  Head/loss applied by the caller
+    (train/losses.py chunks the vocab projection)."""
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, tokens, cfg, vision_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = policy.act(x, "residual")
+
+    def superblock(carry, block):
+        x, aux = carry
+        for j in range(cfg.moe_every if cfg.n_experts else 1):
+            x, (k, v) = attn_block_train(block[f"attn{j}"], x, cfg,
+                                         positions, policy)
+            x = policy.act(x, "residual")
+            x, a = ffn_or_moe(block, j, x, cfg, None, policy)
+            x = policy.act(x, "residual")
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(superblock) if remat else superblock
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    return x, aux
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig, cache: dict, *,
+                    vision_embeds=None, policy=NULL_POLICY):
+    """Run the prompt, fill the KV cache, return (cache, last-token hidden)."""
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, tokens, cfg, vision_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = policy.act(x, "residual")
+    n_attn = cfg.moe_every if cfg.n_experts else 1
+
+    def superblock(carry, block):
+        x = carry
+        ks, vs = [], []
+        for j in range(n_attn):
+            x, (k, v) = attn_block_train(block[f"attn{j}"], x, cfg,
+                                         positions, policy)
+            x, _ = ffn_or_moe(block, j, x, cfg, None, policy)
+            x = policy.act(x, "residual")
+            ks.append(k)
+            vs.append(v)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (ks, vs) = jax.lax.scan(superblock, x, params["layers"])
+    # ks: (n_super, n_attn, B, S, Hkv, hd) -> (L, B, S, Hkv, hd)
+    L = cfg.n_layers
+    ks = ks.reshape(L, B, S, cfg.n_kv_heads, cfg.hd).astype(cache["k"].dtype)
+    vs = vs.reshape(L, B, S, cfg.n_kv_heads, cfg.hd).astype(cache["v"].dtype)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs, (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return cache, x[:, -1:]
+
+
+def forward_decode(params, tokens, cfg: ModelConfig, cache: dict, *,
+                   vision_embeds=None, policy=NULL_POLICY):
+    """One decode step.  tokens (B,1)[,K] -> (logits (B,1,V)[,K,V], cache).
+
+    The stacked KV cache rides the layer scan as a CARRY with per-layer
+    dynamic-update-slice, so XLA updates the buffer in place.  (Emitting
+    per-layer caches as scan ys restacks the whole cache every token —
+    ~150x the minimal decode HBM traffic; §Perf qwen3 decode log.)"""
+    params = cast_params(params, cfg)
+    x = embed_tokens(params, tokens, cfg, None)
+    pos = cache["pos"]
+    x = policy.act(x, "residual")
+    n_attn = cfg.moe_every if cfg.n_experts else 1
+
+    def superblock(carry, block):
+        x, kc, vc, li = carry                  # kc/vc: full (L,B,S,Hkv,hd)
+        for j in range(n_attn):
+            k_l = jax.lax.dynamic_index_in_dim(kc, li, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(vc, li, 0, keepdims=False)
+            x, k_new, v_new = attn_block_decode(
+                block[f"attn{j}"], x, cfg, pos, k_l, v_l, policy)
+            kc = jax.lax.dynamic_update_index_in_dim(
+                kc, k_new.astype(kc.dtype), li, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(
+                vc, v_new.astype(vc.dtype), li, 0)
+            x, _ = ffn_or_moe(block, j, x, cfg, None, policy)
+            li = li + 1
+        return (x, kc, vc, li), None
+
+    (x, kc, vc, _), _ = jax.lax.scan(
+        superblock, (x, cache["k"], cache["v"], jnp.int32(0)),
+        params["layers"])
+    cache = dict(cache)
+    cache["k"] = kc
+    cache["v"] = vc
+    cache["pos"] = pos + 1
+    logits = lm_head(params, x, cfg, policy)
+    return logits, cache

@@ -1,0 +1,149 @@
+"""xLSTM stack (arXiv:2405.04517): superblocks of (slstm_period - 1) mLSTM
+blocks followed by 1 sLSTM block — xLSTM[7:1] at 48 layers = 6 superblocks.
+d_ff = 0: there is no separate FFN; the mLSTM up/down projection is the only
+channel mixing (per the assigned config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, KeyGen, embed_init, dense_init, \
+    stack_layer_params, NULL_POLICY
+from .layers import rmsnorm
+from .mlstm import (init_mlstm_params, mlstm_forward, mlstm_decode_step,
+                    init_mlstm_state, init_slstm_params, slstm_forward,
+                    slstm_decode_step, init_slstm_state)
+from .transformer import lm_head
+
+
+def _split(cfg: ModelConfig):
+    per = cfg.slstm_period
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1      # (n_super, mlstm per super)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg = KeyGen(key)
+    dt = cfg.param_dtype
+    n_super, n_ml = _split(cfg)
+    supers = []
+    for s in range(n_super):
+        blk = {
+            "mlstm": stack_layer_params([
+                {"p": init_mlstm_params(kg, cfg, dt),
+                 "norm": jnp.ones((cfg.d_model,), dt)}
+                for _ in range(n_ml)]),
+            "slstm": {"p": init_slstm_params(kg, cfg, dt),
+                      "norm": jnp.ones((cfg.d_model,), dt)},
+        }
+        supers.append(blk)
+    return {
+        "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "out_head": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dt),
+        "supers": stack_layer_params(supers),
+    }
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
+                  policy=NULL_POLICY, remat: bool = True):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = policy.act(x, "residual")
+
+    def super_body(x, blk):
+        def ml_body(x, p):
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, _ = mlstm_forward(p["p"], h, cfg, policy=policy)
+            return policy.act(x + out, "residual"), None
+        ml = jax.checkpoint(ml_body) if remat else ml_body
+        x, _ = jax.lax.scan(ml, x, blk["mlstm"])
+        h = rmsnorm(x, blk["slstm"]["norm"], cfg.norm_eps)
+        out, _ = slstm_forward(blk["slstm"]["p"], h, cfg, policy=policy)
+        return policy.act(x + out, "residual"), None
+
+    x, _ = jax.lax.scan(super_body, x, params["supers"])
+    return x, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    n_super, n_ml = _split(cfg)
+    ml = init_mlstm_state(cfg, batch)
+    sl = init_slstm_state(cfg, batch)
+    tile = lambda a, n: jnp.broadcast_to(a, (n,) + a.shape).copy() \
+        if hasattr(a, "shape") else a
+    return {
+        "mlstm": jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n_super, n_ml) + a.shape, a.dtype), ml),
+        "slstm": jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), sl),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig, cache: dict, *,
+                    vision_embeds=None, policy=NULL_POLICY):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    n_super, n_ml = _split(cfg)
+    ml_states, sl_states = [], []
+    for s in range(n_super):
+        blk = jax.tree_util.tree_map(lambda a: a[s], params["supers"])
+        row = []
+        for i in range(n_ml):
+            p = jax.tree_util.tree_map(lambda a: a[i], blk["mlstm"])
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, st = mlstm_forward(p["p"], h, cfg, policy=policy)
+            x = x + out
+            row.append(st)
+        ml_states.append(jnp.stack(row))
+        h = rmsnorm(x, blk["slstm"]["norm"], cfg.norm_eps)
+        out, st = slstm_forward(blk["slstm"]["p"], h, cfg, policy=policy)
+        x = x + out
+        sl_states.append(st)
+    cache = dict(cache)
+    cache["mlstm"] = jnp.stack(ml_states)
+    cache["slstm"] = stack_layer_params(sl_states)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return cache, x[:, -1:]
+
+
+def forward_decode(params, tokens, cfg: ModelConfig, cache: dict, *,
+                   vision_embeds=None, policy=NULL_POLICY):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    n_super, n_ml = _split(cfg)
+    new_ml, new_sl = [], []
+    for s in range(n_super):
+        blk = jax.tree_util.tree_map(lambda a: a[s], params["supers"])
+        row = []
+        for i in range(n_ml):
+            p = jax.tree_util.tree_map(lambda a: a[i], blk["mlstm"])
+            st = cache["mlstm"][s, i]
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, st = mlstm_decode_step(p["p"], h, st, cfg, policy=policy)
+            x = x + out
+            row.append(st)
+        new_ml.append(jnp.stack(row))
+        sl_st = jax.tree_util.tree_map(lambda a: a[s], cache["slstm"])
+        h = rmsnorm(x, blk["slstm"]["norm"], cfg.norm_eps)
+        out, sl_st = slstm_decode_step(blk["slstm"]["p"], h, sl_st, cfg,
+                                       policy=policy)
+        x = x + out
+        new_sl.append(sl_st)
+    cache = dict(cache)
+    cache["mlstm"] = jnp.stack(new_ml)
+    cache["slstm"] = stack_layer_params(new_sl)
+    cache["pos"] = cache["pos"] + 1
+    logits = lm_head(params, x, cfg, policy)
+    return logits, cache

@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid backbone: Mamba2 layers with a single *shared*
+attention+MLP block applied every ``attn_every`` layers (arXiv:2411.15242).
+
+Simplifications vs the released checkpoints (recorded in DESIGN.md §6): the
+shared block consumes the hidden stream directly (no embedding concat) and is
+re-applied with identical weights (no per-invocation LoRA).  Parameter count
+and dataflow otherwise follow the paper: 38 Mamba2 blocks, shared block every
+6, MHA attention (kv=heads), d_ff 8192 in the shared MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, KeyGen, embed_init, dense_init, \
+    stack_layer_params, NULL_POLICY
+from .layers import rmsnorm
+from .mamba2 import (init_mamba_params, mamba2_forward, mamba2_decode_step,
+                     init_mamba_state, ssm_dims)
+from .transformer import (_init_attn, _init_mlp, attn_block_train,
+                          attn_block_decode, mlp_block, lm_head)
+
+
+def _split(cfg: ModelConfig):
+    groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    return groups, tail
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg = KeyGen(key)
+    dt = cfg.param_dtype
+    groups, tail = _split(cfg)
+    params = {
+        "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "out_head": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dt),
+        "shared_attn": _init_attn(kg, cfg, dt),
+        "shared_mlp": _init_mlp(kg, cfg, dt),
+        "groups": stack_layer_params([
+            stack_layer_params([
+                {"mamba": init_mamba_params(kg, cfg, dt),
+                 "norm": jnp.ones((cfg.d_model,), dt)}
+                for _ in range(cfg.attn_every)])
+            for _ in range(groups)]),
+    }
+    if tail:
+        params["tail"] = stack_layer_params([
+            {"mamba": init_mamba_params(kg, cfg, dt),
+             "norm": jnp.ones((cfg.d_model,), dt)}
+            for _ in range(tail)])
+    return params
+
+
+def _mamba_block(p, x, cfg, state, policy):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if state is None:
+        out, fin = mamba2_forward(p["mamba"], h, cfg, policy=policy)
+    else:
+        out, fin = mamba2_forward(p["mamba"], h, cfg, initial_state=state,
+                                  policy=policy)
+    return x + out, fin
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
+                  policy=NULL_POLICY, remat: bool = True):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = policy.act(x, "residual")
+    groups, tail = _split(cfg)
+
+    def mamba_scan(x, stacked):
+        def body(x, p):
+            x, _ = _mamba_block(p, x, cfg, None, policy)
+            return policy.act(x, "residual"), None
+        body = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body, x, stacked)
+        return x
+
+    def group_body(x, gp):
+        x = mamba_scan(x, gp)
+        x, _ = attn_block_train(params["shared_attn"], x, cfg, positions,
+                                policy)
+        x = mlp_block(params["shared_mlp"], x, cfg, policy)
+        return policy.act(x, "residual"), None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if tail:
+        x = mamba_scan(x, params["tail"])
+    return x, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    groups, tail = _split(cfg)
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    mk = lambda n: {
+        "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((n, batch, H, P, N), jnp.float32),
+    }
+    cache = {
+        "mamba": mk(groups * cfg.attn_every + tail),
+        "k": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    return cache
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig, cache: dict, *,
+                    vision_embeds=None, policy=NULL_POLICY):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    groups, tail = _split(cfg)
+    mamba_states, ks, vs = [], [], []
+
+    def mamba_seq(x, stacked, n):
+        sts = []
+        for i in range(n):                  # unrolled: n <= attn_every (6)
+            p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            x, st = _mamba_block(p, x, cfg, None, policy)
+            sts.append(st)
+        return x, sts
+
+    for g in range(groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+        x, sts = mamba_seq(x, gp, cfg.attn_every)
+        mamba_states += sts
+        x, (k, v) = attn_block_train(params["shared_attn"], x, cfg,
+                                     positions, policy)
+        x = mlp_block(params["shared_mlp"], x, cfg, policy)
+        ks.append(k)
+        vs.append(v)
+    if tail:
+        x, sts = mamba_seq(x, params["tail"], tail)
+        mamba_states += sts
+
+    cache = dict(cache)
+    cache["mamba"] = stack_layer_params(mamba_states)
+    kpad = jnp.stack(ks).astype(cache["k"].dtype)
+    vpad = jnp.stack(vs).astype(cache["v"].dtype)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kpad,
+                                              (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vpad,
+                                              (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return cache, x[:, -1:]
+
+
+def forward_decode(params, tokens, cfg: ModelConfig, cache: dict, *,
+                   vision_embeds=None, policy=NULL_POLICY):
+    from .transformer import cast_params
+    params = cast_params(params, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    pos = cache["pos"]
+    groups, tail = _split(cfg)
+    new_m, new_k, new_v = [], [], []
+
+    def mamba_seq(x, stacked, states, offset, n):
+        for i in range(n):
+            p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            st = jax.tree_util.tree_map(lambda a: a[offset + i], states)
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, fin = mamba2_decode_step(p["mamba"], h, st, cfg,
+                                          policy=policy)
+            x = x + out
+            new_m.append(fin)
+        return x
+
+    off = 0
+    for g in range(groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+        x = mamba_seq(x, gp, cache["mamba"], off, cfg.attn_every)
+        off += cfg.attn_every
+        x, k_new, v_new = attn_block_decode(
+            params["shared_attn"], x, cfg, pos, cache["k"][g], cache["v"][g],
+            policy)
+        x = mlp_block(params["shared_mlp"], x, cfg, policy)
+        new_k.append(k_new)
+        new_v.append(v_new)
+    if tail:
+        x = mamba_seq(x, params["tail"], cache["mamba"], off, tail)
+
+    cache = dict(cache)
+    cache["mamba"] = stack_layer_params(new_m)
+    cache["k"] = jnp.stack(new_k)
+    cache["v"] = jnp.stack(new_v)
+    cache["pos"] = pos + 1
+    logits = lm_head(params, x, cfg, policy)
+    return logits, cache

@@ -1,0 +1,35 @@
+"""Learning-rate schedules.  WSD (Warmup-Stable-Decay) is first-class because
+minicpm-2b trains with it (arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup):
+    return jnp.minimum(1.0, (step + 1) / max(1, warmup))
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.1):
+    """Warmup -> constant plateau -> exponential-ish decay to floor."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = linear_warmup(step, warmup)
+        in_decay = jnp.clip((step - warmup - stable) / max(1, decay), 0.0, 1.0)
+        decay_mult = (1.0 - in_decay) + in_decay * floor_frac
+        return peak_lr * warm * decay_mult
+    return f
+
+
+def cosine(peak_lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = linear_warmup(step, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * warm * (floor_frac + (1 - floor_frac) * cos)
+    return f
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

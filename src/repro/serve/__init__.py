@@ -1,0 +1,7 @@
+from .prefix_cache import PrefixCache, PayloadPool, block_hashes, \
+    PrefixCacheStats
+from .engine import ServeEngine, Request
+from .extend import extend
+
+__all__ = ["PrefixCache", "PayloadPool", "block_hashes", "PrefixCacheStats",
+           "ServeEngine", "Request", "extend"]

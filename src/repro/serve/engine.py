@@ -1,0 +1,301 @@
+"""Continuous-batching serving engine with TinyLFU-guarded prefix caching.
+
+Architecture (host control plane, device data plane — the standard TPU
+serving split):
+
+  * per-request prefill at block granularity: block hashes -> PrefixCache
+    lookup -> payload slots gathered from the PayloadPool into the request's
+    batch slot -> ``extend`` runs only the uncached suffix;
+  * batched decode over all active slots (one serve_step per tick);
+  * attention families offer each completed KV block to the prefix cache;
+    SSM families capture state snapshots at snapshot boundaries during
+    prefill — TinyLFU admission decides which blocks are worth the HBM
+    (paper Fig 1), with W-TinyLFU's window absorbing bursty one-off prefixes
+    (paper §4);
+  * greedy sampling for determinism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from .extend import extend
+from .prefix_cache import PrefixCache, PayloadPool, block_hashes
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out_tokens: list = field(default_factory=list)
+    slot: int = -1
+    prefix_blocks_reused: int = 0
+    done: bool = False
+
+
+def _is_attn_family(cfg) -> bool:
+    return cfg.family in ("dense", "moe", "vlm", "audio")
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256, block_size: int = 16,
+                 pool_slots: int = 64, prefix_policy: str = "wtinylfu",
+                 sample_factor: int = 8, device_sketch: bool = False,
+                 snapshot_every: int = 2, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_size = block_size
+        self.snapshot_every = snapshot_every          # blocks per snapshot
+        self.cache = model.init_cache(max_batch, max_len)
+        self.prefix_cache = PrefixCache(pool_slots, policy=prefix_policy,
+                                        sample_factor=sample_factor,
+                                        device_sketch=device_sketch,
+                                        seed=seed)
+        self.pool = PayloadPool(self._payload_template(), pool_slots)
+        self.free_slots = list(range(max_batch))
+        self.active: dict[int, Request] = {}
+        self.queue: list[Request] = []
+        self._next_rid = 0
+        self._decode_fn = jax.jit(lambda p, t, c: model.decode(p, t, c))
+        self.tokens_prefilled = 0
+        self.tokens_reused = 0
+
+    # ------------------------------------------------------------------ payload
+    def _payload_template(self):
+        cfg = self.cfg
+        if _is_attn_family(cfg):
+            shp = (cfg.n_layers, self.block_size, cfg.n_kv_heads, cfg.hd)
+            return {"k": jnp.zeros(shp, jnp.bfloat16),
+                    "v": jnp.zeros(shp, jnp.bfloat16)}
+        one = self.model.init_cache(1, self.max_len)
+        return self._state_snapshot_of(one, 0)
+
+    def _state_snapshot_of(self, cache, b: int):
+        """State snapshot payload for batch slot b (SSM families)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid_ssm":
+            return {
+                "mamba": jax.tree_util.tree_map(lambda a: a[:, b],
+                                                cache["mamba"]),
+                "k": cache["k"][:, b], "v": cache["v"][:, b],
+            }
+        if cfg.family == "xlstm":
+            return {
+                "mlstm": cache["mlstm"][:, :, b],
+                "slstm": jax.tree_util.tree_map(lambda a: a[:, b],
+                                                cache["slstm"]),
+            }
+        raise ValueError(cfg.family)
+
+    def _restore_snapshot(self, b: int, state) -> None:
+        cfg = self.cfg
+        c = self.cache
+        if cfg.family == "hybrid_ssm":
+            c["mamba"] = jax.tree_util.tree_map(
+                lambda full, s: full.at[:, b].set(s), c["mamba"],
+                state["mamba"])
+            c["k"] = c["k"].at[:, b].set(state["k"])
+            c["v"] = c["v"].at[:, b].set(state["v"])
+        else:
+            c["mlstm"] = c["mlstm"].at[:, :, b].set(state["mlstm"])
+            c["slstm"] = jax.tree_util.tree_map(
+                lambda full, s: full.at[:, b].set(s), c["slstm"],
+                state["slstm"])
+
+    # ------------------------------------------------------------------ plumbing
+    def _extract(self, b: int):
+        """Batch slot -> batch-1 cache pytree (copy)."""
+        cfg = self.cfg
+        c = self.cache
+        if _is_attn_family(cfg):
+            return {"k": c["k"][:, b:b + 1], "v": c["v"][:, b:b + 1],
+                    "pos": c["pos"][b:b + 1]}
+        if cfg.family == "hybrid_ssm":
+            return {"mamba": jax.tree_util.tree_map(lambda a: a[:, b:b + 1],
+                                                    c["mamba"]),
+                    "k": c["k"][:, b:b + 1], "v": c["v"][:, b:b + 1],
+                    "pos": c["pos"][b:b + 1]}
+        return {"mlstm": c["mlstm"][:, :, b:b + 1],
+                "slstm": jax.tree_util.tree_map(lambda a: a[:, b:b + 1],
+                                                c["slstm"]),
+                "pos": c["pos"][b:b + 1]}
+
+    def _writeback(self, b: int, sub) -> None:
+        cfg = self.cfg
+        c = self.cache
+        if _is_attn_family(cfg) or cfg.family == "hybrid_ssm":
+            c["k"] = c["k"].at[:, b:b + 1].set(sub["k"])
+            c["v"] = c["v"].at[:, b:b + 1].set(sub["v"])
+        if cfg.family == "hybrid_ssm":
+            c["mamba"] = jax.tree_util.tree_map(
+                lambda full, s: full.at[:, b:b + 1].set(s), c["mamba"],
+                sub["mamba"])
+        if cfg.family == "xlstm":
+            c["mlstm"] = c["mlstm"].at[:, :, b:b + 1].set(sub["mlstm"])
+            c["slstm"] = jax.tree_util.tree_map(
+                lambda full, s: full.at[:, b:b + 1].set(s), c["slstm"],
+                sub["slstm"])
+        c["pos"] = c["pos"].at[b].set(sub["pos"][0])
+
+    def _offer(self, h: int, payload) -> None:
+        """Store payload and run the admission pipeline."""
+        slot = self.pool.store(payload)
+        if slot is None:
+            return
+        for freed in self.prefix_cache.insert(h, slot):
+            self.pool.free(freed)
+
+    def _tokens_arr(self, toks_1d: jnp.ndarray) -> jnp.ndarray:
+        if self.cfg.n_codebooks:
+            return jnp.broadcast_to(toks_1d[..., None],
+                                    toks_1d.shape + (self.cfg.n_codebooks,))
+        return toks_1d
+
+    # ------------------------------------------------------------------ prefill
+    def _start(self, req: Request) -> None:
+        cfg = self.cfg
+        b = self.free_slots.pop()
+        req.slot = b
+        self.active[req.rid] = req
+        prompt = req.prompt
+        hashes = block_hashes(prompt, self.block_size)
+        bs = self.block_size
+        snap_blocks = self.snapshot_every
+
+        if _is_attn_family(cfg):
+            slots = self.prefix_cache.lookup(hashes)
+            n_reuse = len(slots)
+            start = n_reuse * bs
+            if n_reuse:
+                payload = self.pool.load_many(slots)   # leaves (n,L,blk,H,D)
+                k = jnp.concatenate(list(payload["k"]), axis=1)  # (L,n*blk,H,D)
+                v = jnp.concatenate(list(payload["v"]), axis=1)
+                self.cache["k"] = self.cache["k"].at[:, b, :start].set(
+                    k.astype(self.cache["k"].dtype))
+                self.cache["v"] = self.cache["v"].at[:, b, :start].set(
+                    v.astype(self.cache["v"].dtype))
+            req.prefix_blocks_reused = n_reuse
+            self.tokens_reused += start
+            suffix = prompt[start:]
+            self.tokens_prefilled += len(suffix)
+            sub = self._extract(b)
+            toks = self._tokens_arr(jnp.asarray(suffix, jnp.int32)[None])
+            sub, last_h = extend(self.model, self.params, toks, sub, start)
+            self._writeback(b, sub)
+        else:
+            # SSM: reuse the deepest cached snapshot
+            n_reuse, snap_slot = self.prefix_cache.lookup_snapshots(
+                hashes, snap_blocks)
+            start = n_reuse * bs
+            if snap_slot is not None:
+                self._restore_snapshot(b, self.pool.load(snap_slot))
+            req.prefix_blocks_reused = n_reuse
+            self.tokens_reused += start
+            self.tokens_prefilled += len(prompt) - start
+            # segmented prefill, capturing snapshots at boundaries
+            seg_tokens = snap_blocks * bs
+            pos = start
+            last_h = None
+            while pos < len(prompt):
+                nxt = min(pos + seg_tokens, len(prompt))
+                sub = self._extract(b)
+                toks = self._tokens_arr(
+                    jnp.asarray(prompt[pos:nxt], jnp.int32)[None])
+                sub, last_h = extend(self.model, self.params, toks, sub, pos)
+                self._writeback(b, sub)
+                pos = nxt
+                n_blocks = pos // bs
+                if pos % seg_tokens == 0 and pos % bs == 0:
+                    h = hashes[n_blocks - 1] if n_blocks - 1 < len(hashes) \
+                        else None
+                    if h is not None and h not in self.prefix_cache:
+                        self._offer(h, self._state_snapshot_of(self.cache, b))
+
+        logits = self.model.lm_head(self.params, last_h)
+        self._emit(req, logits[:, 0])
+
+    # ------------------------------------------------------------------ decode
+    def _emit(self, req: Request, logits_row) -> None:
+        tok = np.asarray(jnp.argmax(logits_row[0], axis=-1))
+        if self.cfg.n_codebooks:
+            req.out_tokens.append([int(t) for t in tok])
+        else:
+            req.out_tokens.append(int(tok))
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+
+    def _decode_tick(self) -> None:
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for req in self.active.values():
+            last = req.out_tokens[-1]
+            toks[req.slot, 0] = last[0] if isinstance(last, list) else last
+        t = self._tokens_arr(jnp.asarray(toks))
+        logits, self.cache = self._decode_fn(self.params, t, self.cache)
+        for req in self.active.values():
+            if not req.done:
+                self._emit(req, logits[req.slot:req.slot + 1, 0])
+
+    # ------------------------------------------------------------------ finish
+    def _finish(self, req: Request) -> None:
+        cfg = self.cfg
+        b = req.slot
+        if _is_attn_family(cfg):
+            hashes = block_hashes(req.prompt, self.block_size)
+            for i, h in enumerate(hashes):
+                if h in self.prefix_cache:
+                    continue
+                s0 = i * self.block_size
+                payload = {
+                    "k": self.cache["k"][:, b, s0:s0 + self.block_size],
+                    "v": self.cache["v"][:, b, s0:s0 + self.block_size],
+                }
+                self._offer(h, payload)
+        self.free_slots.append(b)
+        self.cache["pos"] = self.cache["pos"].at[b].set(0)
+
+    # ------------------------------------------------------------------ driver
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(map(int, prompt)),
+                                  max_new_tokens))
+        return rid
+
+    def run(self) -> dict[int, list]:
+        results = {}
+        while self.queue or self.active:
+            while self.queue and self.free_slots:
+                self._start(self.queue.pop(0))
+            if self.active:
+                self._decode_tick()
+                for rid in [r for r, q in self.active.items() if q.done]:
+                    req = self.active.pop(rid)
+                    self._finish(req)
+                    results[rid] = req.out_tokens
+        return results
+
+    @property
+    def stats(self) -> dict:
+        pc = self.prefix_cache.stats
+        return {
+            "prefix_hit_ratio": pc.hit_ratio,
+            "block_hits": pc.block_hits,
+            "block_misses": pc.block_misses,
+            "admitted": pc.admitted,
+            "rejected": pc.rejected,
+            "tokens_prefilled": self.tokens_prefilled,
+            "tokens_reused": self.tokens_reused,
+            "reuse_frac": self.tokens_reused /
+                max(1, self.tokens_reused + self.tokens_prefilled),
+            "pool_used": self.pool.used,
+        }

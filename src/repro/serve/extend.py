@@ -1,0 +1,169 @@
+"""Continue-prefill ("extend"): run a token segment on top of an existing
+cache — the primitive behind prefix-cache reuse.  A prefix hit restores KV
+blocks (attention families) or a state snapshot (SSM families) and the engine
+extends only the un-cached suffix, saving the corresponding prefill FLOPs.
+
+``start`` is a static python int (the engine works at block granularity, so
+the trace count is bounded by max_len / block_size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, NULL_POLICY
+from repro.models.layers import rmsnorm, flash_attention
+from repro.models import transformer as T
+from repro.models import zamba as Z
+from repro.models import xlstm as X
+from repro.models.mamba2 import mamba2_forward
+from repro.models.mlstm import mlstm_forward, slstm_forward
+
+
+def _attn_extend(p, x, cfg: ModelConfig, start: int, k_cache, v_cache,
+                 policy):
+    """x (B,S,M); caches (B,Smax,Hkv,hd) valid to ``start``.  Returns
+    (x_out, k_cache, v_cache) with the new segment written at [start:]."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(start + jnp.arange(S), (B, S))
+    q, k, v = T._qkv(p, x, cfg, positions, policy)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, start, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, start, 0, 0))
+    kv = T.repeat_kv(k_cache[:, :start + S].astype(x.dtype), cfg.q_groups)
+    vv = T.repeat_kv(v_cache[:, :start + S].astype(x.dtype), cfg.q_groups)
+    o = flash_attention(q, kv, vv, causal=True, q_block=cfg.q_block,
+                        kv_block=cfg.kv_block, q_offset=start,
+                        softcap=cfg.attn_logit_softcap, policy=policy)
+    o = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return x + o * cfg.residual_scale, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# transformer family
+# ---------------------------------------------------------------------------
+
+def transformer_extend(params, tokens, cfg: ModelConfig, cache: dict,
+                       start: int, *, vision_embeds=None,
+                       policy=NULL_POLICY):
+    x = T.embed_tokens(params, tokens, cfg,
+                       vision_embeds if start == 0 else None)
+    B, S, _ = x.shape
+    n_attn = cfg.moe_every if cfg.n_experts else 1
+    n_super = cfg.n_layers // n_attn
+    kc = cache["k"].reshape(n_super, n_attn, *cache["k"].shape[1:])
+    vc = cache["v"].reshape(n_super, n_attn, *cache["v"].shape[1:])
+
+    def superblock(x, inp):
+        block, k_l, v_l = inp
+        nk, nv = [], []
+        for j in range(n_attn):
+            x, k_new, v_new = _attn_extend(block[f"attn{j}"], x, cfg, start,
+                                           k_l[j], v_l[j], policy)
+            x, _ = T.ffn_or_moe(block, j, x, cfg, None, policy)
+            nk.append(k_new)
+            nv.append(v_new)
+        return x, (jnp.stack(nk), jnp.stack(nv))
+
+    x, (nk, nv) = jax.lax.scan(superblock, x, (params["layers"], kc, vc))
+    cache = dict(cache)
+    cache["k"] = nk.reshape(cache["k"].shape)
+    cache["v"] = nv.reshape(cache["v"].shape)
+    cache["pos"] = jnp.full((B,), start + S, jnp.int32)
+    return cache, x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# zamba (hybrid): mamba initial states + shared-attn KV
+# ---------------------------------------------------------------------------
+
+def zamba_extend(params, tokens, cfg: ModelConfig, cache: dict, start: int,
+                 *, vision_embeds=None, policy=NULL_POLICY):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    groups, tail = Z._split(cfg)
+    new_m, new_k, new_v = [], [], []
+
+    def mamba_seq(x, stacked, offset, n):
+        for i in range(n):
+            p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            st = jax.tree_util.tree_map(lambda a: a[offset + i],
+                                        cache["mamba"])
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, fin = mamba2_forward(p["mamba"], h, cfg, initial_state=st,
+                                      policy=policy)
+            x = x + out
+            new_m.append(fin)
+        return x
+
+    off = 0
+    for g in range(groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+        x = mamba_seq(x, gp, off, cfg.attn_every)
+        off += cfg.attn_every
+        x, k_new, v_new = _attn_extend(params["shared_attn"], x, cfg, start,
+                                       cache["k"][g], cache["v"][g], policy)
+        x = Z.mlp_block(params["shared_mlp"], x, cfg, policy)
+        new_k.append(k_new)
+        new_v.append(v_new)
+    if tail:
+        x = mamba_seq(x, params["tail"], off, tail)
+
+    cache = dict(cache)
+    from repro.models.common import stack_layer_params
+    cache["mamba"] = stack_layer_params(new_m)
+    cache["k"] = jnp.stack(new_k)
+    cache["v"] = jnp.stack(new_v)
+    cache["pos"] = jnp.full((B,), start + S, jnp.int32)
+    return cache, x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# xlstm: pure state continuation
+# ---------------------------------------------------------------------------
+
+def xlstm_extend(params, tokens, cfg: ModelConfig, cache: dict, start: int,
+                 *, vision_embeds=None, policy=NULL_POLICY):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    n_super, n_ml = X._split(cfg)
+    new_ml, new_sl = [], []
+    for s in range(n_super):
+        blk = jax.tree_util.tree_map(lambda a: a[s], params["supers"])
+        row = []
+        for i in range(n_ml):
+            p = jax.tree_util.tree_map(lambda a: a[i], blk["mlstm"])
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            out, st = mlstm_forward(p["p"], h, cfg,
+                                    initial_state=cache["mlstm"][s, i],
+                                    policy=policy)
+            x = x + out
+            row.append(st)
+        new_ml.append(jnp.stack(row))
+        sl_st = jax.tree_util.tree_map(lambda a: a[s], cache["slstm"])
+        h = rmsnorm(x, blk["slstm"]["norm"], cfg.norm_eps)
+        out, sl_st = slstm_forward(blk["slstm"]["p"], h, cfg,
+                                   initial_state=sl_st, policy=policy)
+        x = x + out
+        new_sl.append(sl_st)
+    from repro.models.common import stack_layer_params
+    cache = dict(cache)
+    cache["mlstm"] = jnp.stack(new_ml)
+    cache["slstm"] = stack_layer_params(new_sl)
+    cache["pos"] = cache["pos"] * 0 + (start + S)
+    return cache, x[:, -1:]
+
+
+def extend(model, params, tokens, cache, start: int, *, vision_embeds=None,
+           policy=NULL_POLICY):
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return transformer_extend(params, tokens, cfg, cache, start,
+                                  vision_embeds=vision_embeds, policy=policy)
+    if cfg.family == "hybrid_ssm":
+        return zamba_extend(params, tokens, cfg, cache, start,
+                            policy=policy)
+    if cfg.family == "xlstm":
+        return xlstm_extend(params, tokens, cfg, cache, start, policy=policy)
+    raise ValueError(cfg.family)

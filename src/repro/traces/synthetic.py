@@ -1,0 +1,209 @@
+"""Synthetic trace generators matching the structural families of the paper's
+workloads (§5.1).  The container is offline, so the real traces (Wikipedia,
+UMass F1/F2/WS*, ARC's DS1/S3/P8/P12/OLTP/SPC1, LIRS' Glimpse) are modeled by
+generators parameterized from the published descriptions:
+
+* **zipf**        — static Zipf(α) over n items (paper's synthetic workloads).
+* **youtube**     — weekly re-drawn Zipf-like popularity with item churn [12].
+* **wiki-drift**  — Zipf with slowly wandering rank permutation [55].
+* **spc1-like**   — long ascending sequential scans + random zipf hot set [44].
+* **oltp-like**   — ascending log-append stream (mostly once-accessed) mixed
+                    with zipf random page reads; "sparse bursts" [44]/§4.
+* **glimpse**     — large loop (> cache) + random accesses [36].
+* **multi-tenant prompts** — our serving workload: prefix-block access stream
+  from T tenants with zipf tenant popularity and per-tenant shared prefixes.
+
+All generators are deterministic given ``seed`` and return int64 key arrays.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+def zipf_probs(n_items: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, n_items + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    return w / w.sum()
+
+
+def _sample_from_probs(probs: np.ndarray, length: int,
+                       rng: np.random.Generator) -> np.ndarray:
+    cdf = np.cumsum(probs)
+    cdf[-1] = 1.0
+    u = rng.random(length)
+    return np.searchsorted(cdf, u, side="right").astype(np.int64)
+
+
+def zipf_trace(length: int, n_items: int = 1_000_000, alpha: float = 0.9,
+               seed: int = 0) -> np.ndarray:
+    """Static Zipf trace; ranks are shuffled into arbitrary key ids so rank
+    order is not correlated with key order."""
+    rng = _rng(seed)
+    ranks = _sample_from_probs(zipf_probs(n_items, alpha), length, rng)
+    perm = rng.permutation(n_items).astype(np.int64)
+    return perm[ranks]
+
+
+# ---------------------------------------------------------------------------
+def youtube_dynamic_trace(length: int, weeks: int = 21,
+                          items_per_week: int = 8000, alpha: float = 0.9,
+                          churn: float = 0.4, seed: int = 0) -> np.ndarray:
+    """Weekly popularity snapshots (paper §5.2 [12]): every week, a fraction
+    ``churn`` of the active set is replaced by brand-new videos and ranks are
+    re-drawn; accesses within a week are i.i.d. from that week's Zipf."""
+    rng = _rng(seed)
+    per_week = length // weeks
+    probs = zipf_probs(items_per_week, alpha)
+    active = np.arange(items_per_week, dtype=np.int64)
+    next_id = items_per_week
+    out = np.empty(weeks * per_week, dtype=np.int64)
+    for w in range(weeks):
+        if w > 0:
+            n_new = int(items_per_week * churn)
+            repl = rng.choice(items_per_week, size=n_new, replace=False)
+            active = active.copy()
+            active[repl] = np.arange(next_id, next_id + n_new)
+            next_id += n_new
+            rng.shuffle(active)          # fresh rank assignment each week
+        idx = _sample_from_probs(probs, per_week, rng)
+        out[w * per_week:(w + 1) * per_week] = active[idx]
+    return out
+
+
+# ---------------------------------------------------------------------------
+def wiki_drift_trace(length: int, n_items: int = 400_000, alpha: float = 0.9,
+                     drift_every: int = 20_000, drift_frac: float = 0.02,
+                     seed: int = 0) -> np.ndarray:
+    """Gradually changing Zipf (paper's Wikipedia trace behaviour): every
+    ``drift_every`` accesses, ``drift_frac`` of items swap ranks."""
+    rng = _rng(seed)
+    probs = zipf_probs(n_items, alpha)
+    perm = rng.permutation(n_items).astype(np.int64)
+    out = np.empty(length, dtype=np.int64)
+    pos = 0
+    n_swap = max(2, int(n_items * drift_frac))
+    while pos < length:
+        chunk = min(drift_every, length - pos)
+        idx = _sample_from_probs(probs, chunk, rng)
+        out[pos:pos + chunk] = perm[idx]
+        pos += chunk
+        a = rng.choice(n_items, size=n_swap, replace=False)
+        b = rng.choice(n_items, size=n_swap, replace=False)
+        perm[a], perm[b] = perm[b].copy(), perm[a].copy()
+    return out
+
+
+# ---------------------------------------------------------------------------
+def spc1_like_trace(length: int, n_random: int = 200_000, alpha: float = 1.0,
+                    scan_frac: float = 0.55, mean_scan: int = 400,
+                    scan_space: int = 4_000_000, seed: int = 0) -> np.ndarray:
+    """SPC1-like [44]: interleave long ascending sequential scans over a huge
+    address space (cache-polluting, never re-used) with zipf random I/O over a
+    hot region.  Scan keys are offset above the random region."""
+    rng = _rng(seed)
+    probs = zipf_probs(n_random, alpha)
+    out = np.empty(length, dtype=np.int64)
+    pos = 0
+    scan_ptr = 0
+    while pos < length:
+        if rng.random() < scan_frac:
+            slen = min(int(rng.exponential(mean_scan)) + 16, length - pos)
+            start = scan_ptr
+            scan_ptr = (scan_ptr + slen) % scan_space
+            seq = (np.arange(start, start + slen) % scan_space) + n_random
+            out[pos:pos + slen] = seq
+            pos += slen
+        else:
+            rlen = min(int(rng.exponential(mean_scan * 0.6)) + 8, length - pos)
+            out[pos:pos + rlen] = _sample_from_probs(probs, rlen, rng)
+            pos += rlen
+    return out
+
+
+# ---------------------------------------------------------------------------
+def oltp_like_trace(length: int, n_pages: int = 100_000, alpha: float = 0.8,
+                    log_frac: float = 0.6, burst: int = 4,
+                    seed: int = 0) -> np.ndarray:
+    """OLTP-like [44] (§5.1): "ascending lists of sequential block accesses
+    sprinkled with a few random accesses" — a transaction log appends to
+    ever-increasing block ids (each touched a handful of times in a short
+    burst, then never again = the paper's 'sparse bursts'), plus zipf reads
+    over the database pages."""
+    rng = _rng(seed)
+    probs = zipf_probs(n_pages, alpha)
+    out = np.empty(length, dtype=np.int64)
+    pos = 0
+    log_ptr = 0
+    while pos < length:
+        if rng.random() < log_frac:
+            # short ascending burst re-touching the current tail of the log
+            blen = min(int(rng.integers(2, burst * 2)), length - pos)
+            base = log_ptr
+            log_ptr += max(1, blen // burst)
+            seq = base + (np.arange(blen) % burst)
+            out[pos:pos + blen] = seq + n_pages
+            pos += blen
+        else:
+            rlen = min(int(rng.integers(1, 8)), length - pos)
+            out[pos:pos + rlen] = _sample_from_probs(probs, rlen, rng)
+            pos += rlen
+    return out
+
+
+# ---------------------------------------------------------------------------
+def glimpse_trace(length: int, loop_items: int = 5000, n_random: int = 50_000,
+                  alpha: float = 0.9, loop_frac: float = 0.65,
+                  seed: int = 0) -> np.ndarray:
+    """Glimpse [36]: an underlying loop over more items than the cache holds
+    (LRU's pathological case) mixed with other accesses."""
+    rng = _rng(seed)
+    probs = zipf_probs(n_random, alpha)
+    out = np.empty(length, dtype=np.int64)
+    pos = 0
+    lp = 0
+    while pos < length:
+        if rng.random() < loop_frac:
+            slen = min(int(rng.integers(200, 2000)), length - pos)
+            seq = (lp + np.arange(slen)) % loop_items
+            lp = (lp + slen) % loop_items
+            out[pos:pos + slen] = seq + n_random
+            pos += slen
+        else:
+            rlen = min(int(rng.integers(50, 500)), length - pos)
+            out[pos:pos + rlen] = _sample_from_probs(probs, rlen, rng)
+            pos += rlen
+    return out
+
+
+# ---------------------------------------------------------------------------
+def multi_tenant_prompt_trace(n_requests: int, n_tenants: int = 200,
+                              tenant_alpha: float = 1.0,
+                              prefix_blocks_mean: int = 24,
+                              suffix_blocks_mean: int = 6,
+                              block_reuse_alpha: float = 0.8,
+                              seed: int = 0) -> np.ndarray:
+    """Serving workload: each request touches its tenant's shared prefix
+    blocks (ids stable per tenant) then some per-request suffix blocks (mostly
+    unique, occasionally re-used within the tenant).  Emits the block-id
+    access stream seen by the prefix cache."""
+    rng = _rng(seed)
+    tprobs = zipf_probs(n_tenants, tenant_alpha)
+    tenant_prefix_len = rng.poisson(prefix_blocks_mean, n_tenants) + 4
+    # globally unique block id ranges per tenant
+    prefix_base = np.concatenate([[0], np.cumsum(tenant_prefix_len)])[:-1]
+    suffix_base = int(prefix_base[-1] + tenant_prefix_len[-1])
+    next_suffix = suffix_base
+    chunks = []
+    tenants = _sample_from_probs(tprobs, n_requests, rng)
+    for t in tenants:
+        plen = tenant_prefix_len[t]
+        chunks.append(prefix_base[t] + np.arange(plen))
+        slen = rng.poisson(suffix_blocks_mean) + 1
+        chunks.append(np.arange(next_suffix, next_suffix + slen))
+        next_suffix += slen
+    return np.concatenate(chunks).astype(np.int64)

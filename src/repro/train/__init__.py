@@ -1,0 +1,6 @@
+from .losses import chunked_cross_entropy
+from .train_step import TrainState, make_train_state, build_train_step, \
+    build_loss_fn
+
+__all__ = ["chunked_cross_entropy", "TrainState", "make_train_state",
+           "build_train_step", "build_loss_fn"]

@@ -1,0 +1,87 @@
+"""Chunked cross-entropy: the vocab projection + softmax run per sequence
+chunk under jax.checkpoint, so the full (B, S, V) fp32 logits tensor never
+materializes (llama4's 202k vocab x 1M tokens would be ~800 GB fp32).
+
+Handles all model families: plain LM head, tied embeddings, multi-codebook
+audio heads, and the vlm vision-prefix offset (no loss on image positions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, NULL_POLICY
+from repro.models.layers import rmsnorm
+
+
+def _head_weights(params, cfg: ModelConfig):
+    if cfg.n_codebooks:
+        return params["out_head"]                    # (K, M, V)
+    if cfg.tie_embeddings:
+        return params["embed"].T                     # (M, V)
+    return params["out_head"]
+
+
+def _chunk_logits(h, w, cfg: ModelConfig, policy):
+    """h (B, c, M) -> fp32 logits (B, c, V) or (B, c, K, V), vocab-sharded."""
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bcm,kmv->bckv", h, w.astype(h.dtype))
+    else:
+        logits = h @ w.astype(h.dtype)
+    logits = policy.act(logits.astype(jnp.float32), "logits")
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask storage-padding columns so softmax is over the true vocab
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def chunked_cross_entropy(params, hidden, tokens, cfg: ModelConfig, *,
+                          chunk: int = 256, policy=NULL_POLICY):
+    """hidden (B, S', M) raw (pre-final-norm applied here); tokens (B, S)[,K].
+    Returns (mean_nll, metrics).  Next-token loss: position t predicts token
+    t+1; vlm vision prefix positions are excluded."""
+    B = hidden.shape[0]
+    off = cfg.n_vis_tokens if cfg.family == "vlm" else 0
+    # positions off..off+S-2 predict tokens 1..S-1
+    h = hidden[:, off:hidden.shape[1] - 1]
+    labels = tokens[:, 1:]
+    T = h.shape[1]
+    w = _head_weights(params, cfg)
+
+    pad = (-T) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        lab_pad = [(0, 0), (0, pad)] + ([(0, 0)] if cfg.n_codebooks else [])
+        labels = jnp.pad(labels, lab_pad)
+    mask = (jnp.arange(h.shape[1]) < T).astype(jnp.float32)[None, :]  # (1,Tp)
+    nchunk = h.shape[1] // chunk
+
+    hc = h.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3)
+    if cfg.n_codebooks:
+        lc = labels.reshape(B, nchunk, chunk, cfg.n_codebooks).transpose(1, 0, 2, 3)
+    else:
+        lc = labels.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(1, nchunk, chunk).transpose(1, 0, 2)    # (nchunk,1,chunk)
+
+    @jax.checkpoint
+    def one_chunk(carry, xs):
+        loss_sum, count = carry
+        h_c, l_c, m_c = xs
+        h_c = rmsnorm(h_c, params["final_norm"], cfg.norm_eps)
+        logits = _chunk_logits(h_c, w, cfg, policy)         # fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = lse - true                                    # (B,c)[,K]
+        if cfg.n_codebooks:
+            nll = nll.mean(-1)
+        mm = jnp.broadcast_to(m_c, nll.shape)
+        return (loss_sum + (nll * mm).sum(), count + mm.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(one_chunk, (jnp.float32(0.0),
+                                                    jnp.float32(0.0)),
+                                        (hc, lc, mc))
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"nll": loss, "tokens": count}

@@ -1,0 +1,92 @@
+"""Train-step builder: loss = chunked xent + MoE aux, microbatch gradient
+accumulation (lax.scan), optimizer apply.  Family-agnostic via models.api.
+
+The returned ``step(state, batch)`` is a pure function ready for jax.jit with
+in/out shardings (launch/dryrun.py, launch/train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.common import NULL_POLICY
+from repro.optim.optimizers import Optimizer
+from .losses import chunked_cross_entropy
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def make_train_state(model: Model, optimizer: Optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def build_loss_fn(model: Model, policy=NULL_POLICY, remat: bool = True,
+                  loss_chunk: int = 256):
+    def loss_fn(params, batch):
+        hidden, aux = model.hidden_train(params, batch, policy=policy,
+                                         remat=remat)
+        nll, metrics = chunked_cross_entropy(params, hidden, batch["tokens"],
+                                             model.cfg, chunk=loss_chunk,
+                                             policy=policy)
+        metrics["aux_loss"] = aux
+        return nll + aux, metrics
+    return loss_fn
+
+
+def build_train_step(model: Model, optimizer: Optimizer, *,
+                     policy=NULL_POLICY, microbatches: int = 1,
+                     remat: bool = True, loss_chunk: int = 256,
+                     donate: bool = True) -> Callable:
+    loss_fn = build_loss_fn(model, policy, remat, loss_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def accum(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(state.params, mbatch)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, jnp.float32(0.0)),
+                                           mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        new_params, new_opt, opt_metrics = optimizer.apply(
+            state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,168 @@
+"""Unit + property tests for the TinyLFU frequency sketch (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import (FrequencySketch, SketchConfig, ExactHistogram,
+                               default_sketch)
+
+
+def make_sketch(sample=1 << 20, counters=4096, rows=4, cap=1 << 30,
+                dk_bits=0, conservative=True, seed=0):
+    return FrequencySketch(SketchConfig(
+        sample_size=sample, counters=counters, rows=rows, cap=cap,
+        doorkeeper_bits=dk_bits, conservative=conservative, seed=seed))
+
+
+class TestSketchBasics:
+    def test_empty_estimates_zero(self):
+        s = make_sketch()
+        assert s.estimate(42) == 0
+
+    def test_single_add(self):
+        s = make_sketch()
+        s.add(42)
+        assert s.estimate(42) >= 1
+
+    def test_monotone_in_adds(self):
+        s = make_sketch()
+        prev = 0
+        for _ in range(10):
+            s.add(7)
+            est = s.estimate(7)
+            assert est >= prev
+            prev = est
+        assert s.estimate(7) == 10  # no collisions possible w/ single key
+
+    def test_cap_saturates(self):
+        s = make_sketch(cap=7)
+        for _ in range(100):
+            s.add(3)
+        assert s.estimate(3) == 7
+
+    def test_reset_halves(self):
+        s = make_sketch()
+        for _ in range(9):
+            s.add(5)
+        s.reset()
+        assert s.estimate(5) == 4      # 9 // 2
+        assert s.resets == 1
+
+    def test_reset_triggers_at_sample_size(self):
+        s = make_sketch(sample=10)
+        for i in range(10):
+            s.add(i % 3)
+        assert s.resets == 1
+        assert s.size == 5             # halved sample counter
+
+    def test_cbf_layout(self):
+        # rows=1 with k probes into a single table = paper's CBF prototype
+        s = FrequencySketch(SketchConfig(sample_size=1 << 20, counters=4096,
+                                         rows=1, probes_per_row=4,
+                                         cap=1 << 30))
+        for _ in range(5):
+            s.add(99)
+        assert s.estimate(99) == 5
+
+
+class TestOverestimateProperty:
+    """CM/CBF sketches never undercount (without reset/cap/doorkeeper)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=200), min_size=1,
+                    max_size=500))
+    def test_estimate_geq_true(self, keys):
+        s = make_sketch(counters=1024)
+        true = {}
+        for k in keys:
+            s.add(k)
+            true[k] = true.get(k, 0) + 1
+        for k, c in true.items():
+            assert s.estimate(k) >= c
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=100), min_size=50,
+                    max_size=500), st.integers(min_value=0, max_value=3))
+    def test_conservative_leq_plain(self, keys, seed):
+        """Minimal increment estimates <= plain CBF estimates, pointwise."""
+        cu = make_sketch(counters=256, conservative=True, seed=seed)
+        pl = make_sketch(counters=256, conservative=False, seed=seed)
+        for k in keys:
+            cu.add(k)
+            pl.add(k)
+        for k in set(keys):
+            assert cu._table_estimate(k) <= pl._table_estimate(k)
+
+
+class TestDoorkeeper:
+    def test_first_timer_stays_out_of_main(self):
+        s = make_sketch(dk_bits=1 << 16)
+        s.add(1234)
+        assert s._table_estimate(1234) == 0    # absorbed by doorkeeper
+        assert s.estimate(1234) == 1           # but estimate includes it
+
+    def test_second_timer_reaches_main(self):
+        s = make_sketch(dk_bits=1 << 16)
+        s.add(1234)
+        s.add(1234)
+        assert s._table_estimate(1234) >= 1
+        assert s.estimate(1234) >= 2
+
+    def test_reset_clears_doorkeeper(self):
+        s = make_sketch(sample=4, dk_bits=1 << 16)
+        for i in range(4):
+            s.add(i)           # 4 adds -> reset
+        assert not any(s.dk)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.sets(st.integers(min_value=0, max_value=10_000), min_size=1,
+                   max_size=200))
+    def test_no_false_negatives(self, keys):
+        s = make_sketch(dk_bits=1 << 16)
+        for k in keys:
+            s.add(k)
+        for k in keys:
+            assert s.estimate(k) >= 1
+
+
+class TestExactHistogram:
+    def test_truncation_error_bounded(self):
+        """Integer vs float reset differ by < 1 after any number of resets
+        (paper §3.3.2: worst-case truncation error converges to 1)."""
+        hi = ExactHistogram(sample_size=1 << 30)
+        hf = ExactHistogram(sample_size=1 << 30, integer_division=False)
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 50, size=2000)
+        for i, k in enumerate(map(int, keys)):
+            hi.add(k)
+            hf.add(k)
+            if i % 300 == 299:
+                hi.reset()
+                hf.reset()
+        for k in set(map(int, keys)):
+            assert abs(hi.estimate(k) - hf.estimate(k)) < 1.0 + 1e-9
+
+    def test_convergence_lemma(self):
+        """Lemma 3.2: E(h_i) -> f_i * W regardless of initial error."""
+        W = 1000
+        h = ExactHistogram(sample_size=W, integer_division=False)
+        h.counts[7] = 500.0                 # absurd initial error
+        rng = np.random.default_rng(1)
+        # key 7 has frequency 0.2
+        for _ in range(30 * W):
+            h.add(7 if rng.random() < 0.2 else int(rng.integers(10, 10_000)))
+        assert abs(h.estimate(7) - 0.2 * W) < 0.15 * W
+
+
+def test_default_sketch_sizing():
+    s = default_sketch(1000, sample_factor=8)
+    assert s.cfg.sample_size == 8000
+    assert s.cfg.cap == 7                   # W/C with doorkeeper absorbing 1
+    # ~1.25+ bytes per sample element (paper Fig 22 accuracy knee)
+    assert s.cfg.meta_bits() / s.cfg.sample_size >= 10
+
+
+def test_meta_bits_accounting():
+    cfg = SketchConfig(sample_size=9000, counters=8192, rows=4, cap=7,
+                       doorkeeper_bits=8192)
+    assert cfg.meta_bits() == 8192 * 3 + 8192

@@ -1,0 +1,57 @@
+"""Pallas flash-attention kernel vs the jnp online-softmax oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.models.layers import flash_attention
+
+
+def _rand(shape, key, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) \
+        .astype(dtype)
+
+
+@pytest.mark.parametrize("B,S,H,D,qb,kb", [
+    (2, 256, 4, 64, 64, 64),
+    (1, 512, 2, 128, 128, 64),
+    (2, 128, 8, 32, 32, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_reference(B, S, H, D, qb, kb, causal):
+    q = _rand((B, S, H, D), 0)
+    k = _rand((B, S, H, D), 1)
+    v = _rand((B, S, H, D), 2)
+    got = flash_attention_tpu(q, k, v, causal=causal, q_block=qb,
+                              kv_block=kb, interpret=True)
+    want = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    q = _rand((1, 128, 2, 64), 3, dtype)
+    k = _rand((1, 128, 2, 64), 4, dtype)
+    v = _rand((1, 128, 2, 64), 5, dtype)
+    got = flash_attention_tpu(q, k, v, q_block=64, kv_block=64)
+    want = flash_attention(q, k, v, q_block=64, kv_block=64)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_exact_softmax_vs_naive():
+    """Both implementations vs the unblocked softmax ground truth."""
+    B, S, H, D = 1, 128, 2, 32
+    q, k, v = (_rand((B, S, H, D), i) for i in (6, 7, 8))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    got = flash_attention_tpu(q, k, v, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,158 @@
+"""Behavioural tests for eviction/replacement policies + TinyLFU admission."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Cache, LRUEviction, FIFOEviction, RandomEviction,
+                        LFUEviction, SLRUEviction, ARC, LIRS, TwoQ, WLFU,
+                        PLFU, WTinyLFU, tinylfu_cache, run_trace)
+from repro.traces import zipf_trace
+
+
+class TestLRU:
+    def test_basic_hit_miss(self):
+        c = Cache(LRUEviction(2))
+        assert not c.access(1)
+        assert not c.access(2)
+        assert c.access(1)          # hit
+        assert not c.access(3)      # evicts 2 (LRU)
+        assert not c.access(2)      # 2 was evicted
+        assert c.access(3)
+
+    def test_cyclic_worst_case(self):
+        """LRU gets 0 hits on a loop one larger than the cache."""
+        c = Cache(LRUEviction(3))
+        for _ in range(10):
+            for k in range(4):
+                assert not c.access(k)
+
+    def test_capacity_never_exceeded(self):
+        c = Cache(LRUEviction(5))
+        for k in range(100):
+            c.access(k % 17)
+            assert len(c.ev) <= 5
+
+
+class TestLFU:
+    def test_keeps_frequent(self):
+        c = Cache(LFUEviction(2))
+        for _ in range(5):
+            c.access(1)
+        c.access(2)
+        c.access(3)                 # evicts 2 (freq 1, LRU tie-break)
+        assert c.access(1)
+        assert not c.access(2)
+
+    def test_halve_all_preserves_order(self):
+        ev = LFUEviction(4)
+        for f, k in [(8, 1), (4, 2), (2, 3)]:
+            ev.add(k)
+            for _ in range(f - 1):
+                ev.on_hit(k)
+        ev.halve_all()
+        assert ev.freq == {1: 4, 2: 2, 3: 1}
+        assert ev.peek_victim() == 3
+
+
+class TestSLRU:
+    def test_promotion_and_demotion(self):
+        ev = SLRUEviction(5, protected_frac=0.6)   # prot cap 3
+        for k in [1, 2, 3, 4]:
+            ev.add(k)
+        ev.on_hit(1); ev.on_hit(2); ev.on_hit(3)   # promote 1,2,3
+        assert set(ev.protected) == {1, 2, 3}
+        ev.on_hit(4)                                # promote 4 -> demote 1
+        assert 1 in ev.probation and 4 in ev.protected
+        assert ev.peek_victim() == 1                # probation LRU
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: Cache(LRUEviction(8)),
+    lambda: Cache(FIFOEviction(8)),
+    lambda: Cache(RandomEviction(8)),
+    lambda: Cache(LFUEviction(8)),
+    lambda: Cache(SLRUEviction(8)),
+    lambda: ARC(8),
+    lambda: LIRS(8),
+    lambda: TwoQ(8),
+    lambda: WLFU(8, window=64),
+    lambda: PLFU(8),
+    lambda: WTinyLFU(8),
+    lambda: tinylfu_cache(8, "lru"),
+])
+class TestAllPolicies:
+    def test_repeated_key_hits(self, factory):
+        c = factory()
+        c.access(1)
+        for _ in range(20):
+            assert c.access(1)
+
+    def test_deterministic(self, factory):
+        tr = zipf_trace(3000, n_items=500, alpha=0.8, seed=3)
+        r1 = run_trace(factory(), tr)
+        r2 = run_trace(factory(), tr)
+        assert r1.hit_ratio == r2.hit_ratio
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=50), min_size=1,
+                max_size=400),
+       st.sampled_from(["arc", "lirs", "2q", "wtlfu", "tlru"]))
+def test_resident_bounds_property(keys, which):
+    """No policy ever holds more residents than its capacity."""
+    cap = 8
+    c = {"arc": lambda: ARC(cap), "lirs": lambda: LIRS(cap),
+         "2q": lambda: TwoQ(cap), "wtlfu": lambda: WTinyLFU(cap),
+         "tlru": lambda: tinylfu_cache(cap, "lru")}[which]()
+    for k in keys:
+        c.access(k)
+        if which == "arc":
+            assert len(c.t1) + len(c.t2) <= cap
+        elif which == "lirs":
+            assert c.lir_count + len(c.q) <= cap
+        elif which == "2q":
+            assert len(c.a1in) + len(c.am) <= cap + 1  # transient +1 by design
+        elif which == "wtlfu":
+            assert len(c.window) + len(c.main) <= cap + 1
+        else:
+            assert len(c.ev) <= cap
+
+
+class TestTinyLFUAdmission:
+    def test_improves_lru_on_zipf(self):
+        """The paper's headline claim, in miniature."""
+        tr = zipf_trace(120_000, n_items=100_000, alpha=0.9, seed=7)
+        C = 500
+        lru = run_trace(Cache(LRUEviction(C)), tr, warmup=30_000)
+        tlru = run_trace(tinylfu_cache(C, "lru", sample_factor=16), tr,
+                         warmup=30_000)
+        assert tlru.hit_ratio > lru.hit_ratio + 0.02
+
+    def test_wtinylfu_not_worse_than_lru(self):
+        tr = zipf_trace(80_000, n_items=50_000, alpha=0.9, seed=9)
+        C = 500
+        lru = run_trace(Cache(LRUEviction(C)), tr, warmup=20_000)
+        w = run_trace(WTinyLFU(C, sample_factor=16), tr, warmup=20_000)
+        assert w.hit_ratio >= lru.hit_ratio
+
+    def test_admission_rejects_one_hit_wonders(self):
+        """Scan resistance: a cache full of popular items is not polluted by a
+        one-pass scan."""
+        c = tinylfu_cache(100, "lru", sample_factor=16)
+        popular = list(range(100))
+        for _ in range(30):
+            for k in popular:
+                c.access(k)
+        before = set(c.ev.keys())
+        for k in range(10_000, 11_000):     # scan of cold keys
+            c.access(k)
+        after = set(c.ev.keys())
+        # almost all popular items survive the scan
+        assert len(before & after) >= 95
+
+    def test_sketch_lfu_sync_on_reset(self):
+        c = tinylfu_cache(4, "lfu", sample_factor=2)  # tiny sample: resets often
+        for i in range(64):
+            c.access(i % 6)
+        # reaching here without KeyError proves reset/halve_all stay in sync
+        assert len(c.ev) <= 4

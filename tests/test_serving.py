@@ -1,0 +1,166 @@
+"""Serving-substrate tests: prefix cache semantics, TinyLFU admission under
+pressure, engine determinism with reuse, device-sketch integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (ServeEngine, PrefixCache, PayloadPool, block_hashes)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3_4b", smoke=True)
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+class TestBlockHashes:
+    def test_chained(self):
+        a = block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+        b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+        assert a[0] == b[0] and a[1] != b[1]
+
+    def test_partial_block_ignored(self):
+        assert len(block_hashes(list(range(10)), 4)) == 2
+
+    def test_prefix_property(self):
+        long = block_hashes(list(range(32)), 4)
+        short = block_hashes(list(range(16)), 4)
+        assert long[:4] == short
+
+
+class TestPayloadPool:
+    def test_store_load_free(self):
+        tpl = {"a": jnp.zeros((2, 3)), "b": jnp.zeros((4,), jnp.int32)}
+        pool = PayloadPool(tpl, 4)
+        s1 = pool.store({"a": jnp.ones((2, 3)), "b": jnp.arange(4)})
+        got = pool.load(s1)
+        assert float(got["a"].sum()) == 6.0
+        assert pool.used == 1
+        pool.free(s1)
+        assert pool.used == 0
+
+    def test_exhaustion(self):
+        pool = PayloadPool({"a": jnp.zeros(2)}, 2)
+        assert pool.store({"a": jnp.ones(2)}) is not None
+        assert pool.store({"a": jnp.ones(2)}) is not None
+        assert pool.store({"a": jnp.ones(2)}) is None
+
+
+class TestPrefixCachePolicy:
+    def _fill(self, pc, pool, n, key_base=0):
+        for i in range(n):
+            s = pool.store({"x": jnp.ones(1)})
+            for f in pc.insert(key_base + i, s):
+                pool.free(f)
+
+    def test_lru_no_admission(self):
+        pool = PayloadPool({"x": jnp.zeros(1)}, 16)
+        pc = PrefixCache(4, policy="lru")
+        self._fill(pc, pool, 8)
+        assert len(pc) == 4 and pool.used == 4
+
+    def test_tinylfu_protects_hot_blocks(self):
+        pool = PayloadPool({"x": jnp.zeros(1)}, 64)
+        pc = PrefixCache(8, policy="tinylfu")
+        hot = list(range(8))
+        for _ in range(20):                     # build frequency
+            pc.lookup(hot)
+        self._fill(pc, pool, 8)                 # fill with hot keys
+        assert len(pc) == 8
+        # a cold scan must NOT displace the hot set
+        for k in range(1000, 1032):
+            s = pool.store({"x": jnp.ones(1)})
+            for f in pc.insert(k, s):
+                pool.free(f)
+        survivors = sum(1 for k in hot if k in pc)
+        assert survivors == 8
+        assert pc.stats.rejected >= 30
+
+    def test_wtinylfu_window_admits_bursts(self):
+        pool = PayloadPool({"x": jnp.zeros(1)}, 256)
+        pc = PrefixCache(100, policy="wtinylfu", window_frac=0.1)
+        self._fill(pc, pool, 5, key_base=5000)
+        # a brand-new burst key always lands in the window (no admission)
+        s = pool.store({"x": jnp.ones(1)})
+        freed = pc.insert(77, s)
+        assert 77 in pc and not freed
+
+    def test_pool_accounting_conserved(self):
+        """Every stored slot is either cached or freed — never leaked."""
+        rng = np.random.default_rng(0)
+        pool = PayloadPool({"x": jnp.zeros(1)}, 32)
+        pc = PrefixCache(16, policy="tinylfu")
+        for i in range(200):
+            k = int(rng.zipf(1.3)) % 64
+            pc.lookup([k])
+            if k not in pc:
+                s = pool.store({"x": jnp.ones(1)})
+                if s is None:
+                    break
+                for f in pc.insert(k, s):
+                    pool.free(f)
+            assert pool.used == len(pc)
+
+
+class TestEngine:
+    def test_generation_deterministic_under_reuse(self, qwen):
+        m, params = qwen
+        rng = np.random.default_rng(1)
+        prompt = list(rng.integers(0, m.cfg.vocab_size, 33))
+        eng = ServeEngine(m, params, max_batch=2, max_len=128, block_size=8,
+                          pool_slots=16)
+        eng.submit(prompt, 6)
+        r1 = eng.run()
+        eng.submit(prompt, 6)
+        r2 = eng.run()                      # second pass reuses cached blocks
+        assert r1[0] == r2[1]
+        assert eng.stats["block_hits"] > 0
+
+    def test_continuous_batching_many_requests(self, qwen):
+        m, params = qwen
+        rng = np.random.default_rng(2)
+        shared = list(rng.integers(0, m.cfg.vocab_size, 16))
+        eng = ServeEngine(m, params, max_batch=3, max_len=128, block_size=8,
+                          pool_slots=32)
+        n = 7
+        for _ in range(n):
+            eng.submit(shared + list(rng.integers(0, m.cfg.vocab_size, 5)), 3)
+        out = eng.run()
+        assert len(out) == n
+        assert all(len(v) == 3 for v in out.values())
+        assert eng.stats["reuse_frac"] > 0.2
+
+    def test_device_sketch_admission_end_to_end(self, qwen):
+        """Admission through the Pallas kernels (interpret mode)."""
+        m, params = qwen
+        rng = np.random.default_rng(3)
+        eng = ServeEngine(m, params, max_batch=2, max_len=128, block_size=8,
+                          pool_slots=6, prefix_policy="tinylfu",
+                          device_sketch=True)
+        shared = list(rng.integers(0, m.cfg.vocab_size, 16))
+        for _ in range(4):
+            eng.submit(shared + list(rng.integers(0, m.cfg.vocab_size, 9)), 2)
+        out = eng.run()
+        assert len(out) == 4
+        s = eng.stats
+        assert s["pool_used"] <= 6
+
+    @pytest.mark.parametrize("arch", ["zamba2_1p2b", "xlstm_1p3b"])
+    def test_ssm_snapshot_reuse(self, arch):
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(4)
+        prompt = list(rng.integers(0, cfg.vocab_size, 33))
+        eng = ServeEngine(m, params, max_batch=1, max_len=128, block_size=8,
+                          pool_slots=16)
+        eng.submit(prompt, 4)
+        r1 = eng.run()
+        eng.submit(prompt, 4)
+        r2 = eng.run()
+        assert r1[0] == r2[1]
+        assert eng.stats["tokens_reused"] > 0

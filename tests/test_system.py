@@ -1,0 +1,127 @@
+"""End-to-end system behaviour: train -> checkpoint -> serve the trained
+params with prefix caching; optimizer/loss properties (hypothesis)."""
+import math
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer, wsd, clip_by_global_norm, global_norm
+from repro.train import make_train_state, build_train_step, \
+    chunked_cross_entropy
+from repro.serve import ServeEngine
+
+
+class TestEndToEnd:
+    def test_train_then_serve_roundtrip(self, tmp_path):
+        """The full life of a model: train on a tiny corpus, checkpoint,
+        restore into a serving engine, generate with prefix reuse."""
+        from repro.checkpoint.store import save_checkpoint, restore_checkpoint
+        cfg = get_config("chatglm3-6b", smoke=True)
+        m = build_model(cfg)
+        opt = make_optimizer("adamw", wsd(2e-3, 3, 60, 20))
+        state = make_train_state(m, opt, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(m, opt, loss_chunk=16))
+        rng = np.random.default_rng(0)
+        # tiny synthetic corpus with a repeated "system prompt" prefix
+        prefix = rng.integers(0, cfg.vocab_size, 16)
+        losses = []
+        for i in range(10):
+            suffix = rng.integers(0, cfg.vocab_size, (4, 16))
+            toks = np.concatenate(
+                [np.tile(prefix, (4, 1)), suffix], axis=1)
+            state, metrics = step(state, {"tokens": jnp.asarray(toks,
+                                                                jnp.int32)})
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0]
+
+        save_checkpoint(str(tmp_path), int(state.step), state.params)
+        params = restore_checkpoint(str(tmp_path), int(state.step),
+                                    jax.eval_shape(lambda: state.params))
+        eng = ServeEngine(m, params, max_batch=2, max_len=96, block_size=8,
+                          pool_slots=16)
+        p1 = list(prefix) + list(rng.integers(0, cfg.vocab_size, 9))
+        p2 = list(prefix) + list(rng.integers(0, cfg.vocab_size, 9))
+        eng.submit(p1, 4)
+        out1 = eng.run()            # wave 1 populates the prefix pool
+        eng.submit(p2, 4)
+        out2 = eng.run()            # wave 2 reuses the shared prefix
+        assert len(out1) == 1 and len(out2) == 1
+        assert eng.stats["block_hits"] >= 2   # shared prefix reused
+
+    def test_engine_under_pool_pressure(self):
+        """Pool smaller than the working set: no leaks, accounting holds."""
+        cfg = get_config("qwen3-4b", smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(m, params, max_batch=2, max_len=96, block_size=8,
+                          pool_slots=4, prefix_policy="tinylfu")
+        rng = np.random.default_rng(1)
+        shared = list(rng.integers(0, cfg.vocab_size, 16))
+        for i in range(6):
+            eng.submit(shared + list(rng.integers(0, cfg.vocab_size, 9)), 2)
+        out = eng.run()
+        assert len(out) == 6
+        assert eng.pool.used <= 4
+        assert eng.pool.used == len(eng.prefix_cache)
+
+
+class TestOptimizerProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(min_value=0.1, max_value=100.0))
+    def test_clip_never_exceeds(self, max_norm):
+        g = {"a": jnp.asarray([3.0, -4.0]), "b": jnp.asarray([[12.0]])}
+        clipped, norm = clip_by_global_norm(g, max_norm)
+        assert float(global_norm(clipped)) <= max_norm * 1.001 + 1e-6
+
+    def test_adamw_step_bounded(self):
+        """Adam updates are bounded by ~lr regardless of gradient scale."""
+        opt = make_optimizer("adamw", lambda s: 0.1, weight_decay=0.0,
+                             max_grad_norm=1e9)
+        p = {"w": jnp.ones((4,))}
+        st_ = opt.init(p)
+        for scale in [1e-6, 1.0, 1e6]:
+            g = {"w": jnp.full((4,), scale)}
+            newp, _, _ = opt.apply(p, g, st_)
+            delta = float(jnp.max(jnp.abs(newp["w"] - p["w"])))
+            assert delta < 0.5          # lr / sqrt(bias-corr) bound
+
+
+class TestLossProperties:
+    def test_chunked_xent_matches_direct(self):
+        """Chunked (scan+checkpoint) loss == direct full-logit xent."""
+        cfg = get_config("qwen3-4b", smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 33)),
+                           jnp.int32)
+        h, _ = m.hidden_train(params, {"tokens": toks})
+        loss, _ = chunked_cross_entropy(params, h, toks, cfg, chunk=8)
+        # direct reference
+        logits = m.lm_head(params, h)[:, :-1]
+        lab = toks[:, 1:]
+        lse = jax.nn.logsumexp(logits, -1)
+        true = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+        ref = jnp.mean(lse - true)
+        assert abs(float(loss) - float(ref)) < 1e-3
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=2, max_value=40))
+    def test_chunked_xent_any_length(self, T):
+        cfg = get_config("musicgen_medium", smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(T)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, T, cfg.n_codebooks)),
+            jnp.int32)
+        h, _ = m.hidden_train(params, {"tokens": toks})
+        loss, metr = chunked_cross_entropy(params, h, toks, cfg, chunk=16)
+        assert math.isfinite(float(loss))
+        assert int(metr["tokens"]) == 2 * (T - 1)

@@ -1,0 +1,48 @@
+"""Synthetic trace generator sanity checks."""
+import numpy as np
+import pytest
+
+from repro.traces import (zipf_trace, zipf_probs, youtube_dynamic_trace,
+                          wiki_drift_trace, spc1_like_trace, oltp_like_trace,
+                          glimpse_trace, multi_tenant_prompt_trace)
+
+
+@pytest.mark.parametrize("gen", [
+    lambda n: zipf_trace(n, n_items=10_000, alpha=0.9, seed=1),
+    lambda n: youtube_dynamic_trace(n, weeks=5, items_per_week=500, seed=1),
+    lambda n: wiki_drift_trace(n, n_items=5000, drift_every=1000, seed=1),
+    lambda n: spc1_like_trace(n, n_random=2000, seed=1),
+    lambda n: oltp_like_trace(n, n_pages=2000, seed=1),
+    lambda n: glimpse_trace(n, loop_items=500, n_random=2000, seed=1),
+])
+def test_generators_basic(gen):
+    tr = gen(20_000)
+    assert len(tr) == 20_000 and tr.dtype == np.int64 and (tr >= 0).all()
+    # deterministic
+    np.testing.assert_array_equal(tr, gen(20_000))
+
+
+def test_zipf_is_skewed():
+    tr = zipf_trace(50_000, n_items=100_000, alpha=0.9, seed=2)
+    _, counts = np.unique(tr, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[:100].sum() > 0.15 * len(tr)     # head carries real mass
+
+
+def test_zipf_probs_normalized():
+    p = zipf_probs(1000, 0.9)
+    assert abs(p.sum() - 1.0) < 1e-9 and (np.diff(p) <= 0).all()
+
+
+def test_oltp_has_ascending_log():
+    tr = oltp_like_trace(20_000, n_pages=1000, seed=3)
+    log = tr[tr >= 1000]                        # log region keys
+    # ascending trend: later log accesses have larger ids on average
+    a, b = log[: len(log) // 2], log[len(log) // 2:]
+    assert b.mean() > a.mean()
+
+
+def test_multi_tenant_prefix_shared():
+    tr = multi_tenant_prompt_trace(200, n_tenants=10, seed=4)
+    _, counts = np.unique(tr, return_counts=True)
+    assert (counts > 5).any()                   # shared prefix blocks re-hit
