@@ -4,10 +4,12 @@ from __future__ import annotations
 
 from repro.core import WTinyLFU, run_trace
 from repro.traces import oltp_like_trace, zipf_trace
-from .common import save
+from .common import device_rows, save
+
+WINDOW_FRACS = [0.01, 0.05, 0.1, 0.2, 0.3, 0.4, 0.6, 0.8]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, device: bool = True):
     length = 200_000 if quick else 800_000
     rows = []
     for tname, tr, C in [
@@ -15,14 +17,18 @@ def run(quick: bool = False):
         ("zipf0.9", zipf_trace(length, n_items=400_000, alpha=0.9, seed=52),
          1000),
     ]:
-        for wf in [0.01, 0.05, 0.1, 0.2, 0.3, 0.4, 0.6, 0.8]:
+        for wf in WINDOW_FRACS:
             r = run_trace(WTinyLFU(C, window_frac=wf, sample_factor=8), tr,
-                          warmup=length // 5)
+                          warmup=length // 5, trace_name=tname)
             rows.append({"trace": tname, "policy": f"W-TinyLFU({wf:.0%})",
                          "cache_size": C, "hit_ratio": r.hit_ratio,
                          "accesses": r.accesses, "wall_s": r.wall_s})
             print(f"  {tname:>10s} window={wf:.0%} hit={r.hit_ratio:.4f}",
                   flush=True)
+        if device:
+            # the whole window-fraction axis is one compiled device sweep
+            rows += device_rows(tr, [C], window_fracs=WINDOW_FRACS,
+                                warmup_frac=0.2, trace_name=tname)
     save(rows, "fig21_window")
     return rows
 

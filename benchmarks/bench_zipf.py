@@ -8,10 +8,10 @@ shrinks with W — §5.4)."""
 from __future__ import annotations
 
 from repro.traces import zipf_trace
-from .common import policy_factories, sweep, save
+from .common import policy_factories, sweep, device_rows, save
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, device: bool = True):
     length = 300_000 if quick else 1_200_000
     sizes = [500, 2000] if quick else [250, 1000, 4000, 16000]
     rows = []
@@ -23,6 +23,12 @@ def run(quick: bool = False):
         tr = zipf_trace(length, n_items=1_000_000, alpha=alpha, seed=11)
         rows += sweep(tr, sizes, pols, warmup_frac=0.4,
                       trace_name=f"zipf{alpha}")
+        if device:
+            # device twin of the W-TinyLFU curve as one compiled sweep.
+            # sample_factor=8: device counters are 4-bit (§3.4.1), so the
+            # host presentation's sf=64 cap does not fit a nibble.
+            rows += device_rows(tr, sizes, warmup_frac=0.4,
+                                trace_name=f"zipf{alpha}", sample_factor=8)
     save(rows, "fig6_zipf")
     return rows
 

@@ -46,7 +46,8 @@ def sweep(trace: np.ndarray, cache_sizes, policies: dict, *,
     for C in cache_sizes:
         for name, factory in policies.items():
             t0 = time.perf_counter()
-            r = run_trace(factory(C), trace, warmup=warm)
+            r = run_trace(factory(C), trace, warmup=warm,
+                          trace_name=trace_name)
             rows.append({
                 "trace": trace_name, "policy": name, "cache_size": C,
                 "hit_ratio": r.hit_ratio, "accesses": r.accesses,
@@ -55,6 +56,42 @@ def sweep(trace: np.ndarray, cache_sizes, policies: dict, *,
             if verbose:
                 print(f"  {trace_name:>12s} C={C:<6d} {name:<16s} "
                       f"hit={r.hit_ratio:.4f}", flush=True)
+    return rows
+
+
+def device_rows(trace: np.ndarray, cache_sizes, *, window_fracs=(0.01,),
+                warmup_frac: float = 0.0, trace_name: str = "trace",
+                sample_factor: int = 8, verbose: bool = True,
+                **cfg_kw) -> list[dict]:
+    """Device-engine twin of :func:`sweep` for the W-TinyLFU policy family.
+
+    Runs the whole (cache_size × window_frac) grid through
+    ``core.device_simulate.simulate_sweep`` — one compiled program instead of
+    one Python loop per configuration — and returns rows in the same shape as
+    ``sweep`` so results mix into the same JSON files.  The jax import is
+    deferred so host-only benchmark runs never pay for it.
+    """
+    from repro.core.device_simulate import simulate_sweep
+
+    warm = int(len(trace) * warmup_frac)
+    results = simulate_sweep(trace, cache_sizes, window_fracs=window_fracs,
+                             warmup=warm, trace_name=trace_name,
+                             sample_factor=sample_factor, verbose=verbose,
+                             **cfg_kw)
+    rows = []
+    for r in results:
+        wf = r.extra["window_frac"]
+        grid = r.extra["grid"]
+        name = ("W-TinyLFU(dev)" if wf == 0.01
+                else f"W-TinyLFU(dev,{wf:.0%})")
+        rows.append({
+            "trace": trace_name, "policy": name, "cache_size": r.cache_size,
+            "hit_ratio": r.hit_ratio, "accesses": r.accesses,
+            # SimResult.wall_s is the WHOLE grid's wall; amortize so
+            # accesses/wall_s is per-config and comparable to host rows
+            "wall_s": round(r.wall_s / grid, 2), "grid": grid,
+            "backend": r.extra["backend"],
+        })
     return rows
 
 

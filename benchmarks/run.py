@@ -18,7 +18,7 @@ def main() -> None:
 
     from . import (bench_strawman, bench_zipf, bench_youtube, bench_wiki,
                    bench_traces, bench_window, bench_errors, bench_serving,
-                   bench_sketch)
+                   bench_sketch, bench_device)
     suites = {
         "fig4_strawman": bench_strawman.run,
         "fig6_zipf": bench_zipf.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "fig22_errors": bench_errors.run,
         "serving_prefix": bench_serving.run,
         "sketch_micro": bench_sketch.run,
+        "device_throughput": bench_device.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if args.only in k}

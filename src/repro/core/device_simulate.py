@@ -1,0 +1,309 @@
+"""Device-resident W-TinyLFU trace simulation engine.
+
+The host engine (`simulate.run_trace`) walks a Python per-access loop at
+~µs/access; the paper's hit-ratio curves (§5, Figs 6-22) need millions of
+accesses × dozens of (policy, size, window) configurations, which makes the
+host loop wall-clock prohibitive at production scale.  This module runs the
+*entire* trace on the accelerator instead:
+
+* the fused step (kernels/sketch_step.py) advances sketch + window-LRU +
+  SLRU-main through a chunk of accesses in one VMEM-resident launch;
+* `jax.lax.scan` chains chunks so a whole trace is one compiled program —
+  hit counts come back as a single scalar, keys stream device-side;
+* `simulate_sweep` vmaps the scan over a *grid* of configurations
+  (cache sizes × window fractions × seed traces), turning a `run_matrix`
+  Cartesian experiment into one compiled program.
+
+Backends (`backend=` argument):
+
+* ``"jit"``     — the pure-jnp twin (`step_ref`) under `jax.jit`.  This is the
+                  fast path on CPU and the only path `vmap` currently takes.
+* ``"pallas"``  — the fused Pallas kernel, `interpret=True` off-TPU.  Same
+                  bits, real VMEM residency + buffer donation on TPU.
+
+Sizing mirrors the host `WTinyLFU` defaults exactly (window 1%, SLRU 80/20,
+W = sample_factor·C, cap = W/C with the doorkeeper absorbing one count), so
+host and device hit ratios are directly comparable: the only difference is
+the hash family (64-bit splitmix on host vs 32-bit-lane mixers on device),
+which perturbs hit ratios by well under ±0.005 on the golden traces
+(tests/test_device_simulate.py pins this).
+
+Keys are int64/uint64 host arrays; they are split once into (lo, hi) 32-bit
+lanes on the way in (TPU has no 64-bit integer multiply — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sketch_step import (StepSpec, make_step_params,
+                                       init_step_state, step_ref, step_pallas,
+                                       R_HITS)
+from repro.kernels.sketch_common import keys_to_lanes
+from .sketch import _pow2ceil
+from .simulate import SimResult
+
+
+@dataclass(frozen=True)
+class DeviceWTinyLFU:
+    """One simulated W-TinyLFU configuration (host-side description)."""
+    capacity: int
+    window_frac: float = 0.01
+    sample_factor: int = 8
+    protected_frac: float = 0.8
+    counters_per_item: float = 1.0
+    rows: int = 4
+    doorkeeper: bool = True
+    dk_bits_per_item: float = 4.0
+
+    @property
+    def window_cap(self) -> int:
+        return max(1, int(round(self.capacity * self.window_frac)))
+
+    @property
+    def main_cap(self) -> int:
+        return max(1, self.capacity - self.window_cap)
+
+    @property
+    def prot_cap(self) -> int:
+        return max(1, int(self.main_cap * self.protected_frac))
+
+    @property
+    def sample_size(self) -> int:
+        return self.sample_factor * self.capacity
+
+    @property
+    def cap(self) -> int:
+        return min(15, max(1, self.sample_factor
+                           - (1 if self.doorkeeper else 0)))
+
+    @property
+    def width(self) -> int:
+        w = _pow2ceil(int(max(1.0, self.counters_per_item * self.sample_size
+                              / self.rows)))
+        return max(8, w)
+
+    @property
+    def dk_bits(self) -> int:
+        if not self.doorkeeper:
+            return 0
+        return max(32, _pow2ceil(int(self.sample_size
+                                     * self.dk_bits_per_item)))
+
+    def spec(self, window_slots: int | None = None,
+             main_slots: int | None = None) -> StepSpec:
+        """Static geometry; slots may be padded up for vmapped sweeps."""
+        return StepSpec(
+            width=self.width, rows=self.rows, dk_bits=self.dk_bits,
+            window_slots=window_slots or self.window_cap,
+            main_slots=main_slots or self.main_cap)
+
+    def params(self, warmup: int = 0) -> jnp.ndarray:
+        return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
+                                self.sample_size, self.cap, warmup)
+
+
+def _trace_lanes(trace: np.ndarray):
+    lo, hi = keys_to_lanes(np.asarray(trace).astype(np.uint64))
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# single-trace simulation
+# ---------------------------------------------------------------------------
+
+# module-level jit wrappers/caches: jax's trace cache is keyed on the
+# wrapper object, so per-call jax.jit(...) would retrace and recompile the
+# whole scan every invocation
+_jit_step = jax.jit(step_ref, static_argnums=(0,))
+_pallas_cache: dict = {}
+_vmap_cache: dict = {}
+
+
+def _run_jit(spec: StepSpec, params, state, lo, hi):
+    return _jit_step(spec, params, state, lo, hi)
+
+
+def _pallas_runner(spec: StepSpec, interpret: bool):
+    key = (spec, interpret)
+    if key not in _pallas_cache:
+        @jax.jit
+        def run(params, state, los, his, nvalid):
+            def body(st, x):
+                clo, chi, nv = x
+                st, hits = step_pallas(spec, params, st, clo, chi, nv,
+                                       interpret=interpret)
+                return st, hits
+            return jax.lax.scan(body, state, (los, his, nvalid))
+        _pallas_cache[key] = run
+    return _pallas_cache[key]
+
+
+def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
+                interpret: bool):
+    n = lo.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        z = jnp.zeros((pad,), lo.dtype)
+        lo = jnp.concatenate([lo, z])
+        hi = jnp.concatenate([hi, z])
+    nchunks = lo.shape[0] // chunk
+    los = lo.reshape(nchunks, chunk)
+    his = hi.reshape(nchunks, chunk)
+    nvalid = jnp.minimum(
+        jnp.maximum(n - jnp.arange(nchunks, dtype=jnp.int32) * chunk, 0),
+        chunk)
+    state, hits = _pallas_runner(spec, interpret)(params, state, los, his,
+                                                  nvalid)
+    return state, hits.reshape(-1)[:n]
+
+
+def simulate_trace(trace: np.ndarray, capacity: int, *,
+                   window_frac: float = 0.01, sample_factor: int = 8,
+                   warmup: int = 0, backend: str = "jit", chunk: int = 512,
+                   interpret: bool | None = None, trace_name: str = "?",
+                   return_state: bool = False, **cfg_kw) -> SimResult:
+    """Device twin of ``simulate.run_trace(WTinyLFU(capacity), trace)``.
+
+    ``backend="jit"`` runs the scan twin; ``backend="pallas"`` launches the
+    fused kernel per chunk (interpret mode anywhere off-TPU).  ``warmup``
+    accesses update state but are not counted, exactly like ``run_trace``.
+    """
+    cfg = DeviceWTinyLFU(capacity, window_frac=window_frac,
+                         sample_factor=sample_factor, **cfg_kw)
+    spec = cfg.spec()
+    params = cfg.params(warmup=warmup)
+    state = init_step_state(spec, cfg.window_cap, cfg.main_cap)
+    lo, hi = _trace_lanes(trace)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    t0 = time.perf_counter()
+    if backend == "jit":
+        state, hits = _run_jit(spec, params, state, lo, hi)
+    elif backend == "pallas":
+        state, hits = _run_pallas(spec, params, state, lo, hi, chunk,
+                                  interpret)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    regs = np.asarray(state["regs"])
+    wall = time.perf_counter() - t0
+
+    counted = len(trace) - warmup
+    res = SimResult(policy="w-tinylfu(device)", cache_size=capacity,
+                    trace=trace_name, accesses=counted, hits=int(regs[R_HITS]),
+                    hit_ratio=int(regs[R_HITS]) / max(1, counted),
+                    wall_s=wall,
+                    extra={"backend": backend, "window_frac": window_frac,
+                           "device": jax.default_backend()})
+    if return_state:
+        return res, state, hits
+    return res
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-configuration sweeps: one compiled program per grid
+# ---------------------------------------------------------------------------
+
+def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
+                   sample_factor: int = 8, warmup: int = 0,
+                   trace_name: str = "?", verbose: bool = False,
+                   mode: str = "auto", **cfg_kw) -> list[SimResult]:
+    """Cartesian (capacity × window_frac) sweep as one compiled program.
+
+    All configurations share the static geometry of the *largest* one (table
+    slots are padded up; smaller capacities mark the excess slots as padding),
+    so ONE compiled step program serves the whole grid; the sketch of a
+    smaller configuration is sized for the largest sample — its estimates are
+    slightly *more* accurate than a per-size host sketch, which is within the
+    golden tolerance.
+
+    ``mode``: ``"vmap"`` runs the whole grid as a single vmapped scan (the
+    shape intended for accelerators — grid points ride the vector lanes; all
+    configs share the largest config's sketch geometry); ``"sequential"``
+    runs one compiled single-config scan per grid point with each config's
+    own host-matched sketch sizing (faster on CPU, where XLA's batching
+    rules serialize the lanes anyway, and directly comparable to per-size
+    host results); ``"auto"`` picks vmap on TPU and sequential elsewhere.
+
+    ``trace`` may be ``(N,)`` (shared by all configs) or ``(G, N)`` (one
+    trace per grid point, e.g. seed sweeps).
+    """
+    grid = [DeviceWTinyLFU(C, window_frac=wf, sample_factor=sample_factor,
+                           **cfg_kw)
+            for C in capacities for wf in window_fracs]
+    gridlab = [(C, wf) for C in capacities for wf in window_fracs]
+    if mode == "auto":
+        mode = "vmap" if jax.default_backend() == "tpu" else "sequential"
+
+    trace = np.asarray(trace)
+    shared_trace = trace.ndim == 1
+    if not shared_trace and trace.shape[0] != len(grid):
+        raise ValueError(f"trace grid dim {trace.shape[0]} != "
+                         f"{len(grid)} configurations")
+    n_per = trace.shape[-1]
+
+    t0 = time.perf_counter()
+    if mode == "vmap":
+        # one program for the whole grid: shared (largest) static geometry,
+        # per-config capacities traced, excess slots marked as padding
+        big = max(grid, key=lambda c: c.capacity)
+        spec = big.spec(window_slots=max(c.window_cap for c in grid),
+                        main_slots=max(c.main_cap for c in grid))
+        pstack = jnp.stack([c.params(warmup=warmup) for c in grid])
+        sstack = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[init_step_state(spec, c.window_cap, c.main_cap) for c in grid])
+        if shared_trace:
+            lo, hi = _trace_lanes(trace)
+            in_axes = (0, 0, None, None)
+        else:
+            lanes = [_trace_lanes(t) for t in trace]
+            lo = jnp.stack([l for l, _ in lanes])
+            hi = jnp.stack([h for _, h in lanes])
+            in_axes = (0, 0, 0, 0)
+        key = (spec, in_axes)
+        if key not in _vmap_cache:
+            _vmap_cache[key] = jax.jit(jax.vmap(
+                lambda p, s, l, h: step_ref(spec, p, s, l, h),
+                in_axes=in_axes))
+        out_states, _ = _vmap_cache[key](pstack, sstack, lo, hi)
+        regs = np.asarray(out_states["regs"])
+    elif mode == "sequential":
+        # per-config tight specs: sketches sized exactly like the host's
+        # per-capacity sizing, one compile per distinct geometry
+        if shared_trace:
+            lanes = [_trace_lanes(trace)] * len(grid)
+        else:
+            lanes = [_trace_lanes(t) for t in trace]
+        outs = []
+        for c, (l, h) in zip(grid, lanes):
+            spec = c.spec()
+            st = init_step_state(spec, c.window_cap, c.main_cap)
+            outs.append(_jit_step(spec, c.params(warmup=warmup), st,
+                                  l, h)[0]["regs"])
+        regs = np.stack([np.asarray(r) for r in outs])
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    wall = time.perf_counter() - t0
+
+    counted = n_per - warmup
+    out = []
+    for g, (C, wf) in enumerate(gridlab):
+        hits = int(regs[g, R_HITS])
+        out.append(SimResult(
+            policy="w-tinylfu(device)", cache_size=C, trace=trace_name,
+            accesses=counted, hits=hits, hit_ratio=hits / max(1, counted),
+            wall_s=wall, extra={"backend": f"jit+{mode}", "window_frac": wf,
+                                "grid": len(grid),
+                                "device": jax.default_backend()}))
+        if verbose:
+            print(f"  {trace_name:>12s} C={C:<7d} wf={wf:<5.2f} "
+                  f"hit={out[-1].hit_ratio:.4f}  (grid of {len(grid)}, "
+                  f"{wall:.1f}s total)", flush=True)
+    return out

@@ -27,8 +27,13 @@ class SimResult:
     extra: dict = field(default_factory=dict)
 
 
-def run_trace(cache, trace: np.ndarray, warmup: int = 0) -> SimResult:
-    """Simulate; ``warmup`` initial accesses update state but don't count."""
+def run_trace(cache, trace: np.ndarray, warmup: int = 0,
+              trace_name: str = "?") -> SimResult:
+    """Simulate; ``warmup`` initial accesses update state but don't count.
+
+    ``trace_name`` labels the result so single-trace callers don't produce
+    ``trace="?"`` rows (run_matrix overwrites it with its own key).
+    """
     t0 = time.perf_counter()
     access = cache.access
     hits = 0
@@ -45,7 +50,7 @@ def run_trace(cache, trace: np.ndarray, warmup: int = 0) -> SimResult:
     if hasattr(cache, "ev"):              # Cache driver: name from parts
         adm = "tinylfu+" if cache.admission is not None else ""
         name = adm + cache.ev.name
-    return SimResult(policy=name, cache_size=cache.capacity, trace="?",
+    return SimResult(policy=name, cache_size=cache.capacity, trace=trace_name,
                      accesses=counted, hits=hits,
                      hit_ratio=hits / max(1, counted), wall_s=wall)
 

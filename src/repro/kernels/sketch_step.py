@@ -1,0 +1,450 @@
+"""Fused device-resident W-TinyLFU simulation step (paper §4, Fig 5).
+
+One launch advances an entire *chunk* of the access trace through the full
+W-TinyLFU decision pipeline while every byte of policy state stays
+VMEM-resident:
+
+    per access:  doorkeeper insert  +  conservative-update add  (+ §3.3 reset)
+                 -> window-LRU / SLRU-main lookup
+                 -> on window overflow: candidate & victim frequency estimate
+                 -> admission verdict + table update
+
+This replaces the three separate HBM round-trips per decision (sketch_update
+-> sketch_estimate -> admission) that made trace simulation launch-bound.
+
+Data layout — engineered so the sequential per-access body is a handful of
+tiny fused ops instead of O(capacity) masked rebuilds:
+
+* cache tables are fixed-capacity packed int32 arrays.  Each slot's
+  (valid, segment, LRU-stamp) state is packed into ONE int32 ``meta``:
+
+      -1              empty slot
+      t               probation entry, last-stamped at access t
+      2^30 | t        protected entry, last-stamped at access t
+      2^31-1          sweep padding (permanently unusable slot)
+
+  so a single ``argmin(meta)`` is simultaneously the free-slot finder and
+  the exact SLRU victim priority (empty < probation LRU < protected LRU),
+  and a single ``argmin`` over the window's meta is free-slot-else-LRU.
+* LRU order is the monotone access index ``t``; each access stamps at most
+  one entry per segment, so stamps are unique and ``argmin`` reproduces the
+  host OrderedDict order (core/policies.py:SLRUEviction) exactly.
+* hashing is hoisted out of the sequential loop entirely: probe rows and
+  doorkeeper bit positions are precomputed vectorized over the whole chunk
+  (they do not depend on state) and *stored in the tables* next to the key
+  lanes, so estimates of resident candidates/victims need no re-hashing.
+
+Semantics contract (tests/test_sketch_step.py, tests/test_device_simulate.py):
+
+* ``step_ref`` (pure-jnp `lax.scan`) and ``step_pallas`` (fused kernel) are
+  bit-for-bit identical, including reset boundaries that straddle chunks.
+* The sketch substate evolves exactly like ``ref.add_ref`` (no reset) and the
+  host ``FrequencySketch`` up to the 32-bit-lane hash family.
+* With a collision-free sketch, the per-access hit sequence is bit-for-bit
+  the host ``WTinyLFU``'s.
+
+Static geometry lives in ``StepSpec``; per-config scalars that may vary
+across a vmapped sweep (protected capacity, sample size W, counter cap,
+warmup) are a traced int32 ``params`` vector, so one compiled program sweeps
+a Cartesian grid of configurations (core/device_simulate.py).  Window/main
+capacities below the static slot counts are expressed at init time by marking
+the excess slots as padding (init_step_state).
+
+Keys: 64-bit keys arrive as (lo, hi) int32 bit-pattern lanes.  The single
+key value 2^64-1 (lanes == -1) is reserved as the padding-slot sentinel and
+must not appear in traces.
+
+Aliasing: ``step_pallas`` donates every state buffer (input_output_aliases),
+so between chunks the state never round-trips through fresh HBM allocations.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sketch_common import probe_index, dk_probe_index, halve_words
+
+# python ints (not jnp scalars): jnp scalars at module scope would be closed
+# over as captured constants, which pallas kernels reject
+_I32_MAX = 2**31 - 1          # padding-slot meta: never free, never a victim
+_PROT = 1 << 30               # meta bit 30: protected segment
+_EMPTY = -1                   # meta of an empty (usable) slot
+
+# params vector layout (traced per-config scalars; see make_step_params)
+P_WINDOW_CAP = 0              # informational (capacities are baked at init)
+P_MAIN_CAP = 1
+P_PROT_CAP = 2
+P_SAMPLE = 3                  # W; 0 disables the automatic reset
+P_CAP = 4                     # counter saturation (<= 15, 4-bit nibbles)
+P_WARMUP = 5                  # accesses before hits start counting
+NPARAMS = 8
+
+# regs vector layout (mutable int32 scalar state)
+R_SIZE = 0                    # sketch additions since last reset
+R_PCOUNT = 1                  # protected entries within main
+R_T = 2                       # global access index == LRU stamp
+R_HITS = 3                    # counted hits (post warmup)
+NREGS = 8
+
+
+def _pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclass(frozen=True)
+class StepSpec:
+    """Static geometry of one simulated W-TinyLFU instance."""
+    width: int                    # sketch counters per row (pow2, mult of 8)
+    rows: int = 4
+    dk_bits: int = 0              # doorkeeper bits (pow2 >= 32); 0 = off
+    dk_probes: int = 3
+    window_slots: int = 1         # window table size (>= any window_cap used)
+    main_slots: int = 1           # main table size (>= any main_cap used)
+
+    def __post_init__(self):
+        assert _pow2(self.width) and self.width % 8 == 0
+        assert self.dk_bits == 0 or (_pow2(self.dk_bits) and self.dk_bits >= 32)
+        assert self.window_slots >= 1 and self.main_slots >= 1
+
+    @property
+    def words_per_row(self) -> int:
+        return self.width // 8
+
+    @property
+    def dk_words(self) -> int:
+        return max(1, self.dk_bits // 32)
+
+    @property
+    def dkp(self) -> int:         # stored doorkeeper probes per table entry
+        return self.dk_probes if self.dk_bits else 1
+
+
+def make_step_params(window_cap: int, main_cap: int, prot_cap: int,
+                     sample_size: int, cap: int, warmup: int = 0) -> jnp.ndarray:
+    """Pack per-config scalars into the traced (NPARAMS,) int32 vector."""
+    assert 1 <= cap <= 15
+    p = [int(window_cap), int(main_cap), int(prot_cap), int(sample_size),
+         int(cap), int(warmup)] + [0] * (NPARAMS - 6)
+    return jnp.asarray(p, jnp.int32)
+
+
+def init_step_state(spec: StepSpec, window_cap: int | None = None,
+                    main_cap: int | None = None) -> dict:
+    """Zeroed simulation state (a pytree of int32 device arrays).
+
+    ``window_cap``/``main_cap`` below the static slot counts mark the excess
+    slots as permanent padding — this is how one static ``StepSpec`` hosts a
+    vmapped sweep over different cache sizes.
+    """
+    wcap = spec.window_slots if window_cap is None else int(window_cap)
+    mcap = spec.main_slots if main_cap is None else int(main_cap)
+    assert 1 <= wcap <= spec.window_slots and 1 <= mcap <= spec.main_slots
+
+    def table(slots, cap):
+        pad = jnp.arange(slots) >= cap
+        return {
+            # all non-resident slots hold the sentinel key (lanes -1) so no
+            # real key — including key 0 — can match an unoccupied slot
+            "lo": jnp.full((slots,), -1, jnp.int32),
+            "hi": jnp.full((slots,), -1, jnp.int32),
+            "meta": jnp.where(pad, _I32_MAX, _EMPTY).astype(jnp.int32),
+            "idx": jnp.zeros((slots, spec.rows), jnp.int32),
+            "dkb": jnp.zeros((slots, spec.dkp), jnp.int32),
+        }
+
+    w, m = table(spec.window_slots, wcap), table(spec.main_slots, mcap)
+    return {
+        "counters": jnp.zeros((spec.rows * spec.words_per_row,), jnp.int32),
+        "doorkeeper": jnp.zeros((spec.dk_words,), jnp.int32),
+        "wlo": w["lo"], "whi": w["hi"], "wmeta": w["meta"],
+        "widx": w["idx"], "wdkb": w["dkb"],
+        "mlo": m["lo"], "mhi": m["hi"], "mmeta": m["meta"],
+        "midx": m["idx"], "mdkb": m["dkb"],
+        "regs": jnp.zeros((NREGS,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# probe precomputation — vectorized over the chunk, outside the scan
+# ---------------------------------------------------------------------------
+
+def precompute_probes(spec: StepSpec, lo: jnp.ndarray, hi: jnp.ndarray):
+    """(B,) key lanes -> ((B, rows) table probes, (B, dkp) doorkeeper bits).
+
+    Pure functions of the key, hoisted out of the sequential loop and stored
+    alongside resident entries so the loop body never hashes.
+    """
+    idx = jnp.stack([probe_index(lo, hi, r, spec.width)
+                     for r in range(spec.rows)], axis=-1)
+    if spec.dk_bits:
+        dkb = jnp.stack([dk_probe_index(lo, hi, p, spec.dk_bits)
+                         for p in range(spec.dk_probes)], axis=-1)
+    else:
+        dkb = jnp.zeros(lo.shape + (1,), jnp.int32)
+    return idx, dkb
+
+
+# ---------------------------------------------------------------------------
+# functional single-access step — the one source of truth for both backends
+# ---------------------------------------------------------------------------
+
+def _row_offsets(spec: StepSpec) -> jnp.ndarray:
+    return (jnp.arange(spec.rows, dtype=jnp.int32) * spec.words_per_row)
+
+
+def _nibble_vals(words: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """4-bit counter values at probe positions idx (…, rows)."""
+    return (words >> ((idx & 7) * 4)) & jnp.int32(0xF)
+
+
+def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb):
+    """FrequencySketch.add(): doorkeeper gate -> minimal increment -> reset.
+
+    ``kidx`` (rows,) precomputed probe indices; ``kdkb`` (dkp,) doorkeeper
+    bit positions.  Row gathers/scatters are one vectorized op each.
+    """
+    if spec.dk_bits:
+        # sequential probe insert (host _dk_put semantics: a later probe of
+        # the same access observes bits set by an earlier one)
+        present = jnp.int32(1)
+        for p in range(spec.dk_probes):
+            bit = kdkb[p]
+            word = dk[bit >> 5]
+            present &= (word >> (bit & 31)) & 1
+            dk = dk.at[bit >> 5].set(word | (jnp.int32(1) << (bit & 31)))
+        gate = present.astype(jnp.bool_)   # repeat visitor -> main table
+    else:
+        gate = jnp.bool_(True)
+
+    flat = _row_offsets(spec) + (kidx >> 3)        # (rows,) word positions
+    words = counters[flat]
+    vals = _nibble_vals(words, kidx)
+    m = vals.min()
+    bump = gate & (m < params[P_CAP])
+    new = jnp.where(bump & (vals == m),
+                    words + (jnp.int32(1) << ((kidx & 7) * 4)), words)
+    counters = counters.at[flat].set(new)
+
+    size = size + 1
+    do_reset = (params[P_SAMPLE] > 0) & (size >= params[P_SAMPLE])
+    # select, not lax.cond: XLA CPU cond copies its operand buffers every
+    # step, which costs more than the fused masked pass it would skip
+    counters = jnp.where(do_reset, halve_words(counters), counters)
+    dk = jnp.where(do_reset, jnp.zeros_like(dk), dk)
+    size = jnp.where(do_reset, size // 2, size)
+    return counters, dk, size
+
+
+def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
+    """TinyLFU estimates for two resident entries from their stored probes.
+
+    idx2: (2, rows); dkb2: (2, dkp) -> (2,) int32 estimates.
+    """
+    words = counters[_row_offsets(spec)[None, :] + (idx2 >> 3)]
+    est = _nibble_vals(words, idx2).min(axis=-1)
+    if spec.dk_bits:
+        w2 = dk[dkb2 >> 5]
+        ok = (((w2 >> (dkb2 & 31)) & 1) == 1).all(axis=-1)
+        est = est + ok.astype(jnp.int32)
+    return est
+
+
+def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
+                klo, khi, kidx, kdkb):
+    """Advance the full W-TinyLFU state by one access; returns (state, hit)."""
+    regs = state["regs"]
+    t = regs[R_T]
+
+    # -- 1. admission.record(key): sketch add + automatic §3.3 reset ---------
+    counters, dk, size = _sketch_add(spec, params, state["counters"],
+                                     state["doorkeeper"], regs[R_SIZE],
+                                     kidx, kdkb)
+
+    wlo, whi, wmeta = state["wlo"], state["whi"], state["wmeta"]
+    widx, wdkb = state["widx"], state["wdkb"]
+    mlo, mhi, mmeta = state["mlo"], state["mhi"], state["mmeta"]
+    midx, mdkb = state["midx"], state["mdkb"]
+
+    # -- 2. lookups (meta >= 0 <=> resident; padding slots hold sentinel key)
+    jw = jnp.argmax((wlo == klo) & (whi == khi))
+    hit_w = (wlo[jw] == klo) & (whi[jw] == khi) & (wmeta[jw] >= 0)
+    jm = jnp.argmax((mlo == klo) & (mhi == khi))
+    hit_m = (mlo[jm] == klo) & (mhi[jm] == khi) & (mmeta[jm] >= 0)
+    hit = hit_w | hit_m
+
+    # -- 3a. window hit: refresh LRU stamp -----------------------------------
+    wmeta = wmeta.at[jw].set(jnp.where(hit_w, t, wmeta[jw]))
+
+    # -- 3b. main hit: SLRU promote-or-refresh -> protected MRU --------------
+    promote = hit_m & (mmeta[jm] < _PROT)
+    mmeta = mmeta.at[jm].set(jnp.where(hit_m, _PROT | t, mmeta[jm]))
+    pcount = regs[R_PCOUNT] + promote.astype(jnp.int32)
+    # protected overflow -> demote its LRU entry back to probation MRU
+    over = pcount > params[P_PROT_CAP]
+    kd = jnp.argmin(jnp.where(mmeta >= _PROT, mmeta, _I32_MAX))
+    mmeta = mmeta.at[kd].set(jnp.where(over, t, mmeta[kd]))
+    pcount = pcount - over.astype(jnp.int32)
+
+    # -- 4. miss: insert into window; LRU overflow asks admission ------------
+    miss = ~hit
+    # argmin(wmeta): empty (-1) before LRU stamps; padding (+MAX) never picked
+    ws = jnp.argmin(wmeta)
+    push = miss & (wmeta[ws] >= 0)              # evicting a resident entry
+    cand_lo, cand_hi = wlo[ws], whi[ws]
+    cand_idx, cand_dkb = widx[ws], wdkb[ws]
+    wlo = wlo.at[ws].set(jnp.where(miss, klo, wlo[ws]))
+    whi = whi.at[ws].set(jnp.where(miss, khi, whi[ws]))
+    wmeta = wmeta.at[ws].set(jnp.where(miss, t, wmeta[ws]))
+    widx = widx.at[ws].set(jnp.where(miss, kidx, widx[ws]))
+    wdkb = wdkb.at[ws].set(jnp.where(miss, kdkb, wdkb[ws]))
+
+    # single argmin = free slot < probation LRU < protected LRU (exact SLRU
+    # victim priority); padding (+MAX) is unreachable
+    tslot = jnp.argmin(mmeta)
+    vmeta = mmeta[tslot]
+    m_free = vmeta < 0
+    # fused TinyLFU verdict from stored probes (post-record sketch state)
+    est = _estimate_pair(spec, counters, dk,
+                         jnp.stack([cand_idx, midx[tslot]]),
+                         jnp.stack([cand_dkb, mdkb[tslot]]))
+    admit = est[0] > est[1]
+    do_ins = push & (m_free | admit)
+    mlo = mlo.at[tslot].set(jnp.where(do_ins, cand_lo, mlo[tslot]))
+    mhi = mhi.at[tslot].set(jnp.where(do_ins, cand_hi, mhi[tslot]))
+    mmeta = mmeta.at[tslot].set(jnp.where(do_ins, t, mmeta[tslot]))
+    midx = midx.at[tslot].set(jnp.where(do_ins, cand_idx, midx[tslot]))
+    mdkb = mdkb.at[tslot].set(jnp.where(do_ins, cand_dkb, mdkb[tslot]))
+    pcount = pcount - (do_ins & (vmeta >= _PROT)).astype(jnp.int32)
+
+    # -- 5. bookkeeping ------------------------------------------------------
+    counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
+    regs = jnp.stack([size, pcount, t + 1, regs[R_HITS] + counted,
+                      regs[4], regs[5], regs[6], regs[7]])
+    new_state = {"counters": counters, "doorkeeper": dk,
+                 "wlo": wlo, "whi": whi, "wmeta": wmeta,
+                 "widx": widx, "wdkb": wdkb,
+                 "mlo": mlo, "mhi": mhi, "mmeta": mmeta,
+                 "midx": midx, "mdkb": mdkb, "regs": regs}
+    return new_state, hit.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# reference backend: lax.scan over the chunk (jit twin of the fused kernel)
+# ---------------------------------------------------------------------------
+
+def step_ref(spec: StepSpec, params: jnp.ndarray, state: dict,
+             lo: jnp.ndarray, hi: jnp.ndarray,
+             n_valid: jnp.ndarray | int | None = None, *, unroll: int = 4):
+    """Sequentially simulate ``lo/hi`` accesses; returns (state, hit_flags).
+
+    ``n_valid`` masks padded tails: accesses at positions >= n_valid leave the
+    state untouched and report hit=0.  Bit-for-bit identical to step_pallas.
+    """
+    (b,) = lo.shape
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    kidx, kdkb = precompute_probes(spec, lo, hi)
+
+    if n_valid is None:
+        # fast path: no tail masking, no per-step state merge
+        def body(carry, x):
+            klo, khi, ki, kd = x
+            return _one_access(spec, params, carry, klo, khi, ki, kd)
+
+        return jax.lax.scan(body, state, (lo, hi, kidx, kdkb), unroll=unroll)
+
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+
+    def body(carry, x):
+        klo, khi, ki, kd, i = x
+        new, hit = _one_access(spec, params, carry, klo, khi, ki, kd)
+        active = i < n_valid
+        merged = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(active, n, o), new, carry)
+        return merged, jnp.where(active, hit, 0)
+
+    xs = (lo, hi, kidx, kdkb, jnp.arange(b, dtype=jnp.int32))
+    return jax.lax.scan(body, state, xs, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel: whole chunk, state pinned in VMEM, buffers donated
+# ---------------------------------------------------------------------------
+
+_STATE_KEYS = ("counters", "doorkeeper", "wlo", "whi", "wmeta", "widx",
+               "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
+
+
+def _step_kernel(spec: StepSpec, lo_ref, hi_ref, kidx_ref, kdkb_ref,
+                 scal_ref, *refs):
+    n_state = len(_STATE_KEYS)
+    in_refs = refs[:n_state]
+    out_refs = refs[n_state:2 * n_state]
+    hits_ref = refs[2 * n_state]
+
+    params = jnp.stack([scal_ref[i] for i in range(NPARAMS)])
+    n_valid = scal_ref[NPARAMS]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    kidx = kidx_ref[...]
+    kdkb = kdkb_ref[...]
+    state0 = tuple(r[...] for r in in_refs)
+    hits0 = jnp.zeros(lo.shape, jnp.int32)
+
+    def body(i, carry):
+        state_t, hits = carry
+        state = dict(zip(_STATE_KEYS, state_t))
+        new, hit = _one_access(spec, params, state, lo[i], hi[i],
+                               kidx[i], kdkb[i])
+        return (tuple(new[k] for k in _STATE_KEYS),
+                hits.at[i].set(hit))
+
+    state_t, hits = jax.lax.fori_loop(0, n_valid, body, (state0, hits0))
+    for r, v in zip(out_refs, state_t):
+        r[...] = v
+    hits_ref[...] = hits
+
+
+def step_pallas(spec: StepSpec, params: jnp.ndarray, state: dict,
+                lo: jnp.ndarray, hi: jnp.ndarray,
+                n_valid: jnp.ndarray | int | None = None,
+                *, interpret: bool = True):
+    """Fused chunk step: one launch, state VMEM-resident and donated.
+
+    Same signature/semantics as :func:`step_ref`.  Probes are precomputed
+    vectorized outside the kernel (they are pure functions of the keys) and
+    streamed in with the key lanes.
+    """
+    (b,) = lo.shape
+    n_valid = b if n_valid is None else n_valid
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    kidx, kdkb = precompute_probes(spec, lo, hi)
+    scal = jnp.concatenate([
+        params.astype(jnp.int32),
+        jnp.asarray(n_valid, jnp.int32).reshape(1)])
+    kernel = functools.partial(_step_kernel, spec)
+    n_state = len(_STATE_KEYS)
+    state_vals = [state[k] for k in _STATE_KEYS]
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=tuple(
+            [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in state_vals]
+            + [jax.ShapeDtypeStruct((b,), jnp.int32)]),
+        in_specs=(
+            [pl.BlockSpec(memory_space=pltpu.VMEM)] * 4   # lo, hi, kidx, kdkb
+            + [pl.BlockSpec(memory_space=pltpu.SMEM)]     # packed scalars
+            + [pl.BlockSpec(memory_space=pltpu.VMEM)] * n_state),
+        out_specs=tuple([pl.BlockSpec(memory_space=pltpu.VMEM)]
+                        * (n_state + 1)),
+        # donate every state buffer: input i+5 -> output i
+        input_output_aliases={i + 5: i for i in range(n_state)},
+        interpret=interpret,
+    )(lo, hi, kidx, kdkb, scal, *state_vals)
+    new_state = dict(zip(_STATE_KEYS, outs[:n_state]))
+    return new_state, outs[n_state]

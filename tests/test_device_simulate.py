@@ -1,0 +1,141 @@
+"""Golden hit-ratio regressions for the device simulation engine.
+
+Pins host (`WTinyLFU` + `run_trace`) and device (`device_simulate`) hit
+ratios on two small fixed-seed traces so future refactors cannot silently
+change admission behavior.  Host and device use different hash families
+(64-bit splitmix vs 32-bit-lane mixers), so agreement is statistical — the
+golden tolerance is the acceptance band (±0.005), far above observed deltas
+(~2e-4) but far below any behavioral regression (getting window LRU, SLRU
+promotion, admission, or reset wrong moves these ratios by >0.01).
+"""
+import numpy as np
+import pytest
+
+from repro.core import WTinyLFU, run_trace
+from repro.core.device_simulate import (DeviceWTinyLFU, simulate_trace,
+                                        simulate_sweep)
+from repro.traces import zipf_trace
+from repro.traces.synthetic import zipf_probs, _sample_from_probs
+
+TOL = 0.005
+
+# pinned goldens (trace construction below must not change)
+GOLDEN_ZIPF_HOST = 0.3496
+GOLDEN_ZIPF_DEVICE = 0.3498
+GOLDEN_SCANHOT_HOST = 0.4834
+GOLDEN_SCANHOT_DEVICE = 0.4837
+
+
+def golden_zipf_trace():
+    return zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7)
+
+
+def scan_then_hotspot_trace():
+    """25k one-shot sequential scan (LRU poison) then a 35k Zipf(1.0)
+    hotspot over 2k items — the workload family admission exists for."""
+    rng = np.random.default_rng(13)
+    scan = np.arange(100_000, 125_000, dtype=np.int64)
+    hot = _sample_from_probs(zipf_probs(2_000, 1.0), 35_000,
+                             rng).astype(np.int64)
+    return np.concatenate([scan, hot])
+
+
+class TestGoldenZipf:
+    C, WARMUP = 200, 10_000
+
+    def test_host_matches_golden(self):
+        r = run_trace(WTinyLFU(self.C, sample_factor=8), golden_zipf_trace(),
+                      warmup=self.WARMUP, trace_name="golden-zipf")
+        assert abs(r.hit_ratio - GOLDEN_ZIPF_HOST) < TOL
+
+    def test_device_matches_golden_and_host(self):
+        tr = golden_zipf_trace()
+        d = simulate_trace(tr, self.C, warmup=self.WARMUP,
+                           trace_name="golden-zipf")
+        h = run_trace(WTinyLFU(self.C, sample_factor=8), tr,
+                      warmup=self.WARMUP)
+        assert abs(d.hit_ratio - GOLDEN_ZIPF_DEVICE) < TOL
+        assert abs(d.hit_ratio - h.hit_ratio) < TOL      # acceptance band
+        assert d.trace == "golden-zipf"
+        assert d.accesses == len(tr) - self.WARMUP
+
+
+class TestGoldenScanHotspot:
+    C, WARMUP = 400, 5_000
+
+    def test_host_and_device_match_golden(self):
+        tr = scan_then_hotspot_trace()
+        h = run_trace(WTinyLFU(self.C, sample_factor=8), tr,
+                      warmup=self.WARMUP)
+        d = simulate_trace(tr, self.C, warmup=self.WARMUP)
+        assert abs(h.hit_ratio - GOLDEN_SCANHOT_HOST) < TOL
+        assert abs(d.hit_ratio - GOLDEN_SCANHOT_DEVICE) < TOL
+        assert abs(d.hit_ratio - h.hit_ratio) < TOL
+
+
+def test_pallas_backend_matches_jit():
+    """Interpret-mode fused kernel == jit scan twin on a short prefix."""
+    tr = golden_zipf_trace()[:3000]
+    j = simulate_trace(tr, 100, backend="jit")
+    p = simulate_trace(tr, 100, backend="pallas", chunk=512)
+    assert p.hits == j.hits and p.accesses == j.accesses
+
+
+def test_sweep_matches_single_runs():
+    """Sequential sweeps use per-config host-matched sketch sizing, so each
+    grid point is bit-identical to its standalone simulate_trace run."""
+    tr = golden_zipf_trace()[:8000]
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=1000,
+                          mode="sequential")
+    for row in rows:
+        single = simulate_trace(tr, 100,
+                                window_frac=row.extra["window_frac"],
+                                warmup=1000)
+        assert row.hits == single.hits
+        assert row.extra["grid"] == 2
+
+
+def test_sweep_vmap_matches_sequential():
+    """The vmapped one-program grid (accelerator shape) reproduces the
+    sequential sweep exactly when the grid shares one capacity (identical
+    geometry => bit-identical); padding slots from the shared spec are
+    inert."""
+    tr = golden_zipf_trace()[:3000]
+    seq = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=500,
+                         mode="sequential")
+    vm = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=500,
+                        mode="vmap")
+    assert [r.hits for r in vm] == [r.hits for r in seq]
+
+
+def test_sweep_per_config_traces():
+    """(G, N) trace batches: one trace per grid point (seed sweeps)."""
+    tr = np.stack([zipf_trace(4000, n_items=3000, alpha=0.9, seed=s)
+                   for s in (1, 2)])
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=500)
+    assert len(rows) == 2
+    assert all(0.0 < r.hit_ratio < 1.0 for r in rows)
+    assert rows[0].hits != rows[1].hits          # different traces
+
+
+def test_sizing_mirrors_host_defaults():
+    """DeviceWTinyLFU reproduces the host WTinyLFU/default_sketch sizing."""
+    cfg = DeviceWTinyLFU(1000)
+    host = WTinyLFU(1000, sample_factor=8)
+    assert cfg.window_cap == host.window_cap
+    assert cfg.main_cap == host.main_cap
+    assert cfg.prot_cap == host.main.prot_cap
+    sk = host.admission.sketch.cfg
+    assert cfg.sample_size == sk.sample_size
+    assert cfg.cap == sk.cap
+    assert cfg.width == sk.width
+    assert cfg.dk_bits == sk.doorkeeper_bits
+
+
+def test_run_trace_trace_name_label():
+    """Satellite fix: run_trace labels single-trace results."""
+    tr = golden_zipf_trace()[:2000]
+    r = run_trace(WTinyLFU(50, sample_factor=8), tr, trace_name="mytrace")
+    assert r.trace == "mytrace"
+    r2 = run_trace(WTinyLFU(50, sample_factor=8), tr)
+    assert r2.trace == "?"

@@ -7,7 +7,7 @@ streams.  Everything is integer so comparisons are exact (assert_array_equal).
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hashing import probe_indices32_np, key_to_lanes, mix32_np
 from repro.kernels import (DeviceSketchConfig, init_state, keys_to_lanes,

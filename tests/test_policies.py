@@ -1,7 +1,7 @@
 """Behavioural tests for eviction/replacement policies + TinyLFU admission."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Cache, LRUEviction, FIFOEviction, RandomEviction,
                         LFUEviction, SLRUEviction, ARC, LIRS, TwoQ, WLFU,

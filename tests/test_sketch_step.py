@@ -1,0 +1,208 @@
+"""Differential tests for the fused W-TinyLFU step (kernels/sketch_step.py).
+
+Three independent oracles pin the kernel's semantics:
+
+1. the pure-jnp scan twin (`step_ref`) — `step_pallas` must match it
+   bit-for-bit: state arrays AND per-access hit flags, across chunk splits,
+   padded tails, and reset boundaries that straddle chunks;
+2. the existing jnp sketch oracle (`kernels/ref.py`) — the sketch substate
+   (counters + doorkeeper) after a step equals `add_ref` over the same keys,
+   and estimates derived from the step state equal `estimate_ref`;
+3. the host implementation (`core.wtinylfu.WTinyLFU` +
+   `FrequencySketch`/`TinyLFUAdmission`) — with collision-free sketches on
+   both sides the hash family cannot matter, and the device per-access hit
+   sequence must equal the host's bit-for-bit (window LRU + SLRU promotion /
+   demotion + admission verdicts + reset timing all agree exactly).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.wtinylfu import WTinyLFU
+from repro.kernels import ref
+from repro.kernels.sketch_common import DeviceSketchConfig, keys_to_lanes
+from repro.kernels.sketch_step import (StepSpec, make_step_params,
+                                       init_step_state, step_ref, step_pallas,
+                                       R_SIZE, R_HITS, R_T)
+
+
+def lanes(keys):
+    lo, hi = keys_to_lanes(np.asarray(keys, np.uint64))
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def run_ref(spec, params, keys, state=None):
+    lo, hi = lanes(keys)
+    state = init_step_state(spec) if state is None else state
+    return step_ref(spec, params, state, lo, hi)
+
+
+def run_pallas_chunks(spec, params, keys, chunk):
+    state = init_step_state(spec)
+    hits = []
+    keys = np.asarray(keys, np.uint64)
+    for s in range(0, len(keys), chunk):
+        part = keys[s:s + chunk]
+        pad = chunk - len(part)
+        lo, hi = lanes(np.concatenate([part, np.zeros(pad, np.uint64)]))
+        state, h = step_pallas(spec, params, state, lo, hi,
+                               n_valid=len(part))
+        hits.append(np.asarray(h)[:len(part)])
+    return state, np.concatenate(hits)
+
+
+def assert_state_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"state[{k}] differs")
+
+
+SPECS = [
+    # (spec, params) sweeping rows / width / doorkeeper / cap
+    (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2, main_slots=60),
+     make_step_params(2, 60, 48, 500, 7, 0)),
+    (StepSpec(width=1024, rows=2, dk_bits=0, window_slots=5, main_slots=45),
+     make_step_params(5, 45, 36, 400, 15, 0)),
+    (StepSpec(width=512, rows=1, dk_bits=2048, window_slots=1, main_slots=30),
+     make_step_params(1, 30, 24, 0, 3, 0)),     # sample=0: never reset
+    (StepSpec(width=2048, rows=5, dk_bits=4096, window_slots=10,
+              main_slots=90),
+     make_step_params(10, 90, 72, 1000, 1, 0)),  # cap=1: instant saturation
+]
+
+
+@pytest.mark.parametrize("spec,params", SPECS)
+@pytest.mark.parametrize("chunk", [128, 500])
+def test_pallas_matches_ref_bitwise(spec, params, chunk):
+    """Fused kernel == scan twin: state and hit flags, across chunk splits
+    and padded tails (1500 accesses is not a multiple of either chunk)."""
+    rng = np.random.default_rng(spec.width + chunk)
+    keys = rng.integers(0, 500, size=1500, dtype=np.uint64)
+    s_ref, h_ref = run_ref(spec, params, keys)
+    s_pal, h_pal = run_pallas_chunks(spec, params, keys, chunk)
+    assert_state_equal(s_ref, s_pal)
+    np.testing.assert_array_equal(np.asarray(h_ref), h_pal)
+
+
+def test_reset_straddles_chunk_boundary():
+    """W=700 with 500-element chunks: the §3.3 reset fires mid-chunk-2 and
+    must land identically whether the stream is chunked or not."""
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2,
+                    main_slots=40)
+    params = make_step_params(2, 40, 32, 700, 7, 0)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 300, size=1200, dtype=np.uint64)
+    s_ref, _ = run_ref(spec, params, keys)
+    s_pal, _ = run_pallas_chunks(spec, params, keys, 500)
+    assert_state_equal(s_ref, s_pal)
+    # the reset actually happened: 1200 adds, W=700 -> size = 1200 - 700/2*?
+    size = int(np.asarray(s_ref["regs"])[R_SIZE])
+    assert size < 1200 and int(np.asarray(s_ref["regs"])[R_T]) == 1200
+
+
+def test_sketch_substate_matches_add_ref():
+    """The per-access sketch add inside the fused step is bit-for-bit the
+    existing jnp oracle's sequential add (no reset, cap matched)."""
+    spec = StepSpec(width=512, rows=4, dk_bits=2048, window_slots=4,
+                    main_slots=50)
+    params = make_step_params(4, 50, 40, 0, 15, 0)
+    cfg = DeviceSketchConfig(width=512, rows=4, cap=15, dk_bits=2048,
+                             sample_size=0)
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 10_000, size=800, dtype=np.uint64)
+    keys = np.concatenate([keys, keys[:200]])            # in-batch duplicates
+    s_step, _ = run_ref(spec, params, keys)
+    lo, hi = keys_to_lanes(keys)
+    s_ora = ref.add_ref(cfg, {
+        "counters": jnp.zeros((4, 512 // 8), jnp.int32),
+        "doorkeeper": jnp.zeros((1, 2048 // 32), jnp.int32),
+        "size": jnp.zeros((), jnp.int32)}, lo, hi)
+    np.testing.assert_array_equal(
+        np.asarray(s_step["counters"]).reshape(4, 512 // 8),
+        np.asarray(s_ora["counters"]))
+    np.testing.assert_array_equal(
+        np.asarray(s_step["doorkeeper"]).reshape(-1),
+        np.asarray(s_ora["doorkeeper"]).reshape(-1))
+
+
+def test_cap_saturation_hot_key():
+    """Adversarial stream: one key hammered past cap; counters must pin at
+    cap and the estimate (via estimate_ref on the step's sketch state) at
+    cap + doorkeeper bonus."""
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=1,
+                    main_slots=10)
+    params = make_step_params(1, 10, 8, 0, 7, 0)
+    keys = np.full(100, 42, np.uint64)
+    s, hits = run_ref(spec, params, keys)
+    cfg = DeviceSketchConfig(width=256, rows=4, cap=7, dk_bits=1024,
+                             sample_size=0)
+    est = ref.estimate_ref(cfg, {
+        "counters": jnp.asarray(np.asarray(s["counters"]).reshape(4, 32)),
+        "doorkeeper": jnp.asarray(
+            np.asarray(s["doorkeeper"]).reshape(1, -1)),
+        "size": jnp.zeros((), jnp.int32)}, *lanes(keys[:1]))
+    assert int(est[0]) == 8          # cap 7 + doorkeeper bonus
+    # first access misses, the other 99 hit the window
+    assert int(np.asarray(hits).sum()) == 99
+
+
+def test_padded_tail_is_inert():
+    """n_valid masking: padded accesses change nothing, for both backends."""
+    spec, params = SPECS[0]
+    rng = np.random.default_rng(8)
+    keys = rng.integers(0, 200, size=300, dtype=np.uint64)
+    s_short, h_short = run_ref(spec, params, keys)
+    padded = np.concatenate([keys, np.zeros(100, np.uint64)])
+    lo, hi = lanes(padded)
+    s_pad, h_pad = step_ref(spec, params, init_step_state(spec), lo, hi,
+                            n_valid=300)
+    assert_state_equal(s_short, s_pad)
+    np.testing.assert_array_equal(np.asarray(h_short),
+                                  np.asarray(h_pad)[:300])
+    assert int(np.asarray(h_pad)[300:].sum()) == 0
+
+
+def test_padded_slots_match_tight_spec():
+    """A spec with more static slots than the configured capacities behaves
+    bit-for-bit like the tight spec (vmapped-sweep padding is inert)."""
+    tight = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2,
+                     main_slots=40)
+    padded = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                      main_slots=128)
+    params = make_step_params(2, 40, 32, 500, 7, 0)
+    rng = np.random.default_rng(21)
+    keys = rng.integers(0, 400, size=2000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    _, h_tight = step_ref(tight, params, init_step_state(tight), lo, hi)
+    _, h_pad = step_ref(padded, params,
+                        init_step_state(padded, window_cap=2, main_cap=40),
+                        lo, hi)
+    np.testing.assert_array_equal(np.asarray(h_tight), np.asarray(h_pad))
+
+
+def test_host_oracle_hit_sequence_bitwise():
+    """Collision-free sketches on both sides remove the hash family from the
+    equation: the fused step must reproduce the host WTinyLFU per-access hit
+    sequence exactly — window LRU, SLRU promotion/demotion, admission
+    verdicts, and reset timing all agree."""
+    from repro.traces import zipf_trace
+    C = 60
+    spec = StepSpec(width=1 << 16, rows=4, dk_bits=0, window_slots=1,
+                    main_slots=C - 1)
+    params = make_step_params(1, C - 1, int((C - 1) * 0.8), 8 * C, 8, 0)
+    tr = zipf_trace(5000, n_items=300, alpha=0.9, seed=5)
+    _, hits = run_ref(spec, params, tr.astype(np.uint64))
+    host = WTinyLFU(C, window_frac=0.01, sample_factor=8, doorkeeper=False,
+                    counters_per_item=550.0)
+    host_hits = np.array([host.access(int(k)) for k in tr], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+
+
+def test_hits_register_counts_post_warmup():
+    spec, _ = SPECS[0]
+    params = make_step_params(2, 60, 48, 500, 7, 100)    # warmup=100
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 50, size=400, dtype=np.uint64)
+    s, hits = run_ref(spec, params, keys)
+    counted = int(np.asarray(hits)[100:].sum())
+    assert int(np.asarray(s["regs"])[R_HITS]) == counted
