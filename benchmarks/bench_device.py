@@ -1,6 +1,6 @@
 """Host-vs-device simulation engine throughput (ours; ROADMAP north star).
 
-Three measurements on the same golden Zipf trace:
+Four measurements on the same golden Zipf trace:
 
 1. **trace engine, exact semantics** — `run_trace(WTinyLFU)` (pure-Python
    per-access loop) vs `device_simulate.simulate_trace` (whole trace as one
@@ -18,12 +18,20 @@ Three measurements on the same golden Zipf trace:
    is expected to clear 10x even on CPU; the sequential trace engines above
    are reported as honest engine-vs-engine numbers for the current backend
    (CPU jit / interpret-mode Pallas stand-ins for the TPU deployment).
+4. **capacity scaling** — the flat exact engine's per-access argmin is
+   O(capacity); the set-associative tables (`assoc=8`) are O(ways).  Both
+   engines run the golden Zipf trace at growing C; the set path must stay
+   near-flat from C=512 to C=65536 and clear >= 5x the flat engine at
+   C >= 8192 (ISSUE 2 acceptance).
 
 All wall times are best-of-N to sidestep noisy-neighbour jitter; JSON rows
-record every measurement.
+record every measurement, and a compact perf snapshot is written to
+``BENCH_device.json`` at the repo root so CI tracks the trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -33,6 +41,8 @@ from repro.core.sketch import default_sketch
 from repro.core.tinylfu import TinyLFUAdmission
 from repro.traces import zipf_trace
 from .common import save
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _best_of(fn, n=3):
@@ -152,6 +162,49 @@ def run(quick: bool = False):
                  "host_record_wall_s": round(host_rec, 3),
                  "speedup": round(host_dec / dev_dec, 1),
                  "device": backend})
+
+    # -- 4. capacity scaling: flat O(C) argmin vs set-associative O(ways) ----
+    golden = (tr if length == 60_000
+              else zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7))
+    flat_caps = [512, 8192]
+    assoc_caps = [512, 8192, 65536]
+    acc = {}
+    for label, caps, kw in [("scan(flat)", flat_caps, {}),
+                            ("set-assoc(w=8)", assoc_caps, {"assoc": 8})]:
+        for Cs in caps:
+            simulate_trace(golden, Cs, **kw)             # compile once
+            wall, res = _best_of(
+                lambda: simulate_trace(golden, Cs, trace_name="golden-zipf",
+                                       **kw), n=2)
+            acc[(label, Cs)] = len(golden) / wall
+            rows.append({"trace": "golden-zipf", "engine": f"scaling:{label}",
+                         "cache_size": Cs, "accesses": len(golden),
+                         "wall_s": round(wall, 3),
+                         "acc_per_s": round(len(golden) / wall),
+                         "hit_ratio": res.hit_ratio, "device": backend})
+            print(f"  {label:<16s} C={Cs:<6d} "
+                  f"{len(golden) / wall:>12,.0f} acc/s", flush=True)
+    speedup = acc[("set-assoc(w=8)", 8192)] / acc[("scan(flat)", 8192)]
+    flatness = acc[("set-assoc(w=8)", 512)] / acc[("set-assoc(w=8)", 65536)]
+    print(f"  set-assoc vs flat at C=8192: {speedup:.1f}x; "
+          f"per-access cost growth 512->65536: {flatness:.2f}x", flush=True)
+    rows.append({"trace": "golden-zipf", "engine": "speedup:set-assoc@8192",
+                 "speedup": round(speedup, 2),
+                 "flatness_512_to_65536": round(flatness, 2)})
+
+    # -- perf snapshot at the repo root: the numbers CI tracks across PRs ----
+    snapshot = {
+        "device": backend,
+        "trace_engine_acc_per_s": round(length / dev_wall),
+        "assoc_acc_per_s_small_C": round(acc[("set-assoc(w=8)", 512)]),
+        "assoc_acc_per_s_large_C": round(acc[("set-assoc(w=8)", 65536)]),
+        "flat_acc_per_s_8192": round(acc[("scan(flat)", 8192)]),
+        "assoc_speedup_vs_flat_8192": round(speedup, 2),
+        "assoc_flatness_512_to_65536": round(flatness, 2),
+        "batched_dec_per_s": round(n_dec / dev_dec),
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
+        json.dump(snapshot, f, indent=1)
 
     save(rows, "device_throughput")
     return rows

@@ -81,15 +81,15 @@ def device_rows(trace: np.ndarray, cache_sizes, *, window_fracs=(0.01,),
     rows = []
     for r in results:
         wf = r.extra["window_frac"]
-        grid = r.extra["grid"]
         name = ("W-TinyLFU(dev)" if wf == 0.01
                 else f"W-TinyLFU(dev,{wf:.0%})")
         rows.append({
+            # SimResult.wall_s is already per-row amortized (the whole
+            # grid's wall lives in extra["grid_wall_s"])
             "trace": trace_name, "policy": name, "cache_size": r.cache_size,
             "hit_ratio": r.hit_ratio, "accesses": r.accesses,
-            # SimResult.wall_s is the WHOLE grid's wall; amortize so
-            # accesses/wall_s is per-config and comparable to host rows
-            "wall_s": round(r.wall_s / grid, 2), "grid": grid,
+            "wall_s": round(r.wall_s, 2), "grid": r.extra["grid"],
+            "grid_wall_s": round(r.extra["grid_wall_s"], 2),
             "backend": r.extra["backend"],
         })
     return rows

@@ -45,13 +45,22 @@ from repro.kernels.sketch_step import (StepSpec, make_step_params,
                                        init_step_state, step_ref, step_pallas,
                                        R_HITS)
 from repro.kernels.sketch_common import keys_to_lanes
+from .hashing import assoc_geometry, slots_for
 from .sketch import _pow2ceil
 from .simulate import SimResult
 
 
 @dataclass(frozen=True)
 class DeviceWTinyLFU:
-    """One simulated W-TinyLFU configuration (host-side description)."""
+    """One simulated W-TinyLFU configuration (host-side description).
+
+    ``assoc=None`` uses the exact flat tables (global LRU/SLRU, O(capacity)
+    per access); ``assoc=W`` uses W-way set-associative tables (per-set
+    LRU/SLRU, O(W) per access — the production-scale path).
+    ``counter_bits=8`` doubles the sketch footprint but lifts the counter cap
+    from 15 to 255, so ``sample_factor`` above 16 no longer needs the host
+    engine.
+    """
     capacity: int
     window_frac: float = 0.01
     sample_factor: int = 8
@@ -60,6 +69,8 @@ class DeviceWTinyLFU:
     rows: int = 4
     doorkeeper: bool = True
     dk_bits_per_item: float = 4.0
+    assoc: int | None = None
+    counter_bits: int = 4
 
     @property
     def window_cap(self) -> int:
@@ -79,8 +90,9 @@ class DeviceWTinyLFU:
 
     @property
     def cap(self) -> int:
-        return min(15, max(1, self.sample_factor
-                           - (1 if self.doorkeeper else 0)))
+        cmax = (1 << self.counter_bits) - 1
+        return min(cmax, max(1, self.sample_factor
+                             - (1 if self.doorkeeper else 0)))
 
     @property
     def width(self) -> int:
@@ -95,17 +107,38 @@ class DeviceWTinyLFU:
         return max(32, _pow2ceil(int(self.sample_size
                                      * self.dk_bits_per_item)))
 
+    @property
+    def ways(self) -> int | None:
+        """Static gather width in set mode: >= assoc, from the main table's
+        geometry (the window shares it so both tables use one block shape)."""
+        if self.assoc is None:
+            return None
+        return assoc_geometry(self.main_cap, self.assoc)[1]
+
+    def _table_slots(self, cap: int, ways: int | None = None) -> int:
+        """Static slots to host ``cap`` entries: the capacity itself (flat),
+        or pow2 sets × ways (set-associative) with the excess marked padding
+        at init.  ``ways`` overrides for vmapped sweeps sharing the largest
+        configuration's block shape."""
+        if self.assoc is None:
+            return cap
+        return slots_for(cap, ways or self.ways)
+
     def spec(self, window_slots: int | None = None,
-             main_slots: int | None = None) -> StepSpec:
+             main_slots: int | None = None,
+             ways: int | None = None) -> StepSpec:
         """Static geometry; slots may be padded up for vmapped sweeps."""
         return StepSpec(
             width=self.width, rows=self.rows, dk_bits=self.dk_bits,
-            window_slots=window_slots or self.window_cap,
-            main_slots=main_slots or self.main_cap)
+            window_slots=window_slots or self._table_slots(self.window_cap),
+            main_slots=main_slots or self._table_slots(self.main_cap),
+            assoc=(ways or self.ways) if self.assoc is not None else None,
+            counter_bits=self.counter_bits)
 
     def params(self, warmup: int = 0) -> jnp.ndarray:
         return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
-                                self.sample_size, self.cap, warmup)
+                                self.sample_size, self.cap, warmup,
+                                counter_bits=self.counter_bits)
 
 
 def _trace_lanes(trace: np.ndarray):
@@ -173,6 +206,9 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     ``backend="jit"`` runs the scan twin; ``backend="pallas"`` launches the
     fused kernel per chunk (interpret mode anywhere off-TPU).  ``warmup``
     accesses update state but are not counted, exactly like ``run_trace``.
+    ``assoc=W`` (via cfg_kw) selects the W-way set-associative tables —
+    O(W) per access instead of O(capacity), hit ratios within ±0.01 of the
+    exact path; ``counter_bits=8`` enables sample factors above 16.
     """
     cfg = DeviceWTinyLFU(capacity, window_frac=window_frac,
                          sample_factor=sample_factor, **cfg_kw)
@@ -200,6 +236,7 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
                     hit_ratio=int(regs[R_HITS]) / max(1, counted),
                     wall_s=wall,
                     extra={"backend": backend, "window_frac": window_frac,
+                           "assoc": cfg.assoc,
                            "device": jax.default_backend()})
     if return_state:
         return res, state, hits
@@ -253,8 +290,25 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         # one program for the whole grid: shared (largest) static geometry,
         # per-config capacities traced, excess slots marked as padding
         big = max(grid, key=lambda c: c.capacity)
-        spec = big.spec(window_slots=max(c.window_cap for c in grid),
-                        main_slots=max(c.main_cap for c in grid))
+        # set mode: the whole grid shares the largest config's block shape
+        # (ways).  A member whose main_cap falls below the shared MAIN set
+        # count would leave most of its sets zero-way — keys could never
+        # enter its main table and its hit ratio would silently collapse —
+        # so such grids are rejected toward sequential mode.  (Zero-way
+        # WINDOW sets are fine: those accesses bypass to main admission.)
+        mslots = max(c._table_slots(c.main_cap, big.ways) for c in grid)
+        if big.assoc is not None:
+            msets = mslots // big.ways
+            for c in grid:
+                if c.main_cap < msets:
+                    raise ValueError(
+                        f"vmap assoc sweep: main_cap {c.main_cap} < shared "
+                        f"{msets} sets (capacity {c.capacity} vs "
+                        f"{big.capacity}); run mode='sequential'")
+        spec = big.spec(
+            window_slots=max(c._table_slots(c.window_cap, big.ways)
+                             for c in grid),
+            main_slots=mslots, ways=big.ways)
         pstack = jnp.stack([c.params(warmup=warmup) for c in grid])
         sstack = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs),
@@ -299,9 +353,13 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         out.append(SimResult(
             policy="w-tinylfu(device)", cache_size=C, trace=trace_name,
             accesses=counted, hits=hits, hit_ratio=hits / max(1, counted),
-            wall_s=wall, extra={"backend": f"jit+{mode}", "window_frac": wf,
-                                "grid": len(grid),
-                                "device": jax.default_backend()}))
+            # per-row amortized wall so accesses/wall_s is per-config and
+            # comparable to host rows; the grid's total is in grid_wall_s
+            wall_s=wall / len(grid),
+            extra={"backend": f"jit+{mode}", "window_frac": wf,
+                   "grid": len(grid), "grid_wall_s": wall,
+                   "assoc": grid[g].assoc,
+                   "device": jax.default_backend()}))
         if verbose:
             print(f"  {trace_name:>12s} C={C:<7d} wf={wf:<5.2f} "
                   f"hit={out[-1].hit_ratio:.4f}  (grid of {len(grid)}, "

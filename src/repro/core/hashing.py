@@ -56,6 +56,12 @@ MIX32_M2 = 0x846CA68B
 PROBE_SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F,
                0x165667B1, 0xD3A2646C, 0xFD7046C5, 0xB55A4F09)
 
+# set-index salts for the set-associative cache tables (distinct from every
+# probe/doorkeeper salt so set placement is uncorrelated with sketch probes)
+WSET_SALT = 0x1B873593          # window table set hash
+MSET_SALT = 0xCC9E2D51          # main (SLRU) table: first-choice set hash
+MSET2_SALT = 0x38495AB5         # main table: second-choice set hash
+
 
 def mix32_np(x: np.ndarray) -> np.ndarray:
     """Reference (numpy) implementation of the 32-bit mixer used on device."""
@@ -88,3 +94,66 @@ def key_to_lanes(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
     hi = (keys >> np.uint64(32)).astype(np.uint32)
     return lo, hi
+
+
+def set_index32_np(keys: np.ndarray, n_sets: int, salt: int) -> np.ndarray:
+    """Set index of each key in an ``n_sets``-way-partitioned table (pow2).
+
+    Bit-for-bit the device's set hash (kernels/sketch_common.set_index): the
+    host twin ``SetAssociativeSLRU`` and the device tables place every key in
+    the same set, which is what makes hit-sequence parity testable.
+    """
+    assert n_sets & (n_sets - 1) == 0, "set count must be a power of 2"
+    lo, hi = key_to_lanes(keys)
+    s = np.uint32(salt)
+    h = mix32_np(lo + s) ^ mix32_np(hi ^ np.uint32(0x85EBCA6B) ^ s)
+    return (h & np.uint32(n_sets - 1)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# set-associative geometry (shared by host twin and device init)
+# ---------------------------------------------------------------------------
+
+def _pow2floor(x: int) -> int:
+    return 1 << (max(1, int(x)).bit_length() - 1)
+
+
+def assoc_geometry(capacity: int, assoc: int) -> tuple[int, int]:
+    """(n_sets, ways) hosting ``capacity`` entries at >= ``assoc`` ways/set.
+
+    The set count rounds DOWN to a power of two so the static ways per set
+    land in [assoc, 2*assoc): rounding the set count up instead would leave
+    sets *narrower* than requested after the capacity is distributed, which
+    measurably hurts hit ratio on skewed traces.  Tiny capacities collapse
+    to one set (exact LRU/SLRU semantics).
+    """
+    assert capacity >= 1 and assoc >= 1
+    if capacity <= assoc:
+        return 1, capacity
+    n = max(1, _pow2floor(capacity // assoc))
+    return n, -(-capacity // n)                      # ways = ceil(cap/sets)
+
+
+def slots_for(capacity: int, ways: int) -> int:
+    """Table slots for ``capacity`` entries at a FIXED static ``ways``:
+    pow2 set count, smallest with sets*ways >= capacity (vmapped sweeps pad
+    every grid member to the shared ways of the largest configuration)."""
+    need = -(-capacity // ways)                      # ceil
+    return (1 << max(0, need - 1).bit_length()) * ways
+
+
+def set_ways(capacity: int, n_sets: int) -> list[int]:
+    """Usable ways per set expressing ``capacity`` exactly over ``n_sets``.
+
+    The first ``capacity % n_sets`` sets get one extra way — this is the
+    padding rule the device tables bake in at init time, so vmapped sweeps
+    can express any capacity below the static slot count.  A capacity below
+    the set count leaves the excess sets with zero usable ways (vmapped
+    sweeps whose shared geometry dwarfs a grid member, or window tables
+    whose pow2 set count rounds above a tiny window_cap): an access hashing
+    to a zero-way window set bypasses the window and goes straight to main
+    admission — identically on the device kernel and the host twin.
+    """
+    assert capacity >= 1
+    base, rem = divmod(capacity, n_sets)
+    return [base + (1 if s < rem else 0) for s in range(n_sets)]

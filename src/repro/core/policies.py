@@ -16,6 +16,11 @@ from collections import OrderedDict, deque, Counter
 import random
 from typing import Optional
 
+import numpy as np
+
+from .hashing import (assoc_geometry, set_ways, set_index32_np,
+                      MSET_SALT, MSET2_SALT)
+
 
 # ===========================================================================
 # Pluggable evictions
@@ -202,6 +207,115 @@ class SLRUEviction(Eviction):
 
     def keys(self):
         return list(self.probation.keys()) + list(self.protected.keys())
+
+
+class SetAssociativeSLRU(Eviction):
+    """Host twin of the device set-associative SLRU main table
+    (kernels/sketch_step.py ``_one_access_set``).
+
+    Layout and semantics mirror the device exactly: pow2 sets of ``ways``
+    (>= ``assoc``) slots sized by ``core.hashing.assoc_geometry``/``set_ways``,
+    power-of-two-choices placement (``MSET_SALT``/``MSET2_SALT`` 32-bit-lane
+    set hashes — a key resides in exactly one of its two choice sets),
+    per-set protected budget ``max(1, usable * prot_cap // capacity)``, and
+    victim priority empty < probation LRU < protected LRU across the key's
+    two sets with the first-choice set winning ties.  Stamps are
+    caller-provided monotone access indices so ``WTinyLFU(assoc=...)``
+    reproduces the device engine's per-access hit sequence bit-for-bit
+    (tests pin this with collision-free sketches).
+    """
+    name = "slru-assoc"
+
+    def __init__(self, capacity: int, assoc: int = 8,
+                 protected_frac: float = 0.8):
+        super().__init__(capacity)
+        self.n_sets, self.ways = assoc_geometry(capacity, assoc)
+        self.usable = set_ways(capacity, self.n_sets)
+        self.prot_cap = max(1, int(capacity * protected_frac))
+        # per set: key -> [protected: bool, stamp: int]
+        self.slots: list[dict] = [dict() for _ in range(self.n_sets)]
+        self.home: dict = {}              # key -> resident set index
+        self._memo: dict = {}             # key -> (choice set 1, choice set 2)
+        self.t = 0                        # auto-stamp for standalone use
+
+    def _stamp(self, stamp: Optional[int]) -> int:
+        if stamp is None:
+            stamp = self.t
+            self.t += 1
+        return stamp
+
+    _MEMO_LIMIT = 2_000_000           # hash memo safety valve (scan traces)
+
+    def sets_of(self, key) -> tuple[int, int]:
+        p = self._memo.get(key)
+        if p is None:
+            k = np.asarray([key], np.uint64)
+            p = (int(set_index32_np(k, self.n_sets, MSET_SALT)[0]),
+                 int(set_index32_np(k, self.n_sets, MSET2_SALT)[0]))
+            if len(self._memo) >= self._MEMO_LIMIT:
+                self._memo.clear()
+            self._memo[key] = p
+        return p
+
+    def __contains__(self, key): return key in self.home
+    def __len__(self): return len(self.home)
+    def keys(self): return list(self.home)
+
+    def _prot_budget(self, s: int) -> int:
+        return max(1, self.usable[s] * self.prot_cap // max(1, self.capacity))
+
+    def on_hit(self, key, stamp: Optional[int] = None) -> None:
+        """Promote-or-refresh to protected MRU; overflow demotes the set's
+        protected LRU back to probation MRU (device step 3b)."""
+        stamp = self._stamp(stamp)
+        s = self.home[key]
+        st = self.slots[s]
+        st[key] = [True, stamp]
+        if sum(1 for p, _ in st.values() if p) > self._prot_budget(s):
+            demote = min((k for k, (p, _) in st.items() if p),
+                         key=lambda k: st[k][1])
+            st[demote] = [False, stamp]
+
+    def victim_for(self, key) -> tuple[int, object]:
+        """Where an insert of ``key`` would land: ``(set, None)`` for a free
+        way, else ``(set, victim_key)`` — the weakest of the two choice
+        sets' records (device step 5's argmin over the 2*ways concat)."""
+        s1, s2 = self.sets_of(key)
+        for s in (s1, s2):
+            if len(self.slots[s]) < self.usable[s]:
+                return s, None
+        best = None
+        for s in (s1, s2):
+            for k, (p, stmp) in self.slots[s].items():
+                if best is None or (p, stmp) < best[:2]:
+                    best = (p, stmp, s, k)
+        return best[2], best[3]
+
+    def insert(self, key, set_index: int, stamp: Optional[int] = None) -> None:
+        """Place ``key`` in ``set_index`` as probation MRU (admitted or
+        free-way insert; the set comes from :meth:`victim_for`)."""
+        self.slots[set_index][key] = [False, self._stamp(stamp)]
+        self.home[key] = set_index
+
+    def remove(self, key) -> None:
+        del self.slots[self.home.pop(key)][key]
+
+    # -- Eviction-interface conveniences for standalone composition ----------
+    def add(self, key) -> None:
+        s, victim = self.victim_for(key)
+        if victim is not None:
+            self.remove(victim)
+        self.insert(key, s)
+
+    def peek_victim(self):
+        """Globally weakest record (O(capacity) — diagnostics only; the
+        device-faithful query is the per-key :meth:`victim_for`)."""
+        best = None
+        for st in self.slots:
+            for k, (p, stmp) in st.items():
+                if best is None or (p, stmp) < best[:2]:
+                    best = (p, stmp, k)
+        return best[2] if best else None
 
 
 # ===========================================================================

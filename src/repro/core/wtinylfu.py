@@ -11,12 +11,22 @@ Flow per access:
 
 Caffeine 2.0 defaults: window = 1% of total capacity, main = 99% with an
 80/20 protected/probation SLRU split.
+
+``assoc=W`` switches both tables to the set-associative layout — a host twin
+of the device engine's O(ways) tables (kernels/sketch_step.py): the window
+becomes per-set LRU and the main cache a ``SetAssociativeSLRU``
+(power-of-two-choices placement, per-set protected budgets).  With
+collision-free sketches the assoc host and device engines produce identical
+per-access hit sequences (tests/test_sketch_step.py pins this).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 
-from .policies import SLRUEviction, ReplacementPolicy
+import numpy as np
+
+from .hashing import slots_for, set_ways, set_index32_np, WSET_SALT
+from .policies import SLRUEviction, SetAssociativeSLRU, ReplacementPolicy
 from .sketch import default_sketch
 from .tinylfu import TinyLFUAdmission
 
@@ -27,21 +37,52 @@ class WTinyLFU(ReplacementPolicy):
     def __init__(self, capacity: int, window_frac: float = 0.01,
                  sample_factor: int = 8, protected_frac: float = 0.8,
                  seed: int = 0, counters_per_item: float = 1.0,
-                 doorkeeper: bool = True):
+                 doorkeeper: bool = True, assoc: int | None = None):
         super().__init__(capacity)
         self.window_cap = max(1, int(round(capacity * window_frac)))
         self.main_cap = max(1, capacity - self.window_cap)
-        self.window: OrderedDict = OrderedDict()
-        self.main = SLRUEviction(self.main_cap, protected_frac=protected_frac)
+        self.assoc = assoc
+        if assoc is None:
+            self.window: OrderedDict = OrderedDict()
+            self.main = SLRUEviction(self.main_cap,
+                                     protected_frac=protected_frac)
+        else:
+            self.main = SetAssociativeSLRU(self.main_cap, assoc=assoc,
+                                           protected_frac=protected_frac)
+            # the window shares the main table's static ways (one block
+            # shape on device); per-set LRU over pow2 window sets
+            ways = self.main.ways
+            self._n_wsets = slots_for(self.window_cap, ways) // ways
+            self._wusable = set_ways(self.window_cap, self._n_wsets)
+            self._wsets = [OrderedDict() for _ in range(self._n_wsets)]
+            self._wset_memo: dict = {}
+            self._t = 0                    # device-matching LRU stamp
         sketch = default_sketch(capacity, sample_factor=sample_factor,
                                 seed=seed, counters_per_item=counters_per_item,
                                 doorkeeper=doorkeeper)
         self.admission = TinyLFUAdmission(sketch)
 
     def __contains__(self, key):
-        return key in self.window or key in self.main
+        if self.assoc is None:
+            return key in self.window or key in self.main
+        return (key in self._wsets[self._wset_of(key)]
+                or key in self.main)
+
+    _WSET_MEMO_LIMIT = 2_000_000      # hash memo safety valve (scan traces)
+
+    def _wset_of(self, key) -> int:
+        s = self._wset_memo.get(key)
+        if s is None:
+            s = int(set_index32_np(np.asarray([key], np.uint64),
+                                   self._n_wsets, WSET_SALT)[0])
+            if len(self._wset_memo) >= self._WSET_MEMO_LIMIT:
+                self._wset_memo.clear()
+            self._wset_memo[key] = s
+        return s
 
     def _access(self, key) -> bool:
+        if self.assoc is not None:
+            return self._access_assoc(key)
         self.admission.record(key)
         if key in self.window:
             self.window.move_to_end(key)
@@ -60,4 +101,29 @@ class WTinyLFU(ReplacementPolicy):
                 if self.admission.admit(cand, victim):
                     self.main.remove(victim)
                     self.main.add(cand)
+        return False
+
+    def _access_assoc(self, key) -> bool:
+        """Set-associative twin of the device `_one_access_set` step."""
+        t = self._t
+        self._t += 1
+        self.admission.record(key)
+        wset = self._wsets[self._wset_of(key)]
+        if key in wset:
+            wset.move_to_end(key)          # refresh = stamp t (order only)
+            return True
+        if key in self.main:
+            self.main.on_hit(key, t)
+            return True
+        # miss: insert into the key's window set; per-set LRU overflow
+        # displaces a candidate toward the main table
+        wset[key] = None
+        if len(wset) > self._wusable[self._wset_of(key)]:
+            cand, _ = wset.popitem(last=False)
+            vset, victim = self.main.victim_for(cand)
+            if victim is None:             # free way in a choice set
+                self.main.insert(cand, vset, t)
+            elif self.admission.admit(cand, victim):
+                self.main.remove(victim)
+                self.main.insert(cand, vset, t)
         return False

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hashing import MIX32_M1, MIX32_M2, PROBE_SALTS
+from repro.core.hashing import (MIX32_M1, MIX32_M2, PROBE_SALTS,
+                                WSET_SALT, MSET_SALT)
 
 DK_SALT_XOR = 0xDEADBEEF        # doorkeeper probes use salted variants
 HI_MIX_XOR = 0x85EBCA6B
@@ -94,6 +95,19 @@ def dk_probe_index(lo: jnp.ndarray, hi: jnp.ndarray, p: int,
     return (h & jnp.uint32(dk_bits - 1)).astype(jnp.int32)
 
 
+def set_index(lo: jnp.ndarray, hi: jnp.ndarray, n_sets: int,
+              salt: int) -> jnp.ndarray:
+    """Set index for the set-associative cache tables (n_sets pow2).
+
+    jnp twin of ``core.hashing.set_index32_np`` — the host ``SetAssociative*``
+    policies and the device tables must map every key to the same set.
+    """
+    s = jnp.uint32(salt)
+    h = mix32(lo.astype(jnp.uint32) + s) ^ \
+        mix32(hi.astype(jnp.uint32) ^ jnp.uint32(HI_MIX_XOR) ^ s)
+    return (h & jnp.uint32(n_sets - 1)).astype(jnp.int32)
+
+
 # -- nibble helpers (int32-safe: masks clear any sign-extension bits) --------
 
 def nibble_get(word: jnp.ndarray, nib: jnp.ndarray) -> jnp.ndarray:
@@ -106,11 +120,12 @@ def nibble_inc(word: jnp.ndarray, nib: jnp.ndarray) -> jnp.ndarray:
     return word + (jnp.int32(1) << (nib * 4))
 
 
-def halve_words(words: jnp.ndarray) -> jnp.ndarray:
-    """Per-nibble halving of packed counters: the paper's reset as one VPU op.
-    (x >> 1) & 0x77777777 clears both cross-nibble borrow bits and the sign
-    extension."""
-    return (words >> 1) & jnp.int32(0x77777777)
+def halve_words(words: jnp.ndarray, counter_bits: int = 4) -> jnp.ndarray:
+    """Per-field halving of packed counters: the paper's reset as one VPU op.
+    (x >> 1) masked clears both cross-field borrow bits and the sign
+    extension (0x77777777 for 4-bit nibbles, 0x7F7F7F7F for 8-bit bytes)."""
+    mask = 0x77777777 if counter_bits == 4 else 0x7F7F7F7F
+    return (words >> 1) & jnp.int32(mask)
 
 
 def bit_get(words: jnp.ndarray, bit: jnp.ndarray) -> jnp.ndarray:

@@ -12,43 +12,73 @@ VMEM-resident:
 This replaces the three separate HBM round-trips per decision (sketch_update
 -> sketch_estimate -> admission) that made trace simulation launch-bound.
 
-Data layout — engineered so the sequential per-access body is a handful of
-tiny fused ops instead of O(capacity) masked rebuilds:
+Two table layouts share the step, selected by ``StepSpec.assoc``:
 
-* cache tables are fixed-capacity packed int32 arrays.  Each slot's
-  (valid, segment, LRU-stamp) state is packed into ONE int32 ``meta``:
+**Flat (assoc=None, the exact path)** — cache tables are fixed-capacity
+packed int32 arrays.  Each slot's (valid, segment, LRU-stamp) state is packed
+into ONE int32 ``meta``:
 
       -1              empty slot
       t               probation entry, last-stamped at access t
       2^30 | t        protected entry, last-stamped at access t
       2^31-1          sweep padding (permanently unusable slot)
 
-  so a single ``argmin(meta)`` is simultaneously the free-slot finder and
-  the exact SLRU victim priority (empty < probation LRU < protected LRU),
-  and a single ``argmin`` over the window's meta is free-slot-else-LRU.
+so a single ``argmin(meta)`` is simultaneously the free-slot finder and
+the exact SLRU victim priority (empty < probation LRU < protected LRU),
+and a single ``argmin`` over the window's meta is free-slot-else-LRU.
+Exact global LRU — but every lookup/victim search is O(capacity), so
+per-access cost grows linearly with cache size.
+
+**Set-associative (assoc=W, the O(ways) path)** — each table is
+``n_sets × assoc`` rows of one packed int32 record
+``[lo, hi, meta, (mset1, mset2,) idx[rows], dkb[dkp]]``; a key hashes to a set
+(``sketch_common.set_index``) and every lookup, free-slot search, SLRU
+victim priority, and protected-overflow demotion is a contiguous
+``dynamic_slice`` gather + reduce over ``assoc`` records — O(ways) per
+access, independent of capacity.  LRU and the SLRU segmentation become
+*per-set* (hardware-cache / Caffeine-style): the protected budget of a set
+is ``max(1, usable_ways * prot_cap // main_cap)``.  Semantics shift from
+exact global LRU to per-set LRU, so the contract vs the host exact policy
+is hit-ratio tolerance (±0.01 on the golden traces) instead of bitwise
+parity; ``step_ref``/``step_pallas`` remain bit-for-bit identical to each
+other, and a single-set geometry (n_sets == 1) reproduces the flat path's
+hit sequence exactly.
+
 * LRU order is the monotone access index ``t``; each access stamps at most
-  one entry per segment, so stamps are unique and ``argmin`` reproduces the
-  host OrderedDict order (core/policies.py:SLRUEviction) exactly.
-* hashing is hoisted out of the sequential loop entirely: probe rows and
-  doorkeeper bit positions are precomputed vectorized over the whole chunk
-  (they do not depend on state) and *stored in the tables* next to the key
-  lanes, so estimates of resident candidates/victims need no re-hashing.
+  one entry per segment (per set), so stamps are unique and ``argmin``
+  reproduces the host OrderedDict order exactly.
+* hashing is hoisted out of the sequential loop entirely: probe rows,
+  doorkeeper bit positions, and both set indices are precomputed vectorized
+  over the whole chunk (they do not depend on state) and *stored in the
+  tables* next to the key lanes, so estimates of resident candidates/victims
+  need no re-hashing, and a displaced window entry carries its own main-table
+  set index with it.
+
+Sketch counters are ``counter_bits`` ∈ {4, 8} wide (8 or 4 per int32 word):
+4-bit is the paper's §3.4.1 layout (cap ≤ 15, sample_factor ≤ 16); 8-bit
+doubles the sketch footprint but lifts the cap to 255 so large
+``sample_factor`` configurations no longer need the host engine.
 
 Semantics contract (tests/test_sketch_step.py, tests/test_device_simulate.py):
 
 * ``step_ref`` (pure-jnp `lax.scan`) and ``step_pallas`` (fused kernel) are
-  bit-for-bit identical, including reset boundaries that straddle chunks.
+  bit-for-bit identical, including reset boundaries that straddle chunks —
+  in both layouts.
 * The sketch substate evolves exactly like ``ref.add_ref`` (no reset) and the
   host ``FrequencySketch`` up to the 32-bit-lane hash family.
 * With a collision-free sketch, the per-access hit sequence is bit-for-bit
-  the host ``WTinyLFU``'s.
+  the host ``WTinyLFU``'s (flat), resp. the host set-associative twin's
+  (``core.policies.SetAssociativeSLRU`` via ``WTinyLFU(assoc=...)``).
 
 Static geometry lives in ``StepSpec``; per-config scalars that may vary
 across a vmapped sweep (protected capacity, sample size W, counter cap,
 warmup) are a traced int32 ``params`` vector, so one compiled program sweeps
 a Cartesian grid of configurations (core/device_simulate.py).  Window/main
 capacities below the static slot counts are expressed at init time by marking
-the excess slots as padding (init_step_state).
+the excess slots as padding (init_step_state); in set mode the padding is
+distributed over the sets by ``core.hashing.set_ways``; a grid member far
+below the shared geometry may leave some sets empty, and keys hashing there
+bypass that table (inserts are gated on non-padding slots).
 
 Keys: 64-bit keys arrive as (lo, hi) int32 bit-pattern lanes.  The single
 key value 2^64-1 (lanes == -1) is reserved as the padding-slot sentinel and
@@ -62,12 +92,16 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .sketch_common import probe_index, dk_probe_index, halve_words
+from repro.core.hashing import WSET_SALT, MSET_SALT, MSET2_SALT, set_ways
+from .sketch_common import (probe_index, dk_probe_index, set_index,
+                            halve_words)
 
 # python ints (not jnp scalars): jnp scalars at module scope would be closed
 # over as captured constants, which pallas kernels reject
@@ -80,16 +114,22 @@ P_WINDOW_CAP = 0              # informational (capacities are baked at init)
 P_MAIN_CAP = 1
 P_PROT_CAP = 2
 P_SAMPLE = 3                  # W; 0 disables the automatic reset
-P_CAP = 4                     # counter saturation (<= 15, 4-bit nibbles)
+P_CAP = 4                     # counter saturation (< 2**counter_bits)
 P_WARMUP = 5                  # accesses before hits start counting
 NPARAMS = 8
 
 # regs vector layout (mutable int32 scalar state)
 R_SIZE = 0                    # sketch additions since last reset
-R_PCOUNT = 1                  # protected entries within main
+R_PCOUNT = 1                  # protected entries within main (flat path only)
 R_T = 2                       # global access index == LRU stamp
 R_HITS = 3                    # counted hits (post warmup)
 NREGS = 8
+
+# packed set-associative record columns (window carries two extra lanes: the
+# resident key's two candidate main-table set indices, so a displaced
+# candidate needs no re-hash to find its victim sets)
+WT_LO, WT_HI, WT_META, WT_MSET, WT_MSET2 = 0, 1, 2, 3, 4
+MT_LO, MT_HI, MT_META = 0, 1, 2
 
 
 def _pow2(x: int) -> bool:
@@ -105,15 +145,34 @@ class StepSpec:
     dk_probes: int = 3
     window_slots: int = 1         # window table size (>= any window_cap used)
     main_slots: int = 1           # main table size (>= any main_cap used)
+    assoc: int | None = None      # ways per set; None = flat exact tables
+    counter_bits: int = 4         # sketch counter width: 4 (cap 15) or 8 (255)
 
     def __post_init__(self):
         assert _pow2(self.width) and self.width % 8 == 0
+        assert self.counter_bits in (4, 8)
         assert self.dk_bits == 0 or (_pow2(self.dk_bits) and self.dk_bits >= 32)
         assert self.window_slots >= 1 and self.main_slots >= 1
+        if self.assoc is not None:
+            assert self.assoc >= 1
+            assert self.window_slots % self.assoc == 0 and \
+                _pow2(self.window_slots // self.assoc), \
+                "window_slots must be assoc * pow2-sets"
+            assert self.main_slots % self.assoc == 0 and \
+                _pow2(self.main_slots // self.assoc), \
+                "main_slots must be assoc * pow2-sets"
+
+    @property
+    def counters_per_word(self) -> int:
+        return 32 // self.counter_bits
 
     @property
     def words_per_row(self) -> int:
-        return self.width // 8
+        return self.width // self.counters_per_word
+
+    @property
+    def counter_cap_max(self) -> int:
+        return (1 << self.counter_bits) - 1
 
     @property
     def dk_words(self) -> int:
@@ -123,14 +182,45 @@ class StepSpec:
     def dkp(self) -> int:         # stored doorkeeper probes per table entry
         return self.dk_probes if self.dk_bits else 1
 
+    @property
+    def window_sets(self) -> int:
+        return self.window_slots // self.assoc
+
+    @property
+    def main_sets(self) -> int:
+        return self.main_slots // self.assoc
+
+    @property
+    def wcols(self) -> int:       # packed window record width (set mode)
+        return 5 + self.rows + self.dkp
+
+    @property
+    def mcols(self) -> int:       # packed main record width (set mode)
+        return 3 + self.rows + self.dkp
+
 
 def make_step_params(window_cap: int, main_cap: int, prot_cap: int,
-                     sample_size: int, cap: int, warmup: int = 0) -> jnp.ndarray:
-    """Pack per-config scalars into the traced (NPARAMS,) int32 vector."""
-    assert 1 <= cap <= 15
+                     sample_size: int, cap: int, warmup: int = 0,
+                     counter_bits: int = 4) -> jnp.ndarray:
+    """Pack per-config scalars into the traced (NPARAMS,) int32 vector.
+
+    ``counter_bits`` must match the ``StepSpec`` these params will run
+    against: a cap above the counter mask would make the minimal-increment
+    bump fire on saturated counters and carry into the NEIGHBORING packed
+    counter, silently corrupting another key's estimate.
+    """
+    assert 1 <= cap <= (1 << counter_bits) - 1, (
+        f"cap {cap} does not fit {counter_bits}-bit counters")
     p = [int(window_cap), int(main_cap), int(prot_cap), int(sample_size),
          int(cap), int(warmup)] + [0] * (NPARAMS - 6)
     return jnp.asarray(p, jnp.int32)
+
+
+def _state_keys(spec: StepSpec) -> tuple[str, ...]:
+    if spec.assoc is None:
+        return ("counters", "doorkeeper", "wlo", "whi", "wmeta", "widx",
+                "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
+    return ("counters", "doorkeeper", "wtab", "mtab", "regs")
 
 
 def init_step_state(spec: StepSpec, window_cap: int | None = None,
@@ -139,34 +229,56 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
 
     ``window_cap``/``main_cap`` below the static slot counts mark the excess
     slots as permanent padding — this is how one static ``StepSpec`` hosts a
-    vmapped sweep over different cache sizes.
+    vmapped sweep over different cache sizes.  In set mode the padding is
+    distributed over the sets (``core.hashing.set_ways``): the first
+    ``cap % n_sets`` sets keep one extra usable way; capacities below the
+    set count leave the excess sets empty (keys hashing there bypass that
+    table — a documented vmapped-sweep approximation).
     """
     wcap = spec.window_slots if window_cap is None else int(window_cap)
     mcap = spec.main_slots if main_cap is None else int(main_cap)
     assert 1 <= wcap <= spec.window_slots and 1 <= mcap <= spec.main_slots
 
-    def table(slots, cap):
-        pad = jnp.arange(slots) >= cap
-        return {
-            # all non-resident slots hold the sentinel key (lanes -1) so no
-            # real key — including key 0 — can match an unoccupied slot
-            "lo": jnp.full((slots,), -1, jnp.int32),
-            "hi": jnp.full((slots,), -1, jnp.int32),
-            "meta": jnp.where(pad, _I32_MAX, _EMPTY).astype(jnp.int32),
-            "idx": jnp.zeros((slots, spec.rows), jnp.int32),
-            "dkb": jnp.zeros((slots, spec.dkp), jnp.int32),
-        }
-
-    w, m = table(spec.window_slots, wcap), table(spec.main_slots, mcap)
-    return {
+    common = {
         "counters": jnp.zeros((spec.rows * spec.words_per_row,), jnp.int32),
         "doorkeeper": jnp.zeros((spec.dk_words,), jnp.int32),
-        "wlo": w["lo"], "whi": w["hi"], "wmeta": w["meta"],
-        "widx": w["idx"], "wdkb": w["dkb"],
-        "mlo": m["lo"], "mhi": m["hi"], "mmeta": m["meta"],
-        "midx": m["idx"], "mdkb": m["dkb"],
         "regs": jnp.zeros((NREGS,), jnp.int32),
     }
+
+    if spec.assoc is None:
+        def table(slots, cap):
+            pad = jnp.arange(slots) >= cap
+            return {
+                # all non-resident slots hold the sentinel key (lanes -1) so
+                # no real key — including key 0 — can match an unoccupied slot
+                "lo": jnp.full((slots,), -1, jnp.int32),
+                "hi": jnp.full((slots,), -1, jnp.int32),
+                "meta": jnp.where(pad, _I32_MAX, _EMPTY).astype(jnp.int32),
+                "idx": jnp.zeros((slots, spec.rows), jnp.int32),
+                "dkb": jnp.zeros((slots, spec.dkp), jnp.int32),
+            }
+
+        w, m = table(spec.window_slots, wcap), table(spec.main_slots, mcap)
+        return {**common,
+                "wlo": w["lo"], "whi": w["hi"], "wmeta": w["meta"],
+                "widx": w["idx"], "wdkb": w["dkb"],
+                "mlo": m["lo"], "mhi": m["hi"], "mmeta": m["meta"],
+                "midx": m["idx"], "mdkb": m["dkb"]}
+
+    def set_table(slots, cap, ncols, meta_col):
+        n_sets = slots // spec.assoc
+        ways = np.asarray(set_ways(cap, n_sets))
+        way_of = np.arange(slots) % spec.assoc
+        pad = way_of >= ways[np.arange(slots) // spec.assoc]
+        tab = np.zeros((slots, ncols), np.int32)
+        tab[:, 0] = -1
+        tab[:, 1] = -1
+        tab[:, meta_col] = np.where(pad, _I32_MAX, _EMPTY)
+        return jnp.asarray(tab)
+
+    return {**common,
+            "wtab": set_table(spec.window_slots, wcap, spec.wcols, WT_META),
+            "mtab": set_table(spec.main_slots, mcap, spec.mcols, MT_META)}
 
 
 # ---------------------------------------------------------------------------
@@ -174,10 +286,15 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
 # ---------------------------------------------------------------------------
 
 def precompute_probes(spec: StepSpec, lo: jnp.ndarray, hi: jnp.ndarray):
-    """(B,) key lanes -> ((B, rows) table probes, (B, dkp) doorkeeper bits).
+    """(B,) key lanes -> ((B, rows) probes, (B, dkp) doorkeeper bits,
+    (B,) window set, (B, 2) main set choices).
 
     Pure functions of the key, hoisted out of the sequential loop and stored
-    alongside resident entries so the loop body never hashes.
+    alongside resident entries so the loop body never hashes.  Set indices
+    are zeros in flat mode.  Each key gets TWO candidate main sets
+    (power-of-two-choices placement): the resident copy lives in exactly one,
+    lookups probe both, and the insert victim is the weakest of both sets'
+    2*ways records.
     """
     idx = jnp.stack([probe_index(lo, hi, r, spec.width)
                      for r in range(spec.rows)], axis=-1)
@@ -186,7 +303,15 @@ def precompute_probes(spec: StepSpec, lo: jnp.ndarray, hi: jnp.ndarray):
                          for p in range(spec.dk_probes)], axis=-1)
     else:
         dkb = jnp.zeros(lo.shape + (1,), jnp.int32)
-    return idx, dkb
+    if spec.assoc is not None:
+        wset = set_index(lo, hi, spec.window_sets, WSET_SALT)
+        mset = jnp.stack([set_index(lo, hi, spec.main_sets, MSET_SALT),
+                          set_index(lo, hi, spec.main_sets, MSET2_SALT)],
+                         axis=-1)
+    else:
+        wset = jnp.zeros(lo.shape, jnp.int32)
+        mset = jnp.zeros(lo.shape + (2,), jnp.int32)
+    return idx, dkb, wset, mset
 
 
 # ---------------------------------------------------------------------------
@@ -197,46 +322,108 @@ def _row_offsets(spec: StepSpec) -> jnp.ndarray:
     return (jnp.arange(spec.rows, dtype=jnp.int32) * spec.words_per_row)
 
 
-def _nibble_vals(words: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """4-bit counter values at probe positions idx (…, rows)."""
-    return (words >> ((idx & 7) * 4)) & jnp.int32(0xF)
+def _counter_vals(spec: StepSpec, words: jnp.ndarray,
+                  idx: jnp.ndarray) -> jnp.ndarray:
+    """counter_bits-wide counter values at probe positions idx (…, rows)."""
+    sub = idx & (spec.counters_per_word - 1)
+    return ((words >> (sub * spec.counter_bits))
+            & jnp.int32(spec.counter_cap_max))
 
 
-def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb):
+def _word_of(spec: StepSpec, idx: jnp.ndarray) -> jnp.ndarray:
+    return idx >> (3 if spec.counter_bits == 4 else 2)
+
+
+def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
+                *, use_cond: bool = False):
     """FrequencySketch.add(): doorkeeper gate -> minimal increment -> reset.
 
     ``kidx`` (rows,) precomputed probe indices; ``kdkb`` (dkp,) doorkeeper
     bit positions.  Row gathers/scatters are one vectorized op each.
+
+    ``use_cond`` runs the §3.3 reset as a ``lax.cond`` so the O(width)
+    halving pass executes only on the accesses where it actually fires
+    (the set-associative path needs this for capacity-independent access
+    cost); the flat path keeps the fused masked ``where`` which measured
+    faster at its small sizes.
     """
+    # single-word writes are dynamic_update_slice, NOT scatter (.at[].set):
+    # XLA CPU updates a loop-carried buffer in place for DUS but lowers the
+    # equivalent scatter to a full-array copy, which would put an O(width)
+    # copy on every access and sink the capacity-independent set path
     if spec.dk_bits:
-        # sequential probe insert (host _dk_put semantics: a later probe of
-        # the same access observes bits set by an earlier one)
+        # host _dk_put semantics (a later probe of the same access observes
+        # bits set by an earlier one), restructured as ONE gather + straight-
+        # line writes: intra-access carry is resolved in-register via pairwise
+        # probe comparisons, and duplicate-word writes carry identical merged
+        # values.  Interleaving reads between the writes defeats XLA CPU's
+        # in-place analysis and costs a full dk copy per read.
+        np_ = spec.dk_probes
+        w_idx = kdkb >> 5
+        bpos = kdkb & 31
+        words = dk[w_idx]                              # (dkp,) one gather
+        pre = (words >> bpos) & 1
         present = jnp.int32(1)
-        for p in range(spec.dk_probes):
-            bit = kdkb[p]
-            word = dk[bit >> 5]
-            present &= (word >> (bit & 31)) & 1
-            dk = dk.at[bit >> 5].set(word | (jnp.int32(1) << (bit & 31)))
+        for i in range(np_):
+            eff = pre[i]
+            for j in range(i):                         # set by earlier probe?
+                eff = eff | (kdkb[j] == kdkb[i]).astype(jnp.int32)
+            present &= eff
+        bitm = jnp.int32(1) << bpos
+        for i in range(np_):
+            merged = words[i] | bitm[i]
+            for j in range(np_):
+                if j != i:                             # same-word probes merge
+                    merged = merged | jnp.where(w_idx[j] == w_idx[i],
+                                                bitm[j], 0)
+            dk = jax.lax.dynamic_update_slice(dk, merged[None], (w_idx[i],))
         gate = present.astype(jnp.bool_)   # repeat visitor -> main table
     else:
         gate = jnp.bool_(True)
 
-    flat = _row_offsets(spec) + (kidx >> 3)        # (rows,) word positions
+    flat = _row_offsets(spec) + _word_of(spec, kidx)   # (rows,) word positions
     words = counters[flat]
-    vals = _nibble_vals(words, kidx)
+    vals = _counter_vals(spec, words, kidx)
     m = vals.min()
     bump = gate & (m < params[P_CAP])
+    sub = kidx & (spec.counters_per_word - 1)
     new = jnp.where(bump & (vals == m),
-                    words + (jnp.int32(1) << ((kidx & 7) * 4)), words)
-    counters = counters.at[flat].set(new)
+                    words + (jnp.int32(1) << (sub * spec.counter_bits)), words)
+    for r in range(spec.rows):         # rows write disjoint word segments
+        counters = jax.lax.dynamic_update_slice(
+            counters, new[r][None], (flat[r],))
 
     size = size + 1
     do_reset = (params[P_SAMPLE] > 0) & (size >= params[P_SAMPLE])
-    # select, not lax.cond: XLA CPU cond copies its operand buffers every
-    # step, which costs more than the fused masked pass it would skip
-    counters = jnp.where(do_reset, halve_words(counters), counters)
-    dk = jnp.where(do_reset, jnp.zeros_like(dk), dk)
-    size = jnp.where(do_reset, size // 2, size)
+    if use_cond:
+        # dynamic-trip-count word loops: 0 iterations on the (vast majority
+        # of) accesses where no reset fires, in-place single-word updates
+        # when it does.  Neither lax.cond (copies its big operands on every
+        # call) nor a masked where (a full O(width) pass every access) keeps
+        # the set path's per-access cost capacity-independent on XLA CPU.
+        def halve_one(i, c):
+            w = jax.lax.dynamic_slice(c, (i,), (1,))
+            return jax.lax.dynamic_update_slice(
+                c, halve_words(w, spec.counter_bits), (i,))
+
+        def zero_one(i, d):
+            return jax.lax.dynamic_update_slice(
+                d, jnp.zeros((1,), jnp.int32), (i,))
+
+        counters = jax.lax.fori_loop(
+            0, jnp.where(do_reset, counters.shape[0], 0), halve_one, counters)
+        dk = jax.lax.fori_loop(
+            0, jnp.where(do_reset, dk.shape[0], 0), zero_one, dk)
+        size = jnp.where(do_reset, size // 2, size)
+    else:
+        # select, not lax.cond: XLA CPU cond copies its operand buffers every
+        # step, which costs more than the fused masked pass it would skip at
+        # the flat path's small sketch sizes
+        counters = jnp.where(do_reset,
+                             halve_words(counters, spec.counter_bits),
+                             counters)
+        dk = jnp.where(do_reset, jnp.zeros_like(dk), dk)
+        size = jnp.where(do_reset, size // 2, size)
     return counters, dk, size
 
 
@@ -245,8 +432,8 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
 
     idx2: (2, rows); dkb2: (2, dkp) -> (2,) int32 estimates.
     """
-    words = counters[_row_offsets(spec)[None, :] + (idx2 >> 3)]
-    est = _nibble_vals(words, idx2).min(axis=-1)
+    words = counters[_row_offsets(spec)[None, :] + _word_of(spec, idx2)]
+    est = _counter_vals(spec, words, idx2).min(axis=-1)
     if spec.dk_bits:
         w2 = dk[dkb2 >> 5]
         ok = (((w2 >> (dkb2 & 31)) & 1) == 1).all(axis=-1)
@@ -254,9 +441,9 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     return est
 
 
-def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
-                klo, khi, kidx, kdkb):
-    """Advance the full W-TinyLFU state by one access; returns (state, hit)."""
+def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
+                     klo, khi, kidx, kdkb):
+    """Advance the full W-TinyLFU state by one access (exact flat tables)."""
     regs = state["regs"]
     t = regs[R_T]
 
@@ -333,42 +520,219 @@ def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
     return new_state, hit.astype(jnp.int32)
 
 
+def _sched_dep(x: jnp.ndarray) -> jnp.ndarray:
+    """A data-dependent int32 scalar that is always 0 but opaque to XLA.
+
+    (d >> 31) & (~d >> 31) is zero for every d, yet XLA's simplifier cannot
+    prove it.  OR-ing this into the FIRST dynamic_update_slice of a
+    loop-carried table forces every computation that read the pre-write
+    table to transitively feed that write, so the scheduler runs all reads
+    first and the write happens in place.  Without it, XLA CPU may schedule
+    an independent read-fusion (e.g. a lookup reduce consumed only by a
+    later write) after the first write and must then copy the WHOLE table
+    every access — turning the O(ways) step back into O(capacity).
+    """
+    d = x.reshape(-1)[0]
+    return (d >> 31) & ((~d) >> 31)
+
+
+def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
+                    klo, khi, kidx, kdkb, kwset, kmset):
+    """One access against W-way set-associative tables: every table touch is
+    a contiguous (assoc, cols) gather + reduce — O(ways), capacity-free.
+
+    The main table uses power-of-two-choices placement: a key may reside in
+    either of its two hashed sets (lookups probe both); a displaced window
+    candidate is admitted against the weakest of its two sets' 2*ways
+    records, which both balances set load and doubles the victim pool —
+    together this recovers most of the exact global-SLRU hit ratio.
+
+    Dataflow discipline: ALL gathers read the pre-access tables up front;
+    aliasing between the key's sets and the candidate's sets is composed
+    with selects; the writes go last, with :func:`_sched_dep` anchoring
+    every read before the first write so the tables update in place.
+    """
+    A = spec.assoc
+    rows, dkp = spec.rows, spec.dkp
+    regs = state["regs"]
+    t = regs[R_T]
+
+    # -- 1. admission.record(key): sketch add + amortized in-place reset -----
+    counters, dk, size = _sketch_add(spec, params, state["counters"],
+                                     state["doorkeeper"], regs[R_SIZE],
+                                     kidx, kdkb, use_cond=True)
+
+    wtab, mtab = state["wtab"], state["mtab"]
+    km1, km2 = kmset[0], kmset[1]
+    same_km = km2 == km1
+
+    # -- 2. lookups: the key's window set and both main choice sets ----------
+    wblk = jax.lax.dynamic_slice(wtab, (kwset * A, 0), (A, spec.wcols))
+    wmeta = wblk[:, WT_META]
+    match_w = (wblk[:, WT_LO] == klo) & (wblk[:, WT_HI] == khi) & (wmeta >= 0)
+    hit_w = match_w.any()
+    jw = jnp.argmax(match_w)
+
+    mblk1 = jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols))
+    mblk2 = jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols))
+
+    def match_in(blk):
+        return ((blk[:, MT_LO] == klo) & (blk[:, MT_HI] == khi)
+                & (blk[:, MT_META] >= 0))
+
+    match1 = match_in(mblk1)
+    match2 = match_in(mblk2) & ~same_km     # aliased choices: count set1 only
+    hit1 = match1.any()
+    hit2 = match2.any()
+    hit_m = hit1 | hit2
+    hit = hit_w | hit_m
+
+    # -- 3a. window hit/miss: refresh stamp, insert on miss (not yet written)
+    wmeta = wmeta.at[jw].set(jnp.where(hit_w, t, wmeta[jw]))
+    miss = ~hit
+    ws = jnp.argmin(wmeta)
+    newrow = jnp.concatenate(
+        [jnp.stack([klo, khi, t, km1, km2]), kidx, kdkb]).astype(jnp.int32)
+    # padding (+MAX) can only win the argmin in a zero-way set (vmapped
+    # sweeps far below the shared geometry, or degenerate tiny windows):
+    # such an access bypasses the window — the incoming key itself becomes
+    # the admission candidate, exactly like the host twin's insert-then-
+    # immediately-displace
+    w_ok = wmeta[ws] != _I32_MAX
+    push = miss & ((wmeta[ws] >= 0) | ~w_ok)
+    cand = jnp.where(w_ok, wblk[ws], newrow)    # full packed record
+    wblk = wblk.at[:, WT_META].set(wmeta)
+    wblk = wblk.at[ws].set(jnp.where(miss & w_ok, newrow, wblk[ws]))
+
+    # -- 3b. main hit: SLRU promote-or-refresh within the RESIDENT set -------
+    def hit_update(blk, match, hit_half):
+        meta = blk[:, MT_META]
+        j = jnp.argmax(match)
+        meta = meta.at[j].set(jnp.where(hit_half, _PROT | t, meta[j]))
+        # the set's protected budget scales its usable ways by the global
+        # protected fraction; counting resident protected beats carrying a
+        # per-set register (padding meta +MAX excluded: stamps < 2^31-1)
+        usable = (meta != _I32_MAX).sum()
+        nprot = ((meta >= _PROT) & (meta != _I32_MAX)).sum()
+        cap = jnp.maximum(1, usable * params[P_PROT_CAP]
+                          // jnp.maximum(1, params[P_MAIN_CAP]))
+        over = hit_half & (nprot > cap)
+        kd = jnp.argmin(jnp.where(meta >= _PROT, meta, _I32_MAX))
+        meta = meta.at[kd].set(jnp.where(over, t, meta[kd]))
+        return blk.at[:, MT_META].set(meta)
+
+    mblk1u = hit_update(mblk1, match1, hit1)
+    mblk2u = hit_update(mblk2, match2, hit2)
+    m2eff = jnp.where(same_km, mblk1u, mblk2u)  # aliased sets follow set1
+
+    # -- 4. admission: candidate vs the weakest of its 2*ways records --------
+    # the candidate's choice sets were stored at its window insert; they are
+    # gathered from the PRE-access table, then the hit updates above are
+    # replayed onto them wherever the sets alias
+    c1, c2 = cand[WT_MSET], cand[WT_MSET2]
+    same_c = c2 == c1
+
+    def fixup(cb, c):
+        return jnp.where(c == km2, m2eff, jnp.where(c == km1, mblk1u, cb))
+
+    cb1 = fixup(jax.lax.dynamic_slice(mtab, (c1 * A, 0), (A, spec.mcols)), c1)
+    cb2 = fixup(jax.lax.dynamic_slice(mtab, (c2 * A, 0), (A, spec.mcols)), c2)
+    cblk = jnp.concatenate([cb1, cb2], axis=0)          # (2A, cols)
+    # argmin = empty < probation LRU < protected LRU across both sets;
+    # ties pick the first half, so aliased choice sets stay consistent
+    tslot = jnp.argmin(cblk[:, MT_META])
+    vic = cblk[tslot]
+    m_free = vic[MT_META] < 0
+    est = _estimate_pair(
+        spec, counters, dk,
+        jnp.stack([cand[5:5 + rows], vic[3:3 + rows]]),
+        jnp.stack([cand[5 + rows:5 + rows + dkp], vic[3 + rows:3 + rows + dkp]]))
+    admit = est[0] > est[1]
+    # all-padding candidate sets (see w_ok above) never accept an insert
+    do_ins = push & (vic[MT_META] != _I32_MAX) & (m_free | admit)
+    candrow = jnp.concatenate(
+        [jnp.stack([cand[WT_LO], cand[WT_HI], t]),
+         cand[5:5 + rows], cand[5 + rows:5 + rows + dkp]]).astype(jnp.int32)
+    in1 = do_ins & (tslot < A)
+    in2 = do_ins & (tslot >= A)
+    j1 = jnp.minimum(tslot, A - 1)
+    j2 = jnp.clip(tslot - A, 0, A - 1)
+    cb1u = cb1.at[j1].set(jnp.where(in1, candrow, cb1[j1]))
+    cb2u = cb2.at[j2].set(jnp.where(in2, candrow, cb2[j2]))
+    cb2u = jnp.where(same_c, cb1u, cb2u)
+
+    # -- 5. writes last; later writes win where the four sets alias ----------
+    zm = _sched_dep(mblk2u) | _sched_dep(cb1u) | _sched_dep(cb2u)
+    mtab = jax.lax.dynamic_update_slice(mtab, mblk1u | zm, (km1 * A, 0))
+    mtab = jax.lax.dynamic_update_slice(mtab, m2eff, (km2 * A, 0))
+    mtab = jax.lax.dynamic_update_slice(mtab, cb1u, (c1 * A, 0))
+    mtab = jax.lax.dynamic_update_slice(mtab, cb2u, (c2 * A, 0))
+    zw = _sched_dep(cb1u) | _sched_dep(cb2u)    # cand-derived: covers reads
+    wtab = jax.lax.dynamic_update_slice(wtab, wblk | zw, (kwset * A, 0))
+
+    # -- 6. bookkeeping (R_PCOUNT is unused: protected counts are per-set) ---
+    counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
+    regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
+                      regs[4], regs[5], regs[6], regs[7]])
+    new_state = {"counters": counters, "doorkeeper": dk,
+                 "wtab": wtab, "mtab": mtab, "regs": regs}
+    return new_state, hit.astype(jnp.int32)
+
+
+def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
+                klo, khi, kidx, kdkb, kwset, kmset):
+    """Advance the full W-TinyLFU state by one access; returns (state, hit)."""
+    if spec.assoc is None:
+        return _one_access_flat(spec, params, state, klo, khi, kidx, kdkb)
+    return _one_access_set(spec, params, state, klo, khi, kidx, kdkb,
+                           kwset, kmset)
+
+
 # ---------------------------------------------------------------------------
 # reference backend: lax.scan over the chunk (jit twin of the fused kernel)
 # ---------------------------------------------------------------------------
 
 def step_ref(spec: StepSpec, params: jnp.ndarray, state: dict,
              lo: jnp.ndarray, hi: jnp.ndarray,
-             n_valid: jnp.ndarray | int | None = None, *, unroll: int = 4):
+             n_valid: jnp.ndarray | int | None = None,
+             *, unroll: int | None = None):
     """Sequentially simulate ``lo/hi`` accesses; returns (state, hit_flags).
 
     ``n_valid`` masks padded tails: accesses at positions >= n_valid leave the
     state untouched and report hit=0.  Bit-for-bit identical to step_pallas.
+
+    ``unroll=None`` picks per layout: 4 for the flat path (hides scalar
+    latency between its big reductions), 1 for the set path (unrolling
+    defeats XLA CPU's in-place buffer reuse across the chained single-word
+    updates, reintroducing O(state) copies per access).
     """
+    if unroll is None:
+        unroll = 4 if spec.assoc is None else 1
     (b,) = lo.shape
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
-    kidx, kdkb = precompute_probes(spec, lo, hi)
+    kidx, kdkb, kwset, kmset = precompute_probes(spec, lo, hi)
 
     if n_valid is None:
         # fast path: no tail masking, no per-step state merge
         def body(carry, x):
-            klo, khi, ki, kd = x
-            return _one_access(spec, params, carry, klo, khi, ki, kd)
+            klo, khi, ki, kd, kw, km = x
+            return _one_access(spec, params, carry, klo, khi, ki, kd, kw, km)
 
-        return jax.lax.scan(body, state, (lo, hi, kidx, kdkb), unroll=unroll)
+        return jax.lax.scan(body, state, (lo, hi, kidx, kdkb, kwset, kmset),
+                            unroll=unroll)
 
     n_valid = jnp.asarray(n_valid, jnp.int32)
 
     def body(carry, x):
-        klo, khi, ki, kd, i = x
-        new, hit = _one_access(spec, params, carry, klo, khi, ki, kd)
+        klo, khi, ki, kd, kw, km, i = x
+        new, hit = _one_access(spec, params, carry, klo, khi, ki, kd, kw, km)
         active = i < n_valid
         merged = jax.tree_util.tree_map(
             lambda n, o: jnp.where(active, n, o), new, carry)
         return merged, jnp.where(active, hit, 0)
 
-    xs = (lo, hi, kidx, kdkb, jnp.arange(b, dtype=jnp.int32))
+    xs = (lo, hi, kidx, kdkb, kwset, kmset, jnp.arange(b, dtype=jnp.int32))
     return jax.lax.scan(body, state, xs, unroll=unroll)
 
 
@@ -376,13 +740,14 @@ def step_ref(spec: StepSpec, params: jnp.ndarray, state: dict,
 # fused Pallas kernel: whole chunk, state pinned in VMEM, buffers donated
 # ---------------------------------------------------------------------------
 
-_STATE_KEYS = ("counters", "doorkeeper", "wlo", "whi", "wmeta", "widx",
-               "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
+# number of streamed (non-state) VMEM inputs: lo, hi, kidx, kdkb, kwset, kmset
+_N_STREAM = 6
 
 
 def _step_kernel(spec: StepSpec, lo_ref, hi_ref, kidx_ref, kdkb_ref,
-                 scal_ref, *refs):
-    n_state = len(_STATE_KEYS)
+                 kwset_ref, kmset_ref, scal_ref, *refs):
+    keys = _state_keys(spec)
+    n_state = len(keys)
     in_refs = refs[:n_state]
     out_refs = refs[n_state:2 * n_state]
     hits_ref = refs[2 * n_state]
@@ -393,15 +758,17 @@ def _step_kernel(spec: StepSpec, lo_ref, hi_ref, kidx_ref, kdkb_ref,
     hi = hi_ref[...]
     kidx = kidx_ref[...]
     kdkb = kdkb_ref[...]
+    kwset = kwset_ref[...]
+    kmset = kmset_ref[...]
     state0 = tuple(r[...] for r in in_refs)
     hits0 = jnp.zeros(lo.shape, jnp.int32)
 
     def body(i, carry):
         state_t, hits = carry
-        state = dict(zip(_STATE_KEYS, state_t))
+        state = dict(zip(keys, state_t))
         new, hit = _one_access(spec, params, state, lo[i], hi[i],
-                               kidx[i], kdkb[i])
-        return (tuple(new[k] for k in _STATE_KEYS),
+                               kidx[i], kdkb[i], kwset[i], kmset[i])
+        return (tuple(new[k] for k in keys),
                 hits.at[i].set(hit))
 
     state_t, hits = jax.lax.fori_loop(0, n_valid, body, (state0, hits0))
@@ -416,35 +783,36 @@ def step_pallas(spec: StepSpec, params: jnp.ndarray, state: dict,
                 *, interpret: bool = True):
     """Fused chunk step: one launch, state VMEM-resident and donated.
 
-    Same signature/semantics as :func:`step_ref`.  Probes are precomputed
-    vectorized outside the kernel (they are pure functions of the keys) and
-    streamed in with the key lanes.
+    Same signature/semantics as :func:`step_ref`.  Probes and set indices are
+    precomputed vectorized outside the kernel (they are pure functions of the
+    keys) and streamed in with the key lanes.
     """
     (b,) = lo.shape
     n_valid = b if n_valid is None else n_valid
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
-    kidx, kdkb = precompute_probes(spec, lo, hi)
+    kidx, kdkb, kwset, kmset = precompute_probes(spec, lo, hi)
     scal = jnp.concatenate([
         params.astype(jnp.int32),
         jnp.asarray(n_valid, jnp.int32).reshape(1)])
     kernel = functools.partial(_step_kernel, spec)
-    n_state = len(_STATE_KEYS)
-    state_vals = [state[k] for k in _STATE_KEYS]
+    keys = _state_keys(spec)
+    n_state = len(keys)
+    state_vals = [state[k] for k in keys]
     outs = pl.pallas_call(
         kernel,
         out_shape=tuple(
             [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in state_vals]
             + [jax.ShapeDtypeStruct((b,), jnp.int32)]),
         in_specs=(
-            [pl.BlockSpec(memory_space=pltpu.VMEM)] * 4   # lo, hi, kidx, kdkb
+            [pl.BlockSpec(memory_space=pltpu.VMEM)] * _N_STREAM
             + [pl.BlockSpec(memory_space=pltpu.SMEM)]     # packed scalars
             + [pl.BlockSpec(memory_space=pltpu.VMEM)] * n_state),
         out_specs=tuple([pl.BlockSpec(memory_space=pltpu.VMEM)]
                         * (n_state + 1)),
-        # donate every state buffer: input i+5 -> output i
-        input_output_aliases={i + 5: i for i in range(n_state)},
+        # donate every state buffer: input i+_N_STREAM+1 -> output i
+        input_output_aliases={i + _N_STREAM + 1: i for i in range(n_state)},
         interpret=interpret,
-    )(lo, hi, kidx, kdkb, scal, *state_vals)
-    new_state = dict(zip(_STATE_KEYS, outs[:n_state]))
+    )(lo, hi, kidx, kdkb, kwset, kmset, scal, *state_vals)
+    new_state = dict(zip(keys, outs[:n_state]))
     return new_state, outs[n_state]

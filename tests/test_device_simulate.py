@@ -139,3 +139,74 @@ def test_run_trace_trace_name_label():
     assert r.trace == "mytrace"
     r2 = run_trace(WTinyLFU(50, sample_factor=8), tr)
     assert r2.trace == "?"
+
+
+# ===========================================================================
+# set-associative engine (assoc=) and 8-bit counters
+# ===========================================================================
+
+ASSOC_TOL = 0.01
+
+
+class TestGoldenAssoc:
+    """Per-set LRU is an approximation of exact global LRU, so the golden
+    contract for the set-associative engine is hit-ratio tolerance (±0.01 vs
+    the exact host W-TinyLFU) instead of the flat path's bitwise parity.
+    Capacities are production-shaped (the engine's target regime); at very
+    small C with few ways the approximation costs more (documented in
+    README) and the exact assoc=None path is the right tool."""
+
+    def test_zipf_assoc_within_tolerance(self):
+        tr = golden_zipf_trace()
+        h = run_trace(WTinyLFU(1000, sample_factor=8), tr, warmup=10_000)
+        for a in (4, 8, 16):
+            d = simulate_trace(tr, 1000, warmup=10_000, assoc=a)
+            assert abs(d.hit_ratio - h.hit_ratio) < ASSOC_TOL, (a, d.hit_ratio)
+            assert d.extra["assoc"] == a
+
+    def test_scanhot_assoc_within_tolerance(self):
+        tr = scan_then_hotspot_trace()
+        h = run_trace(WTinyLFU(400, sample_factor=8), tr, warmup=5_000)
+        for a in (4, 8, 16):
+            d = simulate_trace(tr, 400, warmup=5_000, assoc=a)
+            assert abs(d.hit_ratio - h.hit_ratio) < ASSOC_TOL, (a, d.hit_ratio)
+
+
+def test_assoc_sweep_matches_single_runs():
+    """Sequential sweeps with assoc use per-config tight geometry: each grid
+    point is bit-identical to its standalone simulate_trace run."""
+    tr = golden_zipf_trace()[:8000]
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=1000,
+                          mode="sequential", assoc=8)
+    for row in rows:
+        single = simulate_trace(tr, 100, window_frac=row.extra["window_frac"],
+                                warmup=1000, assoc=8)
+        assert row.hits == single.hits
+        assert row.extra["assoc"] == 8
+
+
+def test_sweep_reports_amortized_wall():
+    """Satellite fix: each SimResult row carries the per-row amortized wall
+    (so accesses/wall_s is per-config) and the grid total in extra."""
+    tr = golden_zipf_trace()[:4000]
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=500,
+                          mode="sequential")
+    assert len(rows) == 2
+    for r in rows:
+        assert r.extra["grid"] == 2
+        assert r.extra["grid_wall_s"] == pytest.approx(rows[0].extra["grid_wall_s"])
+        assert r.wall_s == pytest.approx(r.extra["grid_wall_s"] / 2)
+
+
+def test_counter8_matches_host_large_sample_factor():
+    """Satellite: counter_bits=8 lifts the 4-bit cap (15) so sample_factor >
+    16 no longer needs the host engine; device cap matches the host's."""
+    from repro.core.device_simulate import DeviceWTinyLFU
+    cfg = DeviceWTinyLFU(200, sample_factor=32, counter_bits=8)
+    assert cfg.cap == 31                       # host: max(1, 32 - 1)
+    assert DeviceWTinyLFU(200, sample_factor=32).cap == 15   # 4-bit clamp
+    tr = golden_zipf_trace()[:20_000]
+    h = run_trace(WTinyLFU(200, sample_factor=32), tr, warmup=4_000)
+    d = simulate_trace(tr, 200, warmup=4_000, sample_factor=32,
+                       counter_bits=8)
+    assert abs(d.hit_ratio - h.hit_ratio) < TOL

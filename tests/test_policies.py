@@ -156,3 +156,69 @@ class TestTinyLFUAdmission:
             c.access(i % 6)
         # reaching here without KeyError proves reset/halve_all stay in sync
         assert len(c.ev) <= 4
+
+
+class TestSetAssociativeSLRU:
+    """Host twin of the device set-associative main table — see
+    kernels/sketch_step.py `_one_access_set` for the mirrored algorithm."""
+
+    def _ev(self, capacity, assoc=8):
+        from repro.core.policies import SetAssociativeSLRU
+        return SetAssociativeSLRU(capacity, assoc=assoc)
+
+    def test_capacity_and_per_set_budget_respected(self):
+        ev = self._ev(64, assoc=8)
+        for k in range(500):
+            ev.add(k * 7919)
+        assert len(ev) <= 64
+        for s, st in enumerate(ev.slots):
+            assert len(st) <= ev.usable[s]
+
+    def test_resident_set_is_one_of_two_choices(self):
+        ev = self._ev(64, assoc=8)
+        for k in range(200):
+            ev.add(k)
+        for k in ev.keys():
+            assert ev.home[k] in ev.sets_of(k)
+
+    def test_single_set_victim_is_probation_lru(self):
+        # capacity <= assoc collapses to one set: exact SLRU semantics
+        ev = self._ev(4, assoc=8)
+        assert ev.n_sets == 1
+        for k in (1, 2, 3, 4):
+            ev.add(k)
+        ev.on_hit(2)                       # 2 -> protected
+        s, victim = ev.victim_for(99)
+        assert victim == 1                 # probation LRU, not protected 2
+
+    def test_protected_overflow_demotes_lru(self):
+        ev = self._ev(5, assoc=8)          # 1 set; prot budget = 4*5//5? ->
+        budget = ev._prot_budget(0)        # max(1, 5*4//5) = 4
+        for k in range(5):
+            ev.add(k)
+        for k in range(5):
+            ev.on_hit(k)                   # 5 promotions: overflow demotes
+        nprot = sum(1 for p, _ in ev.slots[0].values() if p)
+        assert nprot == budget
+
+    def test_free_way_prefers_first_choice_set(self):
+        ev = self._ev(64, assoc=8)
+        s, victim = ev.victim_for(12345)
+        assert victim is None and s == ev.sets_of(12345)[0]
+
+
+class TestWTinyLFUAssoc:
+    def test_tracks_exact_policy(self):
+        """The set-associative host twin stays close to exact W-TinyLFU."""
+        tr = zipf_trace(20_000, n_items=5_000, alpha=0.9, seed=3)
+        exact = run_trace(WTinyLFU(500, sample_factor=8), tr, warmup=4_000)
+        approx = run_trace(WTinyLFU(500, sample_factor=8, assoc=8), tr,
+                           warmup=4_000)
+        assert abs(exact.hit_ratio - approx.hit_ratio) < 0.02
+
+    def test_contains_and_capacity(self):
+        w = WTinyLFU(64, sample_factor=8, assoc=8)
+        for k in range(1000):
+            w.access(k % 90)
+        resident = sum(1 for k in range(90) if k in w)
+        assert 0 < resident <= 64

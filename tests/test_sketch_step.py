@@ -206,3 +206,123 @@ def test_hits_register_counts_post_warmup():
     s, hits = run_ref(spec, params, keys)
     counted = int(np.asarray(hits)[100:].sum())
     assert int(np.asarray(s["regs"])[R_HITS]) == counted
+
+
+# ===========================================================================
+# set-associative tables (StepSpec.assoc) and 8-bit counters
+# ===========================================================================
+
+ASSOC_SPECS = [
+    # 8 sets x 8 ways, doorkeeper on, reset W=700 (straddles 500-chunks)
+    (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8, main_slots=64,
+              assoc=8),
+     make_step_params(4, 48, 38, 700, 7, 0)),
+    # 16 ways, no doorkeeper
+    (StepSpec(width=512, rows=2, dk_bits=0, window_slots=16, main_slots=64,
+              assoc=16),
+     make_step_params(6, 60, 48, 500, 15, 0)),
+    # 8-bit counters: cap 100 > the 4-bit maximum of 15
+    (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=4, main_slots=32,
+              assoc=4, counter_bits=8),
+     make_step_params(3, 30, 24, 400, 100, 0, counter_bits=8)),
+]
+
+
+@pytest.mark.parametrize("spec,params", ASSOC_SPECS)
+def test_assoc_pallas_matches_ref_bitwise(spec, params):
+    """Set-associative fused kernel == scan twin: state and hit flags across
+    chunk splits, padded tails, and resets that straddle chunks."""
+    rng = np.random.default_rng(spec.assoc + spec.counter_bits)
+    keys = rng.integers(0, 400, size=1300, dtype=np.uint64)
+    s_ref, h_ref = run_ref(spec, params, keys)
+    s_pal, h_pal = run_pallas_chunks(spec, params, keys, 500)
+    assert_state_equal(s_ref, s_pal)
+    np.testing.assert_array_equal(np.asarray(h_ref), h_pal)
+
+
+def test_assoc_single_set_matches_flat_bitwise():
+    """A one-set geometry degenerates to exact global LRU/SLRU: its hit
+    sequence equals the flat path's bit-for-bit (differential proof that
+    the per-set SLRU promote/demote/victim logic mirrors the exact one)."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 300, size=3000, dtype=np.uint64)
+    flat = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2,
+                    main_slots=40)
+    params = make_step_params(2, 40, 32, 500, 7, 0)
+    _, h_flat = run_ref(flat, params, keys)
+    one_set = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=64,
+                       main_slots=64, assoc=64)
+    lo, hi = lanes(keys)
+    _, h_set = step_ref(one_set, params,
+                        init_step_state(one_set, window_cap=2, main_cap=40),
+                        lo, hi)
+    np.testing.assert_array_equal(np.asarray(h_flat), np.asarray(h_set))
+
+
+def test_assoc_host_twin_hit_sequence_bitwise():
+    """Collision-free sketches on both sides: the set-associative device
+    engine reproduces the host ``WTinyLFU(assoc=...)`` /
+    ``SetAssociativeSLRU`` per-access hit sequence exactly — set placement,
+    per-set window LRU, two-choice victim search, per-set protected
+    budgets, admission verdicts, and reset timing all agree."""
+    from repro.traces import zipf_trace
+    from repro.core.hashing import assoc_geometry, slots_for
+    C, assoc = 60, 8
+    main_cap, window_cap = C - 1, 1
+    n_sets, ways = assoc_geometry(main_cap, assoc)
+    spec = StepSpec(width=1 << 16, rows=4, dk_bits=0,
+                    window_slots=slots_for(window_cap, ways),
+                    main_slots=n_sets * ways, assoc=ways)
+    params = make_step_params(window_cap, main_cap, int(main_cap * 0.8),
+                              8 * C, 8, 0)
+    tr = zipf_trace(5000, n_items=300, alpha=0.9, seed=5)
+    lo, hi = lanes(tr.astype(np.uint64))
+    _, hits = step_ref(spec, params,
+                       init_step_state(spec, window_cap, main_cap), lo, hi)
+    host = WTinyLFU(C, window_frac=0.01, sample_factor=8, doorkeeper=False,
+                    counters_per_item=550.0, assoc=assoc)
+    host_hits = np.array([host.access(int(k)) for k in tr], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+
+
+def test_assoc_zero_way_window_sets_bypass_to_admission():
+    """Degenerate geometry (window set count > window_cap leaves zero-way
+    sets): keys hashing there bypass the window straight to main admission,
+    identically on host and device (regression: the device used to drop
+    them, breaking hit-sequence parity)."""
+    from repro.traces import zipf_trace
+    C, assoc = 69, 1
+    window_cap = max(1, int(round(C * 0.0725)))     # 5 < 8 window sets
+    main_cap = C - window_cap
+    host = WTinyLFU(C, window_frac=0.0725, sample_factor=8, doorkeeper=False,
+                    counters_per_item=550.0, assoc=assoc)
+    assert 0 in host._wusable                       # geometry hits the case
+    spec = StepSpec(width=1 << 16, rows=4, dk_bits=0,
+                    window_slots=host._n_wsets, main_slots=main_cap,
+                    assoc=host.main.ways)
+    params = make_step_params(window_cap, main_cap, int(main_cap * 0.8),
+                              8 * C, 8, 0)
+    tr = zipf_trace(4000, n_items=250, alpha=0.9, seed=5)
+    lo, hi = lanes(tr.astype(np.uint64))
+    _, hits = step_ref(spec, params,
+                       init_step_state(spec, window_cap, main_cap), lo, hi)
+    host_hits = np.array([host.access(int(k)) for k in tr], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+
+
+def test_counter8_counts_past_nibble_cap():
+    """8-bit packed counters keep counting where 4-bit nibbles saturate:
+    a key hammered 100x under cap=100 reaches estimate 100."""
+    from repro.kernels.sketch_step import (_estimate_pair, precompute_probes)
+    spec = StepSpec(width=256, rows=4, dk_bits=0, window_slots=1,
+                    main_slots=10, counter_bits=8)
+    params = make_step_params(1, 10, 8, 0, 100, 0, counter_bits=8)
+    keys = np.full(100, 42, np.uint64)
+    s, hits = run_ref(spec, params, keys)
+    lo, hi = lanes(keys[:1])
+    kidx, kdkb, _, _ = precompute_probes(spec, lo, hi)
+    est = _estimate_pair(spec, s["counters"], s["doorkeeper"],
+                         jnp.stack([kidx[0], kidx[0]]),
+                         jnp.stack([kdkb[0], kdkb[0]]))
+    assert int(est[0]) == 100
+    assert int(np.asarray(hits).sum()) == 99     # window of 1 holds the key
