@@ -23,10 +23,18 @@ Four measurements on the same golden Zipf trace:
    engines run the golden Zipf trace at growing C; the set path must stay
    near-flat from C=512 to C=65536 and clear >= 5x the flat engine at
    C >= 8192 (ISSUE 2 acceptance).
+5. **adaptive overhead** — the runtime hill-climbed window (ISSUE 3) adds
+   per-access quota masks and an O(slots log) epoch rebalance; measured as
+   adaptive-vs-static set-assoc throughput at C=8192.
 
 All wall times are best-of-N to sidestep noisy-neighbour jitter; JSON rows
 record every measurement, and a compact perf snapshot is written to
-``BENCH_device.json`` at the repo root so CI tracks the trajectory.
+``BENCH_device.json`` at the repo root.  ``benchmarks/check_bench.py`` turns
+the snapshot into a CI regression gate (see its docstring for the noise
+model).  ``assoc_flatness_512_to_65536`` is ``acc/s at C=65536 divided by
+acc/s at C=512`` — ~1.0 when the per-access cost is capacity-free, < 0.9
+when something reintroduced O(capacity) work (gate direction; note PR 2's
+snapshot recorded the inverse ratio).
 """
 from __future__ import annotations
 
@@ -43,6 +51,22 @@ from repro.traces import zipf_trace
 from .common import save
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _machine_fingerprint() -> str:
+    """CPU model + core count: throughput numbers are only comparable
+    between snapshots taken on the same class of machine (check_bench.py
+    skips the absolute-throughput gate when fingerprints differ)."""
+    model = "unknown"
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return f"{model} x{os.cpu_count()}"
 
 
 def _best_of(fn, n=3):
@@ -173,9 +197,12 @@ def run(quick: bool = False):
                             ("set-assoc(w=8)", assoc_caps, {"assoc": 8})]:
         for Cs in caps:
             simulate_trace(golden, Cs, **kw)             # compile once
+            # best-of-4: the flatness ratio feeds the CI gate, and shared
+            # dev boxes show LLC-contention dips of 30%+ on the large-C
+            # point specifically (gate docstring has the noise model)
             wall, res = _best_of(
                 lambda: simulate_trace(golden, Cs, trace_name="golden-zipf",
-                                       **kw), n=2)
+                                       **kw), n=4)
             acc[(label, Cs)] = len(golden) / wall
             rows.append({"trace": "golden-zipf", "engine": f"scaling:{label}",
                          "cache_size": Cs, "accesses": len(golden),
@@ -185,22 +212,46 @@ def run(quick: bool = False):
             print(f"  {label:<16s} C={Cs:<6d} "
                   f"{len(golden) / wall:>12,.0f} acc/s", flush=True)
     speedup = acc[("set-assoc(w=8)", 8192)] / acc[("scan(flat)", 8192)]
-    flatness = acc[("set-assoc(w=8)", 512)] / acc[("set-assoc(w=8)", 65536)]
+    flatness = acc[("set-assoc(w=8)", 65536)] / acc[("set-assoc(w=8)", 512)]
     print(f"  set-assoc vs flat at C=8192: {speedup:.1f}x; "
-          f"per-access cost growth 512->65536: {flatness:.2f}x", flush=True)
+          f"flatness 512->65536 (1.0 = capacity-free): {flatness:.2f}",
+          flush=True)
     rows.append({"trace": "golden-zipf", "engine": "speedup:set-assoc@8192",
                  "speedup": round(speedup, 2),
                  "flatness_512_to_65536": round(flatness, 2)})
 
+    # -- 5. adaptive window engine: per-access masks + epoch rebalance cost --
+    from repro.core.device_simulate import ClimbSpec
+    Ca = 8192
+    kw_ad = {"assoc": 8, "adaptive": True, "climb": ClimbSpec()}
+    simulate_trace(golden, Ca, **kw_ad)                  # compile once
+    ad_wall, ad_res = _best_of(
+        lambda: simulate_trace(golden, Ca, trace_name="golden-zipf", **kw_ad),
+        n=2)
+    ad_acc = len(golden) / ad_wall
+    overhead = acc[("set-assoc(w=8)", Ca)] / ad_acc
+    print(f"  adaptive(w=8)    C={Ca:<6d} {ad_acc:>12,.0f} acc/s "
+          f"({overhead:.2f}x static cost, final quota "
+          f"{ad_res.extra['final_quota']})", flush=True)
+    rows.append({"trace": "golden-zipf", "engine": "adaptive(w=8)",
+                 "cache_size": Ca, "accesses": len(golden),
+                 "wall_s": round(ad_wall, 3), "acc_per_s": round(ad_acc),
+                 "hit_ratio": ad_res.hit_ratio,
+                 "static_over_adaptive": round(overhead, 2),
+                 "device": backend})
+
     # -- perf snapshot at the repo root: the numbers CI tracks across PRs ----
     snapshot = {
         "device": backend,
+        "machine": _machine_fingerprint(),
         "trace_engine_acc_per_s": round(length / dev_wall),
         "assoc_acc_per_s_small_C": round(acc[("set-assoc(w=8)", 512)]),
         "assoc_acc_per_s_large_C": round(acc[("set-assoc(w=8)", 65536)]),
         "flat_acc_per_s_8192": round(acc[("scan(flat)", 8192)]),
         "assoc_speedup_vs_flat_8192": round(speedup, 2),
         "assoc_flatness_512_to_65536": round(flatness, 2),
+        "adaptive_acc_per_s_8192": round(ad_acc),
+        "adaptive_overhead_vs_static": round(overhead, 2),
         "batched_dec_per_s": round(n_dec / dev_dec),
     }
     with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:

@@ -1,0 +1,112 @@
+"""CI regression gate over the device-engine perf snapshot (ISSUE 3).
+
+Compares a freshly measured ``BENCH_device.json`` against the committed
+baseline and fails (exit 1) when the XLA-CPU in-place discipline looks
+broken:
+
+* ``assoc_flatness_512_to_65536 < threshold`` (default 0.9) — the set path's
+  per-access cost is supposed to be capacity-free; an in-place-discipline
+  regression (scatter writes, cond-copied operands, read-after-write
+  scheduling) turns it O(capacity) and drops flatness to ~0.1.  Because LLC
+  contention on shared runners also depresses large-C throughput (observed
+  down to ~0.7 with *unchanged* code), a flatness miss alone is only a
+  WARNING unless corroborated by ``assoc_speedup_vs_flat_8192 < 5`` — a
+  real O(capacity) regression collapses that internal ratio to ~1 while
+  machine noise leaves it >= 10.  ``--strict`` makes flatness alone fatal.
+* set-assoc throughput more than ``--drop`` (default 30%) below the
+  baseline snapshot — only enforced when both snapshots carry the same
+  ``machine`` fingerprint: absolute acc/s is meaningless across machines.
+  In practice this arm is for like-for-like comparisons (local dev loop,
+  a future benchmark runner that commits its own snapshots); on GitHub CI
+  the committed baseline comes from a different machine, the comparison is
+  skipped with a NOTE, and the flatness+corroboration tripwire above is
+  the active gate.
+
+Usage (CI runs this right after ``benchmarks.run --only device``):
+
+  python -m benchmarks.check_bench --baseline BENCH_baseline.json \
+      [--fresh BENCH_device.json] [--threshold 0.9] [--drop 0.3] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
+          drop: float = 0.3, strict: bool = False) -> list[str]:
+    """Returns the list of fatal failures (empty = gate passes)."""
+    failures = []
+    flat = fresh.get("assoc_flatness_512_to_65536")
+    speedup = fresh.get("assoc_speedup_vs_flat_8192", 0.0)
+    if flat is None:
+        failures.append("snapshot missing assoc_flatness_512_to_65536")
+    elif flat < threshold:
+        msg = (f"flatness {flat} < {threshold} "
+               f"(speedup vs flat engine: {speedup}x)")
+        if strict or speedup < 5:
+            failures.append("set path no longer capacity-free: " + msg)
+        else:
+            print(f"WARNING: {msg} — not corroborated by the speedup "
+                  "indicator; attributing to machine noise", flush=True)
+
+    if baseline:
+        same_machine = (baseline.get("machine") and
+                        baseline.get("machine") == fresh.get("machine") and
+                        baseline.get("device") == fresh.get("device"))
+        if not same_machine:
+            print("NOTE: baseline from a different machine "
+                  f"({baseline.get('machine')!r} vs {fresh.get('machine')!r})"
+                  " — skipping absolute-throughput comparison", flush=True)
+        else:
+            for key in ("assoc_acc_per_s_small_C", "assoc_acc_per_s_large_C"):
+                base, cur = baseline.get(key), fresh.get(key)
+                if base and cur and cur < base * (1.0 - drop):
+                    failures.append(
+                        f"{key} dropped {(1 - cur / base):.0%} "
+                        f"({base} -> {cur}, limit {drop:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh",
+                    default=os.path.join(_REPO_ROOT, "BENCH_device.json"))
+    ap.add_argument("--baseline", default=None,
+                    help="committed snapshot to compare against (optional)")
+    ap.add_argument("--threshold", type=float, default=0.9)
+    ap.add_argument("--drop", type=float, default=0.3)
+    ap.add_argument("--strict", action="store_true",
+                    help="flatness miss is fatal even without corroboration")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    baseline = None
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"NOTE: baseline {args.baseline!r} unreadable ({e}); "
+                  "skipping throughput comparison", flush=True)
+
+    failures = check(fresh, baseline, threshold=args.threshold,
+                     drop=args.drop, strict=args.strict)
+    for msg in failures:
+        print("FAIL:", msg, flush=True)
+    if not failures:
+        print("bench gate OK:", json.dumps(
+            {k: fresh.get(k) for k in ("assoc_flatness_512_to_65536",
+                                       "assoc_speedup_vs_flat_8192",
+                                       "adaptive_overhead_vs_static")}),
+            flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

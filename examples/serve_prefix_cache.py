@@ -4,7 +4,7 @@ admission policy.  Compares retention policies on a multi-tenant workload.
 
 Run:  PYTHONPATH=src python examples/serve_prefix_cache.py
 """
-from repro.launch.serve import serve
+from repro.serve.driver import serve
 
 for policy in ["lru", "tinylfu", "wtinylfu"]:
     stats = serve("qwen3-4b", n_requests=48, policy=policy, pool_slots=24)

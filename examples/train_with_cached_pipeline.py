@@ -7,7 +7,7 @@ Run:  PYTHONPATH=src python examples/train_with_cached_pipeline.py
 import json
 import shutil
 
-from repro.launch.train import train
+from repro.train.driver import train
 
 shutil.rmtree("/tmp/repro_example_run", ignore_errors=True)
 out = train("minicpm-2b", smoke=True, steps=30, out_dir="/tmp/repro_example_run",

@@ -8,11 +8,12 @@ Subpackages:
   models/      assigned architecture zoo (dense/MoE/hybrid-SSM/xLSTM/audio/VLM)
   configs/     one config per assigned architecture
   optim/       optimizers + schedules
-  train/       train-step builder, losses, remat
+  train/       train-step builder, losses, remat + end-to-end train driver
   serve/       paged KV cache + TinyLFU prefix-cache admission + scheduler
+               + serving driver
   distributed/ sharding rules, pipeline parallelism, compressed collectives
   checkpoint/  sharded fault-tolerant checkpointing
   data/        deterministic resumable data pipeline w/ W-TinyLFU shard cache
-  launch/      mesh construction, multi-pod dry-run, train/serve drivers
+  launch/      TinyLFU experiment drivers (window-adaptation hillclimb)
 """
 __version__ = "1.0.0"

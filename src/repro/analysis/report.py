@@ -85,15 +85,42 @@ def collective_summary(cells, mesh="single", tag=""):
     return "\n".join(lines)
 
 
+def adaptive_table(adir):
+    """Render launch/hillclimb.py trajectory JSONs: adaptive vs best-static
+    hit ratios and where the climber converged."""
+    lines = ["| trace | C | adaptive hit | best static | gap | final quota "
+             "| epochs |",
+             "|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(adir, "*.json"))):
+        rows = json.load(open(f))
+        ad = [r for r in rows if r.get("extra", {}).get("adaptive")]
+        stat = [r for r in rows if not r.get("extra", {}).get("adaptive")]
+        for r in ad:
+            x = r["extra"]
+            tj = x.get("trajectory", {})
+            best = max((s["hit_ratio"] for s in stat), default=None)
+            gap = f"{r['hit_ratio'] - best:+.4f}" if best is not None else "-"
+            beststr = f"{best:.4f}" if best is not None else "-"
+            lines.append(
+                f"| {r['trace']} | {r['cache_size']} | {r['hit_ratio']:.4f} "
+                f"| {beststr} | {gap} | {x.get('final_quota', '-')} "
+                f"| {len(tj.get('quota', []))} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dir", default=os.path.join(ROOT, "experiments/dryrun"))
+    ap.add_argument("--dir", default=None)
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--tag", default="")
     ap.add_argument("--what", default="roofline",
-                    choices=["roofline", "dryrun", "collectives"])
+                    choices=["roofline", "dryrun", "collectives", "adaptive"])
     args = ap.parse_args()
-    cells = load_cells(args.dir)
+    if args.what == "adaptive":
+        print(adaptive_table(
+            args.dir or os.path.join(ROOT, "experiments/adaptive")))
+        return
+    cells = load_cells(args.dir or os.path.join(ROOT, "experiments/dryrun"))
     fn = {"roofline": roofline_table, "dryrun": dryrun_table,
           "collectives": collective_summary}[args.what]
     print(fn(cells, mesh=args.mesh, tag=args.tag))

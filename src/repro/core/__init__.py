@@ -2,7 +2,7 @@
 plus the host cache-policy zoo it is evaluated against."""
 from .sketch import FrequencySketch, SketchConfig, ExactHistogram, default_sketch
 from .tinylfu import TinyLFUAdmission, tinylfu_cache
-from .wtinylfu import WTinyLFU
+from .wtinylfu import WTinyLFU, AdaptiveWTinyLFU
 from .policies import (
     Cache, Eviction, LRUEviction, FIFOEviction, RandomEviction, LFUEviction,
     SLRUEviction, ReplacementPolicy, ARC, LIRS, TwoQ, WLFU, PLFU,
@@ -12,7 +12,7 @@ from .simulate import run_trace, run_matrix, SimResult, save_results, \
 
 __all__ = [
     "FrequencySketch", "SketchConfig", "ExactHistogram", "default_sketch",
-    "TinyLFUAdmission", "tinylfu_cache", "WTinyLFU",
+    "TinyLFUAdmission", "tinylfu_cache", "WTinyLFU", "AdaptiveWTinyLFU",
     "Cache", "Eviction", "LRUEviction", "FIFOEviction", "RandomEviction",
     "LFUEviction", "SLRUEviction", "ReplacementPolicy", "ARC", "LIRS", "TwoQ",
     "WLFU", "PLFU",

@@ -1,0 +1,76 @@
+"""Shared host/device parameters of the runtime-adaptive window climber.
+
+The device climber (`core.device_simulate._climb_step`, jnp running inside
+the compiled epoch scan) and its host twin (`core.wtinylfu.AdaptiveWTinyLFU`,
+plain-python ints) must agree bit-for-bit on every derived constant and every
+integer update, or the hit-sequence parity tests cannot hold.  This module is
+the single source of truth for the parameter resolution and the climb
+arithmetic; it imports nothing heavy so the host-only policy path stays free
+of jax.
+
+All arithmetic is int32-safe (magnitudes stay far below 2^31) and uses
+python floor division, which matches ``jnp.int32`` ``//`` (both floor).
+"""
+from __future__ import annotations
+
+
+def window_cap_max(capacity: int, window_cap: int,
+                   window_max_frac: float) -> int:
+    """Largest window quota the adaptive tables are sized for."""
+    return max(window_cap,
+               min(capacity - 1, int(round(capacity * window_max_frac))))
+
+
+def resolve_climb(epoch_len: int, delta0: int, wmin: int, wmax: int,
+                  tol: int, restart: int, warm_epochs: int,
+                  cap_wmax: int) -> list[int]:
+    """[delta0, wmin, wmax, tol, restart, warm_epochs] with zero fields
+    auto-sized: delta0 = wmax/16, tol = epoch_len/256 (~0.4% hit-rate noise
+    band), restart = epoch_len/16 (~6% hit-rate swing)."""
+    wmax = min(wmax, cap_wmax) if wmax else cap_wmax
+    d0 = delta0 or max(1, wmax // 16)
+    tol = tol or max(1, epoch_len // 256)
+    restart = restart or max(tol + 1, epoch_len // 16)
+    return [d0, max(1, wmin), max(1, wmax), tol, restart,
+            max(1, warm_epochs)]
+
+
+def climb_update(climb: list[int], ehits: int, prev: int, dirn: int,
+                 delta: int, ewma: int, trend: int, k: int, quota: int):
+    """Pure-int twin of the device hill-climb update (one epoch boundary).
+
+    Returns (new_quota, prev, dirn, delta, ewma, trend, k).  See
+    ``core.device_simulate._climb_step`` for the rationale of each rule;
+    the two implementations must stay line-for-line parallel.
+    """
+    d0, wmin, wmax, tol, restart, warm_epochs = climb
+    diff = ehits - prev
+    adiff = diff - trend
+    improved = adiff > tol
+    regressed = adiff < -tol
+    trend_n = 0 if prev < 0 else trend + (diff - trend) // 4
+    dirn_n = -dirn if regressed else dirn
+    if regressed:
+        delta_n = max(delta // 2, 1)
+    elif improved:
+        delta_n = delta
+    else:
+        delta_n = max((delta * 3) // 4, 1)
+    shift = abs(ehits - ewma) > restart
+    span4 = max(d0, (wmax - wmin) // 4)
+    if shift:
+        delta_n = min(max(delta_n, d0) * 2, span4) if improved else d0
+    warm = k < warm_epochs
+    ewma = ehits if (warm or prev < 0) else ewma + (ehits - ewma) // 4
+    if not warm:
+        dirn, delta, trend = dirn_n, delta_n, trend_n
+    else:
+        trend = 0 if prev < 0 else diff
+    move = improved or regressed or shift
+    step = 0 if (warm or not move) else dirn * delta
+    nq = min(max(quota + step, wmin), wmax)
+    if nq <= wmin:
+        dirn = 1
+    elif nq >= wmax:
+        dirn = -1
+    return nq, ehits, dirn, delta, ewma, trend, k + 1

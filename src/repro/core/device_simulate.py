@@ -43,8 +43,9 @@ import jax.numpy as jnp
 
 from repro.kernels.sketch_step import (StepSpec, make_step_params,
                                        init_step_state, step_ref, step_pallas,
-                                       R_HITS)
+                                       rebalance, R_HITS, R_WQUOTA, R_EHITS)
 from repro.kernels.sketch_common import keys_to_lanes
+from . import adaptive
 from .hashing import assoc_geometry, slots_for
 from .sketch import _pow2ceil
 from .simulate import SimResult
@@ -71,6 +72,8 @@ class DeviceWTinyLFU:
     dk_bits_per_item: float = 4.0
     assoc: int | None = None
     counter_bits: int = 4
+    adaptive: bool = False        # runtime hill-climbed window quota
+    window_max_frac: float = 0.5  # adaptive: table headroom for the climb
 
     @property
     def window_cap(self) -> int:
@@ -79,6 +82,19 @@ class DeviceWTinyLFU:
     @property
     def main_cap(self) -> int:
         return max(1, self.capacity - self.window_cap)
+
+    @property
+    def window_cap_max(self) -> int:
+        """Largest quota the adaptive tables can host (static headroom)."""
+        if not self.adaptive:
+            return self.window_cap
+        return adaptive.window_cap_max(self.capacity, self.window_cap,
+                                       self.window_max_frac)
+
+    @property
+    def main_cap_max(self) -> int:
+        """Largest main capacity (window quota at its minimum of 1)."""
+        return max(1, self.capacity - 1)
 
     @property
     def prot_cap(self) -> int:
@@ -110,10 +126,12 @@ class DeviceWTinyLFU:
     @property
     def ways(self) -> int | None:
         """Static gather width in set mode: >= assoc, from the main table's
-        geometry (the window shares it so both tables use one block shape)."""
+        geometry (the window shares it so both tables use one block shape).
+        Adaptive sizing uses the LARGEST main capacity the climb can reach."""
         if self.assoc is None:
             return None
-        return assoc_geometry(self.main_cap, self.assoc)[1]
+        return assoc_geometry(self.main_cap_max if self.adaptive
+                              else self.main_cap, self.assoc)[1]
 
     def _table_slots(self, cap: int, ways: int | None = None) -> int:
         """Static slots to host ``cap`` entries: the capacity itself (flat),
@@ -127,13 +145,17 @@ class DeviceWTinyLFU:
     def spec(self, window_slots: int | None = None,
              main_slots: int | None = None,
              ways: int | None = None) -> StepSpec:
-        """Static geometry; slots may be padded up for vmapped sweeps."""
+        """Static geometry; slots may be padded up for vmapped sweeps.
+        Adaptive mode sizes both tables for the climb's full quota range
+        (window up to ``window_max_frac``, main up to capacity - 1)."""
+        wsize = self.window_cap_max if self.adaptive else self.window_cap
+        msize = self.main_cap_max if self.adaptive else self.main_cap
         return StepSpec(
             width=self.width, rows=self.rows, dk_bits=self.dk_bits,
-            window_slots=window_slots or self._table_slots(self.window_cap),
-            main_slots=main_slots or self._table_slots(self.main_cap),
+            window_slots=window_slots or self._table_slots(wsize),
+            main_slots=main_slots or self._table_slots(msize),
             assoc=(ways or self.ways) if self.assoc is not None else None,
-            counter_bits=self.counter_bits)
+            counter_bits=self.counter_bits, adaptive=self.adaptive)
 
     def params(self, warmup: int = 0) -> jnp.ndarray:
         return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
@@ -196,11 +218,211 @@ def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
     return state, hits.reshape(-1)[:n]
 
 
+# ---------------------------------------------------------------------------
+# adaptive window sizing: epoch-chunked scan + in-program hill-climb
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClimbSpec:
+    """Hill-climber hyperparameters (resolved against a configuration).
+
+    Every ``epoch_len`` accesses the compiled program compares the epoch's
+    hit count with the previous epoch's: within ``tol`` counts as
+    improvement (noise hysteresis) and keeps climbing in the same
+    direction; a regression reverses direction and halves the step (floor
+    1), so the quota converges toward the local optimum with decaying
+    oscillation.  A swing larger than ``restart`` (either sign — the
+    workload changed) re-expands the step to ``delta0`` so the climber can
+    cross the quota range quickly after a phase shift.  The quota is
+    clamped to [wmin, wmax].  Zero fields auto-size (core/adaptive.py):
+    delta0 = wmax/16, wmax = the adaptive table headroom
+    (``window_max_frac`` of capacity), tol = epoch_len/256 (~0.4% hit-rate
+    noise band), restart = epoch_len/16 (~6% hit-rate swing).
+    """
+    epoch_len: int = 4096
+    delta0: int = 0
+    wmin: int = 1
+    wmax: int = 0
+    tol: int = 0
+    restart: int = 0
+    warm_epochs: int = 3
+
+    def resolve(self, cfg: "DeviceWTinyLFU") -> np.ndarray:
+        return np.asarray(
+            adaptive.resolve_climb(self.epoch_len, self.delta0, self.wmin,
+                                   self.wmax, self.tol, self.restart,
+                                   self.warm_epochs, cfg.window_cap_max),
+            np.int32)
+
+
+def _climb_step(params, spec, carry, ehits, climb):
+    """One hill-climb update + rebalance (pure jnp, runs between epochs).
+
+    Three-way comparison against the previous epoch: a real improvement
+    (> tol) keeps direction and step; a real regression (< -tol) reverses
+    and halves the step; the noise plateau in between keeps direction but
+    decays the step 3/4 so a flat hit-ratio landscape freezes the quota
+    instead of letting it drift.  A swing beyond ``restart`` (the workload
+    changed) re-expands the step to delta0.  The first epoch only seeds the
+    baseline — the cache is still warming, and climbing on the fill-up
+    transient launches the quota far from any optimum.
+    """
+    st, prev, dirn, delta, ewma, trend, k = carry
+    quota = st["regs"][R_WQUOTA]
+    diff = ehits - prev
+    # trend correction: judge a move against the background drift (EWMA of
+    # recent diffs), not against zero — a cache still warming up improves
+    # every epoch no matter what the quota does, and crediting that drift
+    # to the last move rides the quota far from any optimum
+    adiff = diff - trend
+    improved = adiff > climb[3]
+    regressed = adiff < -climb[3]
+    trend_n = jnp.where(prev < 0, 0, trend + (diff - trend) // 4)
+    dirn_n = jnp.where(regressed, -dirn, dirn)
+    delta_n = jnp.where(regressed, jnp.maximum(delta // 2, 1),
+                        jnp.where(improved, delta,
+                                  jnp.maximum((delta * 3) // 4, 1)))
+    # disruption restart: while the epoch hit count sits far from its
+    # recent average (phase shift, or mid-recovery after one) the step must
+    # stay wide — consecutive-epoch diffs alone go quiet as soon as the
+    # collapse settles, long before the quota has crossed back to useful
+    # territory, and a decayed step would crawl there at +-1 per epoch.
+    # While the disruption lasts, improving moves double the step (capped
+    # at a quarter of the quota range) so the recovery crosses the range in
+    # a handful of epochs; non-improving ones reset it to delta0
+    shift = jnp.abs(ehits - ewma) > climb[4]
+    span4 = jnp.maximum(climb[0], (climb[2] - climb[1]) // 4)
+    delta_n = jnp.where(
+        shift,
+        jnp.where(improved,
+                  jnp.minimum(jnp.maximum(delta_n, climb[0]) * 2, span4),
+                  climb[0]),
+        delta_n)
+    # warm epochs: the fill-up transient swamps every signal (its epoch
+    # diffs trip even the disruption detector) — hold the quota and step,
+    # and let the baselines FOLLOW the transient (ewma = ehits, trend =
+    # diff) so the handoff into live climbing starts from honest levels
+    # instead of a lagging average that reads as a disruption
+    warm = k < climb[5]
+    ewma = jnp.where(warm | (prev < 0), ehits,
+                     ewma + (ehits - ewma) // 4)
+    dirn = jnp.where(warm, dirn, dirn_n)
+    delta = jnp.where(warm, delta, delta_n)
+    trend = jnp.where(warm, jnp.where(prev < 0, 0, diff), trend_n)
+    # a plateau decays the step but does NOT move: drifting at the decaying
+    # step across a shallow landscape accumulates several delta0 of
+    # displacement before freezing.  Disruptions always move — during a
+    # recovery the trend estimate absorbs the climb's own gains, and
+    # holding still there would stall the recovery mid-range.
+    move = improved | regressed | shift
+    step = jnp.where(warm | ~move, 0, dirn * delta)
+    nq = jnp.clip(quota + step, climb[1], climb[2])
+    # clamp escape: pinned at a range end with a flat (possibly uniformly
+    # terrible) hit landscape there is no regression signal to reverse on —
+    # point the next step back into the range
+    dirn = jnp.where(nq <= climb[1], 1,
+                     jnp.where(nq >= climb[2], -1, dirn))
+    st = rebalance(spec, params, st, nq)
+    return st, ehits, dirn, delta, ewma, trend, k + 1
+
+
+_adaptive_cache: dict = {}
+
+
+def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
+    """One compiled program: scan over epochs, each epoch = fused step over
+    its chunk + climb + rebalance.  No host sync anywhere inside the trace."""
+    key = (spec, backend, interpret)
+    if key not in _adaptive_cache:
+        @jax.jit
+        def run(params, state, los, his, nvalid, climb):
+            def body(carry, x):
+                clo, chi, nv = x
+                st = carry[0]
+                if backend == "pallas":
+                    st, hits = step_pallas(spec, params, st, clo, chi, nv,
+                                           interpret=interpret)
+                else:
+                    st, hits = step_ref(spec, params, st, clo, chi)
+                ehits = st["regs"][R_EHITS]
+                quota = st["regs"][R_WQUOTA]
+                climbed = _climb_step(params, spec, (st,) + carry[1:],
+                                      ehits, climb)
+                # a partial (padded tail) epoch must not climb: its truncated
+                # hit count reads as a phase shift, and the jit backend —
+                # which runs the tail outside the scan — would disagree on
+                # final quota and state
+                full = nv >= jnp.int32(clo.shape[0])
+                carry = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(full, a, b), climbed,
+                    (st,) + carry[1:])
+                return carry, (hits, ehits, quota)
+
+            init = (state, jnp.int32(-1), jnp.int32(1), climb[0],
+                    jnp.int32(-1), jnp.int32(0), jnp.int32(0))
+            (st, *_), (hits, ehits, quotas) = jax.lax.scan(
+                body, init, (los, his, nvalid))
+            return st, hits, ehits, quotas
+        _adaptive_cache[key] = run
+    return _adaptive_cache[key]
+
+
+def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
+                  lo, hi, climb: ClimbSpec, backend: str, interpret: bool):
+    """Epoch-chunked adaptive simulation; returns (state, hits, trajectory).
+
+    The jit backend scans whole epochs and runs the (< epoch_len) tail as
+    one extra dispatch without a final climb; the pallas backend folds the
+    tail into a masked final epoch whose climb is skipped.  Both emit
+    identical per-access hit flags, final quota, and trajectory (full
+    epochs only).
+    """
+    n = lo.shape[0]
+    E = int(climb.epoch_len)
+    cvec = jnp.asarray(climb.resolve(cfg))
+    if backend == "pallas":
+        pad = (-n) % E
+        if pad:
+            z = jnp.zeros((pad,), lo.dtype)
+            lo = jnp.concatenate([lo, z])
+            hi = jnp.concatenate([hi, z])
+        ne = lo.shape[0] // E
+        nvalid = jnp.minimum(
+            jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
+        state, hits, ehits, quotas = _adaptive_runner(
+            spec, backend, interpret)(params, state,
+                                      lo.reshape(ne, E), hi.reshape(ne, E),
+                                      nvalid, cvec)
+        nfull = n // E                   # drop the partial tail's row so the
+        traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
+        return state, hits.reshape(-1)[:n], traj  # trajectory matches jit
+    ne = n // E
+    nfull = ne * E
+    hits_parts = []
+    ehits = quotas = None
+    if ne:
+        state, hits, ehits, quotas = _adaptive_runner(
+            spec, backend, interpret)(params, state,
+                                      lo[:nfull].reshape(ne, E),
+                                      hi[:nfull].reshape(ne, E),
+                                      jnp.full((ne,), E, jnp.int32), cvec)
+        hits_parts.append(hits.reshape(-1))
+    if n - nfull:
+        state, tail = _jit_step(spec, params, state, lo[nfull:], hi[nfull:])
+        hits_parts.append(tail)
+    if not hits_parts:                       # zero-length trace
+        hits_parts.append(jnp.zeros((0,), jnp.int32))
+    hits = jnp.concatenate(hits_parts) if len(hits_parts) > 1 else \
+        hits_parts[0]
+    return state, hits, (ehits, quotas)
+
+
 def simulate_trace(trace: np.ndarray, capacity: int, *,
                    window_frac: float = 0.01, sample_factor: int = 8,
                    warmup: int = 0, backend: str = "jit", chunk: int = 512,
                    interpret: bool | None = None, trace_name: str = "?",
-                   return_state: bool = False, **cfg_kw) -> SimResult:
+                   return_state: bool = False, adaptive: bool = False,
+                   climb: ClimbSpec | None = None, **cfg_kw) -> SimResult:
     """Device twin of ``simulate.run_trace(WTinyLFU(capacity), trace)``.
 
     ``backend="jit"`` runs the scan twin; ``backend="pallas"`` launches the
@@ -209,18 +431,36 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     ``assoc=W`` (via cfg_kw) selects the W-way set-associative tables —
     O(W) per access instead of O(capacity), hit ratios within ±0.01 of the
     exact path; ``counter_bits=8`` enables sample factors above 16.
+
+    ``adaptive=True`` makes the window/main split runtime device state: an
+    epoch-based hill-climber (``climb``, default :class:`ClimbSpec`) adjusts
+    the window quota between epochs inside the same compiled program, and
+    the per-epoch (quota, hits) trajectory is returned in
+    ``extra["trajectory"]``.  ``window_frac`` seeds the initial quota.
     """
     cfg = DeviceWTinyLFU(capacity, window_frac=window_frac,
-                         sample_factor=sample_factor, **cfg_kw)
+                         sample_factor=sample_factor, adaptive=adaptive,
+                         **cfg_kw)
     spec = cfg.spec()
     params = cfg.params(warmup=warmup)
     state = init_step_state(spec, cfg.window_cap, cfg.main_cap)
     lo, hi = _trace_lanes(trace)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    climb = climb or ClimbSpec()
 
     t0 = time.perf_counter()
-    if backend == "jit":
+    trajectory = None
+    if adaptive:
+        if backend not in ("jit", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        state, hits, (ehits, quotas) = _run_adaptive(
+            cfg, spec, params, state, lo, hi, climb, backend, interpret)
+        if ehits is not None:
+            trajectory = {"epoch_len": climb.epoch_len,
+                          "epoch_hits": np.asarray(ehits).tolist(),
+                          "quota": np.asarray(quotas).tolist()}
+    elif backend == "jit":
         state, hits = _run_jit(spec, params, state, lo, hi)
     elif backend == "pallas":
         state, hits = _run_pallas(spec, params, state, lo, hi, chunk,
@@ -231,13 +471,19 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     wall = time.perf_counter() - t0
 
     counted = len(trace) - warmup
-    res = SimResult(policy="w-tinylfu(device)", cache_size=capacity,
+    extra = {"backend": backend, "window_frac": window_frac,
+             "assoc": cfg.assoc, "device": jax.default_backend()}
+    if adaptive:
+        extra["adaptive"] = True
+        extra["final_quota"] = int(regs[R_WQUOTA])
+        if trajectory is not None:
+            extra["trajectory"] = trajectory
+    res = SimResult(policy="w-tinylfu(device)" + ("+climb" if adaptive
+                                                  else ""),
+                    cache_size=capacity,
                     trace=trace_name, accesses=counted, hits=int(regs[R_HITS]),
                     hit_ratio=int(regs[R_HITS]) / max(1, counted),
-                    wall_s=wall,
-                    extra={"backend": backend, "window_frac": window_frac,
-                           "assoc": cfg.assoc,
-                           "device": jax.default_backend()})
+                    wall_s=wall, extra=extra)
     if return_state:
         return res, state, hits
     return res
@@ -250,7 +496,8 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
 def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
                    sample_factor: int = 8, warmup: int = 0,
                    trace_name: str = "?", verbose: bool = False,
-                   mode: str = "auto", **cfg_kw) -> list[SimResult]:
+                   mode: str = "auto", adaptive: bool = False,
+                   climb: ClimbSpec | None = None, **cfg_kw) -> list[SimResult]:
     """Cartesian (capacity × window_frac) sweep as one compiled program.
 
     All configurations share the static geometry of the *largest* one (table
@@ -270,13 +517,27 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
 
     ``trace`` may be ``(N,)`` (shared by all configs) or ``(G, N)`` (one
     trace per grid point, e.g. seed sweeps).
+
+    ``adaptive=True`` runs each grid point as one epoch-chunked compiled
+    program with the in-program hill-climber (``window_fracs`` seed the
+    initial quotas) — sequential mode only: the climbers' quota histories
+    diverge per config, which defeats the shared-geometry premise of the
+    vmapped grid.
     """
     grid = [DeviceWTinyLFU(C, window_frac=wf, sample_factor=sample_factor,
-                           **cfg_kw)
+                           adaptive=adaptive, **cfg_kw)
             for C in capacities for wf in window_fracs]
     gridlab = [(C, wf) for C in capacities for wf in window_fracs]
     if mode == "auto":
-        mode = "vmap" if jax.default_backend() == "tpu" else "sequential"
+        # adaptive grids can't share geometry (quota histories diverge), so
+        # auto resolves to the only valid mode even on accelerators
+        mode = "sequential" if adaptive else (
+            "vmap" if jax.default_backend() == "tpu" else "sequential")
+    if adaptive:
+        if mode == "vmap":
+            raise ValueError("adaptive sweeps run per-config compiled "
+                             "programs: use mode='sequential'")
+        climb = climb or ClimbSpec()
 
     trace = np.asarray(trace)
     shared_trace = trace.ndim == 1
@@ -339,8 +600,13 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         for c, (l, h) in zip(grid, lanes):
             spec = c.spec()
             st = init_step_state(spec, c.window_cap, c.main_cap)
-            outs.append(_jit_step(spec, c.params(warmup=warmup), st,
-                                  l, h)[0]["regs"])
+            if adaptive:
+                st, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
+                                         st, l, h, climb, "jit", False)
+                outs.append(st["regs"])
+            else:
+                outs.append(_jit_step(spec, c.params(warmup=warmup), st,
+                                      l, h)[0]["regs"])
         regs = np.stack([np.asarray(r) for r in outs])
     else:
         raise ValueError(f"unknown mode {mode!r}")
@@ -350,16 +616,20 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
     out = []
     for g, (C, wf) in enumerate(gridlab):
         hits = int(regs[g, R_HITS])
+        extra = {"backend": f"jit+{mode}", "window_frac": wf,
+                 "grid": len(grid), "grid_wall_s": wall,
+                 "assoc": grid[g].assoc,
+                 "device": jax.default_backend()}
+        if adaptive:
+            extra["adaptive"] = True
+            extra["final_quota"] = int(regs[g, R_WQUOTA])
         out.append(SimResult(
-            policy="w-tinylfu(device)", cache_size=C, trace=trace_name,
+            policy="w-tinylfu(device)" + ("+climb" if adaptive else ""),
+            cache_size=C, trace=trace_name,
             accesses=counted, hits=hits, hit_ratio=hits / max(1, counted),
             # per-row amortized wall so accesses/wall_s is per-config and
             # comparable to host rows; the grid's total is in grid_wall_s
-            wall_s=wall / len(grid),
-            extra={"backend": f"jit+{mode}", "window_frac": wf,
-                   "grid": len(grid), "grid_wall_s": wall,
-                   "assoc": grid[g].assoc,
-                   "device": jax.default_backend()}))
+            wall_s=wall / len(grid), extra=extra))
         if verbose:
             print(f"  {trace_name:>12s} C={C:<7d} wf={wf:<5.2f} "
                   f"hit={out[-1].hit_ratio:.4f}  (grid of {len(grid)}, "

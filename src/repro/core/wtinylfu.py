@@ -25,6 +25,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from .adaptive import window_cap_max, resolve_climb, climb_update
 from .hashing import slots_for, set_ways, set_index32_np, WSET_SALT
 from .policies import SLRUEviction, SetAssociativeSLRU, ReplacementPolicy
 from .sketch import default_sketch
@@ -127,3 +128,136 @@ class WTinyLFU(ReplacementPolicy):
                 self.main.remove(victim)
                 self.main.insert(cand, vset, t)
         return False
+
+
+class AdaptiveWTinyLFU(ReplacementPolicy):
+    """Runtime-adaptive W-TinyLFU: the window/main split is mutable state
+    driven by an epoch-based hill-climber — the host twin of the device
+    engine's ``adaptive=True`` mode (kernels/sketch_step.py runtime quota +
+    core/device_simulate.py climb), exact flat-table layout.
+
+    Every decision mirrors the device step bit-for-bit: stamps derive from
+    the global access index (window ``2t`` / main ``2t+1`` so migration can
+    never collide two entries), SLRU priority is the packed-meta order
+    (probation stamp < protected stamp), the runtime protected budget is
+    ``max(1, mcap_rt * prot_cap // main_cap)``, misses insert into the
+    window gated by the runtime quota, and every ``epoch_len`` accesses the
+    shared integer climb rule (``core.adaptive.climb_update``) moves the
+    quota and the rebalance migrates displaced window records into main's
+    free room (stamps preserved) or evicts main's weakest beyond its new
+    budget.  With collision-free sketches on both sides the per-access hit
+    sequence equals the device climber's exactly (tests pin this).
+    """
+    name = "w-tinylfu-adaptive"
+
+    def __init__(self, capacity: int, window_frac: float = 0.01,
+                 sample_factor: int = 8, protected_frac: float = 0.8,
+                 seed: int = 0, counters_per_item: float = 1.0,
+                 doorkeeper: bool = True, window_max_frac: float = 0.5,
+                 epoch_len: int = 4096, delta0: int = 0, wmin: int = 1,
+                 wmax: int = 0, tol: int = 0, restart: int = 0,
+                 warm_epochs: int = 3):
+        super().__init__(capacity)
+        self.window_cap0 = max(1, int(round(capacity * window_frac)))
+        self.main_cap0 = max(1, capacity - self.window_cap0)
+        self.total = self.window_cap0 + self.main_cap0
+        self.prot_cap0 = max(1, int(self.main_cap0 * protected_frac))
+        self.quota = self.window_cap0
+        self.epoch_len = epoch_len
+        self.climb = resolve_climb(
+            epoch_len, delta0, wmin, wmax, tol, restart, warm_epochs,
+            window_cap_max(capacity, self.window_cap0, window_max_frac))
+        # window: key -> stamp; main: key -> [protected, stamp]
+        self._window: dict = {}
+        self._main: dict = {}
+        self._pcount = 0
+        self._t = 0
+        # climber carry (mirrors the device scan carry)
+        self._prev, self._dirn, self._delta = -1, 1, self.climb[0]
+        self._ewma, self._trend, self._k = -1, 0, 0
+        self._ehits = 0
+        self._eacc = 0
+        self.quota_trajectory: list[int] = []
+        sketch = default_sketch(capacity, sample_factor=sample_factor,
+                                seed=seed, counters_per_item=counters_per_item,
+                                doorkeeper=doorkeeper)
+        self.admission = TinyLFUAdmission(sketch)
+
+    def __contains__(self, key):
+        return key in self._window or key in self._main
+
+    def _access(self, key) -> bool:
+        t = self._t
+        self._t += 1
+        # stamps are globally unique across tables (window even, main odd)
+        # so rebalance migration can never collide two entries on one stamp
+        # — the device kernel uses the same mapping (see _one_access_flat)
+        wst, mst = 2 * t, 2 * t + 1
+        self.admission.record(key)
+        mcap_rt = self.total - self.quota
+        prot_rt = max(1, mcap_rt * self.prot_cap0 // max(1, self.main_cap0))
+        hit = True
+        if key in self._window:
+            self._window[key] = wst
+        elif key in self._main:
+            e = self._main[key]
+            if not e[0]:
+                self._pcount += 1
+            e[0], e[1] = True, mst
+            if self._pcount > prot_rt:
+                # demote the protected LRU back to probation MRU
+                kd = min((k for k, v in self._main.items() if v[0]),
+                         key=lambda k: self._main[k][1])
+                self._main[kd] = [False, mst]
+                self._pcount -= 1
+        else:
+            hit = False
+            if len(self._window) >= self.quota:
+                cand = min(self._window, key=self._window.get)
+                del self._window[cand]
+                self._window[key] = wst
+                if len(self._main) < mcap_rt:
+                    self._main[cand] = [False, mst]
+                else:
+                    victim = min(self._main, key=lambda k: tuple(self._main[k]))
+                    if self.admission.admit(cand, victim):
+                        self._pcount -= self._main.pop(victim)[0]
+                        self._main[cand] = [False, mst]
+            else:
+                self._window[key] = wst
+        self._ehits += hit
+        self._eacc += 1
+        if self._eacc == self.epoch_len:
+            self._epoch_boundary()
+        return hit
+
+    def _epoch_boundary(self):
+        # record the quota that was IN EFFECT for the finished epoch (the
+        # device scan emits the same pre-climb value next to epoch_hits)
+        self.quota_trajectory.append(self.quota)
+        nq, self._prev, self._dirn, self._delta, self._ewma, self._trend, \
+            self._k = climb_update(self.climb, self._ehits, self._prev,
+                                   self._dirn, self._delta, self._ewma,
+                                   self._trend, self._k, self.quota)
+        self._rebalance(nq)
+        self._ehits = 0
+        self._eacc = 0
+
+    def _rebalance(self, nq: int):
+        """Host mirror of the device epoch rebalance (_rebalance_flat)."""
+        mcap_new = self.total - nq
+        n_wev = max(0, len(self._window) - nq)
+        if n_wev:
+            victims = sorted(self._window, key=self._window.get)[:n_wev]
+            room = max(0, mcap_new - len(self._main))
+            for kx in sorted(victims, key=self._window.get,
+                             reverse=True)[:room]:
+                self._main[kx] = [False, self._window[kx]]
+            for kx in victims:
+                del self._window[kx]
+        n_mev = max(0, len(self._main) - mcap_new)
+        if n_mev:
+            for kx in sorted(self._main,
+                             key=lambda k: tuple(self._main[k]))[:n_mev]:
+                self._pcount -= self._main.pop(kx)[0]
+        self.quota = nq

@@ -11,7 +11,7 @@ Determinism & fault tolerance:
   * the sample stream is a pure function of (seed, step, host_id) — a
     restarted job replays the identical batch sequence from any step;
   * `state_dict()/load_state_dict()` round-trips the cursor through
-    checkpoints (launch/train.py saves it alongside the model).
+    checkpoints (train/driver.py saves it alongside the model).
 """
 from __future__ import annotations
 

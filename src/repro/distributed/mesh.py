@@ -14,9 +14,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(
-            f"mesh {shape} needs {n} devices, found {len(devices)} — run "
-            "under launch/dryrun.py (sets xla_force_host_platform_device_count)"
-            " or on real hardware")
+            f"mesh {shape} needs {n} devices, found {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count or run on "
+            "real hardware")
     return jax.make_mesh(shape, axes, devices=devices[:n])
 
 

@@ -123,6 +123,11 @@ R_SIZE = 0                    # sketch additions since last reset
 R_PCOUNT = 1                  # protected entries within main (flat path only)
 R_T = 2                       # global access index == LRU stamp
 R_HITS = 3                    # counted hits (post warmup)
+# adaptive-mode registers (zero / inert when StepSpec.adaptive is False)
+R_WQUOTA = 4                  # runtime window capacity (hill-climbed)
+R_WCOUNT = 5                  # resident window entries (flat adaptive only)
+R_MCOUNT = 6                  # resident main entries (flat adaptive only)
+R_EHITS = 7                   # hits this epoch (reset by rebalance)
 NREGS = 8
 
 # packed set-associative record columns (window carries two extra lanes: the
@@ -147,6 +152,7 @@ class StepSpec:
     main_slots: int = 1           # main table size (>= any main_cap used)
     assoc: int | None = None      # ways per set; None = flat exact tables
     counter_bits: int = 4         # sketch counter width: 4 (cap 15) or 8 (255)
+    adaptive: bool = False        # runtime window quota (regs[R_WQUOTA])
 
     def __post_init__(self):
         assert _pow2(self.width) and self.width % 8 == 0
@@ -234,16 +240,30 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
     ``cap % n_sets`` sets keep one extra usable way; capacities below the
     set count leave the excess sets empty (keys hashing there bypass that
     table — a documented vmapped-sweep approximation).
+
+    ``spec.adaptive`` flips the capacity mechanism from init-time padding to
+    runtime state: every slot is usable at the static level, ``window_cap``
+    seeds the ``regs[R_WQUOTA]`` register (the hill-climbed runtime window
+    quota), and the per-access step derives both tables' effective
+    capacities from the registers instead of from padding (flat: resident
+    counts gate inserts; set: per-set usable-way masks).
     """
     wcap = spec.window_slots if window_cap is None else int(window_cap)
     mcap = spec.main_slots if main_cap is None else int(main_cap)
     assert 1 <= wcap <= spec.window_slots and 1 <= mcap <= spec.main_slots
 
+    regs = jnp.zeros((NREGS,), jnp.int32)
+    if spec.adaptive:
+        regs = regs.at[R_WQUOTA].set(wcap)
     common = {
         "counters": jnp.zeros((spec.rows * spec.words_per_row,), jnp.int32),
         "doorkeeper": jnp.zeros((spec.dk_words,), jnp.int32),
-        "regs": jnp.zeros((NREGS,), jnp.int32),
+        "regs": regs,
     }
+    if spec.adaptive:
+        # no init-time padding: capacities live in regs/params at runtime
+        wcap = spec.window_slots
+        mcap = spec.main_slots
 
     if spec.assoc is None:
         def table(slots, cap):
@@ -443,7 +463,15 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
 
 def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                      klo, khi, kidx, kdkb):
-    """Advance the full W-TinyLFU state by one access (exact flat tables)."""
+    """Advance the full W-TinyLFU state by one access (exact flat tables).
+
+    ``spec.adaptive`` swaps the capacity mechanism: instead of init-time
+    padding, the window quota lives in ``regs[R_WQUOTA]`` and resident
+    counts (``R_WCOUNT``/``R_MCOUNT``) gate inserts — at quota the argmin
+    hides empty slots so the LRU/SLRU victim is displaced exactly as if the
+    table were that size.  All adaptive logic is under a static Python
+    branch, so ``adaptive=False`` compiles to the identical program.
+    """
     regs = state["regs"]
     t = regs[R_T]
 
@@ -457,6 +485,32 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     mlo, mhi, mmeta = state["mlo"], state["mhi"], state["mmeta"]
     midx, mdkb = state["midx"], state["mdkb"]
 
+    if spec.adaptive:
+        wquota = regs[R_WQUOTA]
+        wcount = regs[R_WCOUNT]
+        mcount = regs[R_MCOUNT]
+        # total capacity is split at runtime: main gets what the window
+        # quota leaves; the protected budget keeps the static FRACTION
+        # (prot_cap/main_cap scales with the runtime main capacity, and
+        # equals params[P_PROT_CAP] exactly when the quota sits at its
+        # configured split — the pinned-quota differential tests rely on it)
+        mcap_rt = params[P_WINDOW_CAP] + params[P_MAIN_CAP] - wquota
+        prot_rt = jnp.maximum(1, mcap_rt * params[P_PROT_CAP]
+                              // jnp.maximum(1, params[P_MAIN_CAP]))
+        # adaptive stamps are globally unique ACROSS tables (window even,
+        # main odd): one access can stamp both tables (window insert +
+        # candidate admit), and the rebalance later migrates window records
+        # into main — colliding stamps there would leave victim selection
+        # to slot-index tie-breaks no host twin can mirror.  Within a
+        # table the 2t/2t+1 mapping preserves every ordering, so a pinned
+        # quota still reproduces the static path's hit sequence exactly.
+        wst = t + t
+        mst = t + t + 1
+    else:
+        prot_rt = params[P_PROT_CAP]
+        wst = t
+        mst = t
+
     # -- 2. lookups (meta >= 0 <=> resident; padding slots hold sentinel key)
     jw = jnp.argmax((wlo == klo) & (whi == khi))
     hit_w = (wlo[jw] == klo) & (whi[jw] == khi) & (wmeta[jw] >= 0)
@@ -465,34 +519,59 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     hit = hit_w | hit_m
 
     # -- 3a. window hit: refresh LRU stamp -----------------------------------
-    wmeta = wmeta.at[jw].set(jnp.where(hit_w, t, wmeta[jw]))
+    wmeta = wmeta.at[jw].set(jnp.where(hit_w, wst, wmeta[jw]))
 
     # -- 3b. main hit: SLRU promote-or-refresh -> protected MRU --------------
     promote = hit_m & (mmeta[jm] < _PROT)
-    mmeta = mmeta.at[jm].set(jnp.where(hit_m, _PROT | t, mmeta[jm]))
+    mmeta = mmeta.at[jm].set(jnp.where(hit_m, _PROT | mst, mmeta[jm]))
     pcount = regs[R_PCOUNT] + promote.astype(jnp.int32)
-    # protected overflow -> demote its LRU entry back to probation MRU
-    over = pcount > params[P_PROT_CAP]
+    # protected overflow -> demote its LRU entry back to probation MRU.
+    # Adaptive: a rebalance can shrink the runtime budget below the resident
+    # protected count, so the drain is gated on a main hit (one demotion per
+    # promote-or-refresh, like the host twin) — draining on every access
+    # would stamp a demotion at t in the same access that inserts a
+    # window-displaced candidate at t, breaking stamp uniqueness.  In the
+    # static path over implies a promote just happened (the budget is
+    # constant), so the gate is vacuous there and the branch keeps the
+    # compiled program identical.
+    if spec.adaptive:
+        over = hit_m & (pcount > prot_rt)
+    else:
+        over = pcount > prot_rt
     kd = jnp.argmin(jnp.where(mmeta >= _PROT, mmeta, _I32_MAX))
-    mmeta = mmeta.at[kd].set(jnp.where(over, t, mmeta[kd]))
+    mmeta = mmeta.at[kd].set(jnp.where(over, mst, mmeta[kd]))
     pcount = pcount - over.astype(jnp.int32)
 
     # -- 4. miss: insert into window; LRU overflow asks admission ------------
     miss = ~hit
     # argmin(wmeta): empty (-1) before LRU stamps; padding (+MAX) never picked
-    ws = jnp.argmin(wmeta)
+    if spec.adaptive:
+        # at quota, hide the (statically unpadded) empty slots so the argmin
+        # lands on the LRU resident — the runtime equivalent of padding
+        at_wcap = wcount >= wquota
+        ws = jnp.argmin(jnp.where(at_wcap & (wmeta == _EMPTY), _I32_MAX,
+                                  wmeta))
+    else:
+        ws = jnp.argmin(wmeta)
     push = miss & (wmeta[ws] >= 0)              # evicting a resident entry
+    if spec.adaptive:                           # R_WCOUNT bookkeeping
+        w_filled = miss & (wmeta[ws] == _EMPTY)
     cand_lo, cand_hi = wlo[ws], whi[ws]
     cand_idx, cand_dkb = widx[ws], wdkb[ws]
     wlo = wlo.at[ws].set(jnp.where(miss, klo, wlo[ws]))
     whi = whi.at[ws].set(jnp.where(miss, khi, whi[ws]))
-    wmeta = wmeta.at[ws].set(jnp.where(miss, t, wmeta[ws]))
+    wmeta = wmeta.at[ws].set(jnp.where(miss, wst, wmeta[ws]))
     widx = widx.at[ws].set(jnp.where(miss, kidx, widx[ws]))
     wdkb = wdkb.at[ws].set(jnp.where(miss, kdkb, wdkb[ws]))
 
     # single argmin = free slot < probation LRU < protected LRU (exact SLRU
     # victim priority); padding (+MAX) is unreachable
-    tslot = jnp.argmin(mmeta)
+    if spec.adaptive:
+        at_mcap = mcount >= mcap_rt
+        tslot = jnp.argmin(jnp.where(at_mcap & (mmeta == _EMPTY), _I32_MAX,
+                                     mmeta))
+    else:
+        tslot = jnp.argmin(mmeta)
     vmeta = mmeta[tslot]
     m_free = vmeta < 0
     # fused TinyLFU verdict from stored probes (post-record sketch state)
@@ -503,15 +582,22 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     do_ins = push & (m_free | admit)
     mlo = mlo.at[tslot].set(jnp.where(do_ins, cand_lo, mlo[tslot]))
     mhi = mhi.at[tslot].set(jnp.where(do_ins, cand_hi, mhi[tslot]))
-    mmeta = mmeta.at[tslot].set(jnp.where(do_ins, t, mmeta[tslot]))
+    mmeta = mmeta.at[tslot].set(jnp.where(do_ins, mst, mmeta[tslot]))
     midx = midx.at[tslot].set(jnp.where(do_ins, cand_idx, midx[tslot]))
     mdkb = mdkb.at[tslot].set(jnp.where(do_ins, cand_dkb, mdkb[tslot]))
     pcount = pcount - (do_ins & (vmeta >= _PROT)).astype(jnp.int32)
 
     # -- 5. bookkeeping ------------------------------------------------------
     counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
-    regs = jnp.stack([size, pcount, t + 1, regs[R_HITS] + counted,
-                      regs[4], regs[5], regs[6], regs[7]])
+    if spec.adaptive:
+        regs = jnp.stack([size, pcount, t + 1, regs[R_HITS] + counted,
+                          wquota,
+                          wcount + w_filled.astype(jnp.int32),
+                          mcount + (do_ins & m_free).astype(jnp.int32),
+                          regs[R_EHITS] + hit.astype(jnp.int32)])
+    else:
+        regs = jnp.stack([size, pcount, t + 1, regs[R_HITS] + counted,
+                          regs[4], regs[5], regs[6], regs[7]])
     new_state = {"counters": counters, "doorkeeper": dk,
                  "wlo": wlo, "whi": whi, "wmeta": wmeta,
                  "widx": widx, "wdkb": wdkb,
@@ -566,15 +652,68 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     km1, km2 = kmset[0], kmset[1]
     same_km = km2 == km1
 
+    if spec.adaptive:
+        # runtime window quota: per-set usable ways follow the same
+        # distribution rule as init-time padding (core.hashing.set_ways —
+        # the first quota % n_sets sets keep one extra way), so a quota
+        # pinned at the configured split reproduces the static padding
+        # exactly.  Ways at or beyond a set's usable count READ as padding
+        # (_I32_MAX) for every decision; the epoch rebalance keeps them
+        # EMPTY in storage, so the write-back restores _EMPTY bit-exactly.
+        wquota = regs[R_WQUOTA]
+        mcap_rt = params[P_WINDOW_CAP] + params[P_MAIN_CAP] - wquota
+        nws, nms = spec.window_sets, spec.main_sets
+        way_ids = jnp.arange(A, dtype=jnp.int32)
+
+        def w_usable(s):
+            return wquota // nws + (s < wquota % nws).astype(jnp.int32)
+
+        def m_usable(s):
+            return mcap_rt // nms + (s < mcap_rt % nms).astype(jnp.int32)
+
+        def mask_ways(blk, u, col):
+            return blk.at[:, col].set(
+                jnp.where(way_ids >= u, _I32_MAX, blk[:, col]))
+
+        def unmask_ways(blk, u, col):
+            return blk.at[:, col].set(
+                jnp.where(way_ids >= u, _EMPTY, blk[:, col]))
+        # globally unique stamps across tables (window even, main odd):
+        # see _one_access_flat — the rebalance migrates window records
+        # into main, where a stamp collision would leave victim
+        # selection to way-index tie-breaks
+        wst = t + t
+        mst = t + t + 1
+    else:
+        def mask_ways(blk, u, col):
+            return blk
+
+        def unmask_ways(blk, u, col):
+            return blk
+
+        def w_usable(s):
+            return None
+
+        def m_usable(s):
+            return None
+        wst = t
+        mst = t
+
     # -- 2. lookups: the key's window set and both main choice sets ----------
-    wblk = jax.lax.dynamic_slice(wtab, (kwset * A, 0), (A, spec.wcols))
+    wblk = mask_ways(
+        jax.lax.dynamic_slice(wtab, (kwset * A, 0), (A, spec.wcols)),
+        w_usable(kwset), WT_META)
     wmeta = wblk[:, WT_META]
     match_w = (wblk[:, WT_LO] == klo) & (wblk[:, WT_HI] == khi) & (wmeta >= 0)
     hit_w = match_w.any()
     jw = jnp.argmax(match_w)
 
-    mblk1 = jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols))
-    mblk2 = jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols))
+    mblk1 = mask_ways(
+        jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols)),
+        m_usable(km1), MT_META)
+    mblk2 = mask_ways(
+        jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols)),
+        m_usable(km2), MT_META)
 
     def match_in(blk):
         return ((blk[:, MT_LO] == klo) & (blk[:, MT_HI] == khi)
@@ -588,11 +727,11 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     hit = hit_w | hit_m
 
     # -- 3a. window hit/miss: refresh stamp, insert on miss (not yet written)
-    wmeta = wmeta.at[jw].set(jnp.where(hit_w, t, wmeta[jw]))
+    wmeta = wmeta.at[jw].set(jnp.where(hit_w, wst, wmeta[jw]))
     miss = ~hit
     ws = jnp.argmin(wmeta)
     newrow = jnp.concatenate(
-        [jnp.stack([klo, khi, t, km1, km2]), kidx, kdkb]).astype(jnp.int32)
+        [jnp.stack([klo, khi, wst, km1, km2]), kidx, kdkb]).astype(jnp.int32)
     # padding (+MAX) can only win the argmin in a zero-way set (vmapped
     # sweeps far below the shared geometry, or degenerate tiny windows):
     # such an access bypasses the window — the incoming key itself becomes
@@ -608,7 +747,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     def hit_update(blk, match, hit_half):
         meta = blk[:, MT_META]
         j = jnp.argmax(match)
-        meta = meta.at[j].set(jnp.where(hit_half, _PROT | t, meta[j]))
+        meta = meta.at[j].set(jnp.where(hit_half, _PROT | mst, meta[j]))
         # the set's protected budget scales its usable ways by the global
         # protected fraction; counting resident protected beats carrying a
         # per-set register (padding meta +MAX excluded: stamps < 2^31-1)
@@ -618,7 +757,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
                           // jnp.maximum(1, params[P_MAIN_CAP]))
         over = hit_half & (nprot > cap)
         kd = jnp.argmin(jnp.where(meta >= _PROT, meta, _I32_MAX))
-        meta = meta.at[kd].set(jnp.where(over, t, meta[kd]))
+        meta = meta.at[kd].set(jnp.where(over, mst, meta[kd]))
         return blk.at[:, MT_META].set(meta)
 
     mblk1u = hit_update(mblk1, match1, hit1)
@@ -635,8 +774,12 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     def fixup(cb, c):
         return jnp.where(c == km2, m2eff, jnp.where(c == km1, mblk1u, cb))
 
-    cb1 = fixup(jax.lax.dynamic_slice(mtab, (c1 * A, 0), (A, spec.mcols)), c1)
-    cb2 = fixup(jax.lax.dynamic_slice(mtab, (c2 * A, 0), (A, spec.mcols)), c2)
+    cb1 = fixup(mask_ways(
+        jax.lax.dynamic_slice(mtab, (c1 * A, 0), (A, spec.mcols)),
+        m_usable(c1), MT_META), c1)
+    cb2 = fixup(mask_ways(
+        jax.lax.dynamic_slice(mtab, (c2 * A, 0), (A, spec.mcols)),
+        m_usable(c2), MT_META), c2)
     cblk = jnp.concatenate([cb1, cb2], axis=0)          # (2A, cols)
     # argmin = empty < probation LRU < protected LRU across both sets;
     # ties pick the first half, so aliased choice sets stay consistent
@@ -651,7 +794,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     # all-padding candidate sets (see w_ok above) never accept an insert
     do_ins = push & (vic[MT_META] != _I32_MAX) & (m_free | admit)
     candrow = jnp.concatenate(
-        [jnp.stack([cand[WT_LO], cand[WT_HI], t]),
+        [jnp.stack([cand[WT_LO], cand[WT_HI], mst]),
          cand[5:5 + rows], cand[5 + rows:5 + rows + dkp]]).astype(jnp.int32)
     in1 = do_ins & (tslot < A)
     in2 = do_ins & (tslot >= A)
@@ -662,6 +805,13 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     cb2u = jnp.where(same_c, cb1u, cb2u)
 
     # -- 5. writes last; later writes win where the four sets alias ----------
+    # (adaptive: masked ways are restored to EMPTY before the write — the
+    # decisions above never touched them, and storage must stay quota-free)
+    mblk1u = unmask_ways(mblk1u, m_usable(km1), MT_META)
+    m2eff = unmask_ways(m2eff, m_usable(km2), MT_META)
+    cb1u = unmask_ways(cb1u, m_usable(c1), MT_META)
+    cb2u = unmask_ways(cb2u, m_usable(c2), MT_META)
+    wblk = unmask_ways(wblk, w_usable(kwset), WT_META)
     zm = _sched_dep(mblk2u) | _sched_dep(cb1u) | _sched_dep(cb2u)
     mtab = jax.lax.dynamic_update_slice(mtab, mblk1u | zm, (km1 * A, 0))
     mtab = jax.lax.dynamic_update_slice(mtab, m2eff, (km2 * A, 0))
@@ -672,8 +822,13 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
 
     # -- 6. bookkeeping (R_PCOUNT is unused: protected counts are per-set) ---
     counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
-    regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
-                      regs[4], regs[5], regs[6], regs[7]])
+    if spec.adaptive:
+        regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
+                          wquota, regs[5], regs[6],
+                          regs[R_EHITS] + hit.astype(jnp.int32)])
+    else:
+        regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
+                          regs[4], regs[5], regs[6], regs[7]])
     new_state = {"counters": counters, "doorkeeper": dk,
                  "wtab": wtab, "mtab": mtab, "regs": regs}
     return new_state, hit.astype(jnp.int32)
@@ -686,6 +841,143 @@ def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
         return _one_access_flat(spec, params, state, klo, khi, kidx, kdkb)
     return _one_access_set(spec, params, state, klo, khi, kidx, kdkb,
                            kwset, kmset)
+
+
+# ---------------------------------------------------------------------------
+# epoch-boundary rebalance: move the runtime window/main boundary
+# ---------------------------------------------------------------------------
+
+def _rebalance_flat(spec: StepSpec, params, state, nq):
+    regs = state["regs"]
+    wlo, whi, wmeta = state["wlo"], state["whi"], state["wmeta"]
+    mlo, mhi, mmeta = state["mlo"], state["mhi"], state["mmeta"]
+    wcount, mcount = regs[R_WCOUNT], regs[R_MCOUNT]
+    pcount = regs[R_PCOUNT]
+    total = params[P_WINDOW_CAP] + params[P_MAIN_CAP]
+    mcap_new = total - nq
+
+    # -- window shrink: evict the LRU residents beyond the new quota ---------
+    res_w = (wmeta >= 0) & (wmeta < _I32_MAX)
+    n_wev = jnp.maximum(0, wcount - nq)
+    ranks = jnp.argsort(jnp.argsort(jnp.where(res_w, wmeta, _I32_MAX)))
+    evict = res_w & (ranks < n_wev)
+    # ... migrating the strongest (most recent) of them into main's free
+    # room, probation, original stamp (stamps are globally unique so SLRU
+    # order is preserved); the weakest beyond the room are dropped
+    room = jnp.maximum(0, mcap_new - mcount)
+    dranks = jnp.argsort(jnp.argsort(jnp.where(evict, -wmeta, _I32_MAX)))
+    mig = evict & (dranks < room)
+    free_order = jnp.argsort(mmeta != _EMPTY)    # stable: empty slots first
+    tgt = jnp.where(mig, free_order[dranks], spec.main_slots)  # OOB -> drop
+    mlo = mlo.at[tgt].set(wlo, mode="drop")
+    mhi = mhi.at[tgt].set(whi, mode="drop")
+    mmeta = mmeta.at[tgt].set(wmeta, mode="drop")
+    midx = state["midx"].at[tgt].set(state["widx"], mode="drop")
+    mdkb = state["mdkb"].at[tgt].set(state["wdkb"], mode="drop")
+    wlo = jnp.where(evict, -1, wlo)
+    whi = jnp.where(evict, -1, whi)
+    wmeta = jnp.where(evict, _EMPTY, wmeta)
+    wcount = wcount - n_wev
+    mcount = mcount + mig.sum()
+
+    # -- window grow: evict main's weakest beyond the shrunken budget --------
+    # (mutually exclusive with the migration above: only one side shrinks)
+    res_m = (mmeta >= 0) & (mmeta < _I32_MAX)
+    n_mev = jnp.maximum(0, mcount - mcap_new)
+    ranks_m = jnp.argsort(jnp.argsort(jnp.where(res_m, mmeta, _I32_MAX)))
+    evict_m = res_m & (ranks_m < n_mev)
+    pcount = pcount - (evict_m & (mmeta >= _PROT)).sum()
+    mlo = jnp.where(evict_m, -1, mlo)
+    mhi = jnp.where(evict_m, -1, mhi)
+    mmeta = jnp.where(evict_m, _EMPTY, mmeta)
+    mcount = mcount - n_mev
+
+    regs = jnp.stack([regs[R_SIZE], pcount, regs[R_T], regs[R_HITS],
+                      nq, wcount, mcount, jnp.int32(0)])
+    return {**state, "wlo": wlo, "whi": whi, "wmeta": wmeta,
+            "midx": midx, "mdkb": mdkb,
+            "mlo": mlo, "mhi": mhi, "mmeta": mmeta, "regs": regs}
+
+
+def _rebalance_set(spec: StepSpec, params, state, nq):
+    A = spec.assoc
+    regs = state["regs"]
+    wtab, mtab = state["wtab"], state["mtab"]
+    total = params[P_WINDOW_CAP] + params[P_MAIN_CAP]
+    mcap_new = total - nq
+    nws, nms = spec.window_sets, spec.main_sets
+    way = jnp.arange(A, dtype=jnp.int32)
+
+    def compact(tab, n_sets, ncols, meta_col, usable):
+        """Per-set: sort records strongest-first, keep the first ``usable``,
+        blank the rest; returns (new tab3d, sorted tab3d, evicted mask)."""
+        t3 = tab.reshape(n_sets, A, ncols)
+        meta = t3[:, :, meta_col]
+        order = jnp.argsort(-meta, axis=1)       # residents first, empty last
+        t3s = jnp.take_along_axis(t3, order[:, :, None], axis=1)
+        keep = way[None, :] < usable[:, None]
+        metas = t3s[:, :, meta_col]
+        evict = (metas >= 0) & (metas < _I32_MAX) & ~keep
+        blank = jnp.zeros((ncols,), jnp.int32).at[0].set(-1).at[1].set(-1) \
+            .at[meta_col].set(_EMPTY)
+        t3n = jnp.where(keep[:, :, None], t3s, blank[None, None, :])
+        return t3n, t3s, evict
+
+    uw = nq // nws + (jnp.arange(nws, dtype=jnp.int32) < nq % nws)
+    um = mcap_new // nms + (jnp.arange(nms, dtype=jnp.int32) < mcap_new % nms)
+    w3n, w3s, w_evict = compact(wtab, nws, spec.wcols, WT_META, uw)
+    m3n, _, _ = compact(mtab, nms, spec.mcols, MT_META, um)
+    wtab = w3n.reshape(-1, spec.wcols)
+    mtab = m3n.reshape(-1, spec.mcols)
+
+    # -- migrate displaced window records into a free usable way of their
+    # stored first-choice main set (sequential: targets collide; the traced
+    # trip count is the number of evictions, ~delta per epoch)
+    ev_flat = w_evict.reshape(-1)
+    recs = w3s.reshape(-1, spec.wcols)
+    ev_order = jnp.argsort(~ev_flat)             # stable: evicted first
+
+    def body(i, mtab_c):
+        rec = recs[ev_order[i]]
+        s = rec[WT_MSET]
+        blk = jax.lax.dynamic_slice(mtab_c, (s * A, 0), (A, spec.mcols))
+        meta = blk[:, MT_META]
+        u = mcap_new // nms + (s < mcap_new % nms).astype(jnp.int32)
+        free = (meta == _EMPTY) & (way < u)
+        j = jnp.argmax(free)
+        mainrow = jnp.concatenate([rec[:WT_META + 1], rec[WT_MSET2 + 1:]])
+        row = jnp.where(free.any(), mainrow, blk[j])
+        return jax.lax.dynamic_update_slice(
+            mtab_c, blk.at[j].set(row), (s * A, 0))
+
+    mtab = jax.lax.fori_loop(0, ev_flat.sum(), body, mtab)
+
+    regs = jnp.stack([regs[R_SIZE], regs[R_PCOUNT], regs[R_T], regs[R_HITS],
+                      nq, regs[R_WCOUNT], regs[R_MCOUNT], jnp.int32(0)])
+    return {**state, "wtab": wtab, "mtab": mtab, "regs": regs}
+
+
+def rebalance(spec: StepSpec, params: jnp.ndarray, state: dict,
+              new_quota) -> dict:
+    """Move the runtime window/main boundary to ``new_quota`` (adaptive mode).
+
+    Runs between epochs inside the compiled program (no host sync): clamps
+    the quota to the geometry, evicts/compacts each table down to its new
+    budget, migrates displaced window records into main's free room
+    (probation, stamps preserved), and resets the per-epoch telemetry
+    register ``R_EHITS``.  O(slots·log) once per epoch — amortized over the
+    epoch it leaves the per-access cost untouched.  A rebalance to the
+    current quota only compacts (hit-sequence no-op), which is what makes
+    the pinned-quota differential tests possible.
+    """
+    assert spec.adaptive, "rebalance requires StepSpec.adaptive"
+    total = params[P_WINDOW_CAP] + params[P_MAIN_CAP]
+    nq = jnp.clip(jnp.asarray(new_quota, jnp.int32),
+                  jnp.maximum(1, total - spec.main_slots),
+                  jnp.minimum(spec.window_slots, total - 1))
+    if spec.assoc is None:
+        return _rebalance_flat(spec, params, state, nq)
+    return _rebalance_set(spec, params, state, nq)
 
 
 # ---------------------------------------------------------------------------

@@ -1,71 +1,111 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Window-adaptation driver: run the device hill-climbed W-TinyLFU engine
+against a trace, optionally next to the static-window sweep it must beat,
+and record the per-epoch (quota, hits) trajectory.
 
-"""§Perf hillclimb driver: run tagged optimization iterations on the three
-chosen cells and print before/after roofline terms + byte breakdowns.
+This is the operational face of ISSUE 3's runtime-adaptive window sizing:
+one command answers "what window does this workload want, and does the
+climber find it?" — the whole simulation (epoch scan + climb + rebalance)
+is a single compiled program per configuration.
 
-  PYTHONPATH=src python -m repro.launch.hillclimb --iter 1
+  PYTHONPATH=src python -m repro.launch.hillclimb --trace phase \\
+      --capacity 1000 --length 200000 --assoc 8 --static-sweep
+
+Trajectory JSON lands in experiments/adaptive/<trace>_C<capacity>.json and
+feeds ``python -m repro.analysis.report --what adaptive``.
 """
+from __future__ import annotations
+
 import argparse
 import json
+import os
+from dataclasses import asdict
 
-from repro.launch.dryrun import run_cell
+import numpy as np
 
-CELLS = [
-    # (arch, shape, why chosen)
-    ("zamba2-1.2b", "prefill_32k", "worst roofline fraction (0.0022)"),
-    ("llama4-maverick-400b-a17b", "train_4k",
-     "most collective-bound (t_coll 19.9s)"),
-    ("qwen3-4b", "decode_32k", "paper-representative serve_step"),
-]
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../..",
+                       "experiments", "adaptive")
 
-# iteration -> per-cell cfg overrides (None = skip cell this iteration)
-ITERS = {
-    # it1: buffer donation (in-place cache/state) + bf16 param gathers
-    # (cast-before-gather). Code-level changes; cfg stays default.
-    1: {c[0] + "/" + c[1]: {} for c in CELLS},
-    # it2: per-cell targeted knobs
-    2: {
-        "zamba2-1.2b/prefill_32k": {"ssm_chunk": 128},
-        "llama4-maverick-400b-a17b/train_4k": {
-            "causal_skip": True, "attn_scores_bf16": True},
-        "qwen3-4b/decode_32k": None,      # breakdown-driven; see it3
-    },
-    3: {
-        "zamba2-1.2b/prefill_32k": {"ssm_chunk": 64},
-        "llama4-maverick-400b-a17b/train_4k": None,
-        "qwen3-4b/decode_32k": None,
-    },
-}
+STATIC_WFS = (0.01, 0.05, 0.10, 0.20, 0.40)
+
+
+def make_trace(name: str, length: int, seed: int) -> np.ndarray:
+    from repro import traces as T
+    gens = {
+        "zipf": lambda: T.zipf_trace(length, n_items=max(1000, length // 4),
+                                     alpha=0.9, seed=seed),
+        "fickle": lambda: T.fickle_churn_trace(length, seed=seed),
+        "phase": lambda: T.phase_shift_trace(length, seed=seed),
+        "youtube": lambda: T.youtube_dynamic_trace(length, seed=seed),
+        "wiki": lambda: T.wiki_drift_trace(length, seed=seed),
+        "oltp": lambda: T.oltp_like_trace(length, seed=seed),
+        "spc1": lambda: T.spc1_like_trace(length, seed=seed),
+        "glimpse": lambda: T.glimpse_trace(length, seed=seed),
+    }
+    if name not in gens:
+        raise SystemExit(f"unknown trace {name!r}; one of {sorted(gens)}")
+    return gens[name]()
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--iter", type=int, required=True)
-    ap.add_argument("--cell", type=str, default=None)
-    ap.add_argument("--override", type=str, default=None,
-                    help="JSON cfg overrides (ad-hoc iteration)")
-    ap.add_argument("--policy", type=str, default=None,
-                    help="JSON ShardingPolicy overrides")
+    ap.add_argument("--trace", default="phase",
+                    help="zipf|fickle|phase|youtube|wiki|oltp|spc1|glimpse")
+    ap.add_argument("--capacity", type=int, default=1000)
+    ap.add_argument("--length", type=int, default=200_000)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--assoc", type=int, default=8,
+                    help="ways per set; 0 = exact flat tables")
+    ap.add_argument("--epoch-len", type=int, default=4096)
+    ap.add_argument("--window-frac", type=float, default=0.01,
+                    help="initial window quota")
+    ap.add_argument("--static-sweep", action="store_true",
+                    help="also run the static windows the climber must beat")
+    ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args()
 
-    pol = json.loads(args.policy) if args.policy else None
-    for arch, shape, why in CELLS:
-        key = f"{arch}/{shape}"
-        if args.cell and args.cell != key:
-            continue
-        ov = (json.loads(args.override) if args.override
-              else ITERS.get(args.iter, {}).get(key))
-        if ov is None:
-            continue
-        tag = f"_it{args.iter}"
-        r = run_cell(arch, shape, multi_pod=False, cfg_overrides=ov,
-                     policy_overrides=pol, tag=tag)
-        if r["status"] == "ok":
-            bb = r.get("bytes_by_kind", {})
-            top = sorted(bb.items(), key=lambda x: -x[1])[:4]
-            print("  bytes_by_kind:",
-                  {k: f"{v:.2e}" for k, v in top}, flush=True)
+    from repro.core.device_simulate import (simulate_trace, simulate_sweep,
+                                            ClimbSpec)
+
+    tr = make_trace(args.trace, args.length, args.seed)
+    assoc = args.assoc or None
+    climb = ClimbSpec(epoch_len=args.epoch_len)
+    rows = []
+
+    a = simulate_trace(tr, args.capacity, adaptive=True, assoc=assoc,
+                       window_frac=args.window_frac, climb=climb,
+                       trace_name=args.trace)
+    print(f"adaptive: hit {a.hit_ratio:.4f}  final quota "
+          f"{a.extra['final_quota']} "
+          f"({a.extra['final_quota'] / args.capacity:.1%} of C)", flush=True)
+    tj = a.extra.get("trajectory")
+    if tj is None:
+        print(f"  (trace shorter than one epoch of {args.epoch_len} — "
+              "no climb ran; lower --epoch-len)", flush=True)
+    else:
+        E = tj["epoch_len"]
+        print("  epoch  quota  hit-rate")
+        for i, (q, e) in enumerate(zip(tj["quota"], tj["epoch_hits"])):
+            print(f"  {i:5d}  {q:5d}  {e / E:.3f}")
+    rows.append(asdict(a))
+
+    if args.static_sweep:
+        stat = simulate_sweep(tr, [args.capacity], window_fracs=STATIC_WFS,
+                              mode="sequential", assoc=assoc,
+                              trace_name=args.trace)
+        best = max(r.hit_ratio for r in stat)
+        for r in stat:
+            print(f"static wf={r.extra['window_frac']:.2f}: "
+                  f"hit {r.hit_ratio:.4f}", flush=True)
+            rows.append(asdict(r))
+        print(f"best static {best:.4f} vs adaptive {a.hit_ratio:.4f} "
+              f"({a.hit_ratio - best:+.4f})", flush=True)
+
+    out = args.out or os.path.join(
+        OUT_DIR, f"{args.trace}_C{args.capacity}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("wrote", os.path.normpath(out), flush=True)
 
 
 if __name__ == "__main__":

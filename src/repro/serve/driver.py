@@ -2,7 +2,7 @@
 full config on a real slice) and replay a multi-tenant workload, reporting
 prefix-cache hit-ratio / reuse / admission stats per retention policy.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+  PYTHONPATH=src python -m repro.serve.driver --arch qwen3-4b \
       --requests 40 --policy wtinylfu
 """
 from __future__ import annotations
@@ -15,7 +15,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from .engine import ServeEngine
 
 
 def make_workload(cfg, n_requests: int, n_tenants: int = 12,

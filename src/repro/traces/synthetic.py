@@ -181,6 +181,53 @@ def glimpse_trace(length: int, loop_items: int = 5000, n_random: int = 50_000,
 
 
 # ---------------------------------------------------------------------------
+def fickle_churn_trace(length: int, n_hot: int = 2000, alpha: float = 1.0,
+                       hot_frac: float = 0.7, seed: int = 0) -> np.ndarray:
+    """Adversarial frequency-skewed trace for window-size adaptation: a
+    stable Zipf hot set interleaved with a stream of one-hit wonders (§2.3's
+    "fickle" churn — every churn key is seen exactly once and never again).
+
+    The best static window is the tiny default (~1%): every window slot
+    beyond it just parks one-hit wonders that TinyLFU would have filtered,
+    displacing hot-set capacity.  An adaptive window must climb DOWN (or
+    stay down) on this trace.
+    """
+    rng = _rng(seed)
+    hot = _sample_from_probs(zipf_probs(n_hot, alpha), length, rng)
+    is_hot = rng.random(length) < hot_frac
+    n_cold = int((~is_hot).sum())
+    # one-hit wonders: fresh ids above the hot range, each seen once
+    cold = n_hot + np.arange(n_cold, dtype=np.int64)
+    out = np.empty(length, dtype=np.int64)
+    out[is_hot] = hot[is_hot]
+    out[~is_hot] = cold
+    return out
+
+
+# ---------------------------------------------------------------------------
+def phase_shift_trace(length: int, n_hot: int = 2000, alpha: float = 0.9,
+                      working_set: int = 1200, advance: float = 0.25,
+                      seed: int = 0) -> np.ndarray:
+    """Adversarial phase-shift trace: a stationary Zipf first half (small
+    window + TinyLFU admission is near-optimal), then an abrupt switch to a
+    pure recency pattern — accesses drawn uniformly from a working set of
+    ``working_set`` keys that slides forward by ``advance`` keys per access
+    over a fresh id range, so frequency counts never accumulate and LRU-like
+    behaviour (a LARGE window) is the only way to hit.
+
+    A static window loses one phase or the other; the paper's fixed 1%
+    split loses the whole second half.  These are the two traces the
+    runtime-adaptive engine must win on (ISSUE 3 acceptance).
+    """
+    rng = _rng(seed)
+    h1 = length // 2
+    first = _sample_from_probs(zipf_probs(n_hot, alpha), h1, rng)
+    base = n_hot + (np.arange(length - h1) * advance).astype(np.int64)
+    second = base + rng.integers(0, working_set, size=length - h1)
+    return np.concatenate([first, second.astype(np.int64)])
+
+
+# ---------------------------------------------------------------------------
 def multi_tenant_prompt_trace(n_requests: int, n_tenants: int = 200,
                               tenant_alpha: float = 1.0,
                               prefix_blocks_mean: int = 24,

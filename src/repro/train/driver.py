@@ -12,7 +12,7 @@ clusters):
   * metrics log (jsonl) with loss/grad-norm/lr/throughput.
 
 Example (CPU smoke):
-  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+  PYTHONPATH=src python -m repro.train.driver --arch qwen3-4b --smoke \
       --steps 20 --out /tmp/run1
 """
 from __future__ import annotations
@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import make_optimizer, wsd
-from repro.train import make_train_state, build_train_step, TrainState
+from .train_step import make_train_state, build_train_step
 from repro.data.pipeline import (ShardSpec, SyntheticShardStore,
                                  CachedShardReader, TokenPipeline)
 from repro.checkpoint.store import (AsyncCheckpointer, latest_step,

@@ -2,7 +2,7 @@
 accumulation (lax.scan), optimizer apply.  Family-agnostic via models.api.
 
 The returned ``step(state, batch)`` is a pure function ready for jax.jit with
-in/out shardings (launch/dryrun.py, launch/train.py).
+in/out shardings (train/driver.py).
 """
 from __future__ import annotations
 

@@ -1,0 +1,332 @@
+"""Runtime-adaptive window sizing (ISSUE 3): differential + golden tests.
+
+Four layers of proof, mirroring the PR 1/2 test strategy:
+
+1. **Static preservation** — with ``adaptive=True`` but the quota pinned at
+   the configured split, both layouts reproduce the ``adaptive=False`` hit
+   sequence bit-for-bit (the runtime-quota machinery is a no-op exactly
+   when it should be), and a mid-trace rebalance to the current quota
+   (compaction only) changes nothing.
+2. **Backend parity** — the adaptive epoch program produces identical hit
+   flags under the jit scan and the fused Pallas kernel.
+3. **Host twin parity** — ``AdaptiveWTinyLFU`` (plain-python ints) and the
+   device climber agree on the per-access hit sequence bit-for-bit under
+   collision-free sketches, with the climb active (same shared integer
+   climb rule: core/adaptive.py).
+4. **Adaptivity goldens** — on the two adversarial traces
+   (traces/synthetic.py fickle-churn and phase-shift) the climbing engine
+   lands within 0.01 of the best static window from the ISSUE's
+   {1,5,10,20,40}% sweep — same adaptive config on both traces — and the
+   static-vs-host hit ratios are pinned so the generators cannot drift.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import WTinyLFU, AdaptiveWTinyLFU, run_trace
+from repro.core.device_simulate import (simulate_trace, simulate_sweep,
+                                        ClimbSpec)
+from repro.kernels.sketch_common import keys_to_lanes
+from repro.kernels.sketch_step import (StepSpec, make_step_params,
+                                       init_step_state, step_ref, rebalance,
+                                       R_WQUOTA, R_WCOUNT, R_MCOUNT)
+from repro.traces import fickle_churn_trace, phase_shift_trace, zipf_trace
+
+
+def lanes(keys):
+    lo, hi = keys_to_lanes(np.asarray(keys, np.uint64))
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+# ===========================================================================
+# 1. static preservation: pinned quota == adaptive=False, bit for bit
+# ===========================================================================
+
+def test_pinned_quota_matches_static_flat():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 300, size=3000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    flat = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2,
+                    main_slots=40)
+    params = make_step_params(2, 40, 32, 500, 7, 0)
+    _, h_static = step_ref(flat, params, init_step_state(flat), lo, hi)
+    for wslots, mslots in [(2, 40), (16, 128)]:   # exact and padded-up tables
+        ad = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=wslots,
+                      main_slots=mslots, adaptive=True)
+        _, h_ad = step_ref(ad, params, init_step_state(ad, window_cap=2),
+                           lo, hi)
+        np.testing.assert_array_equal(np.asarray(h_static), np.asarray(h_ad))
+
+
+def test_pinned_quota_matches_static_assoc():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 300, size=3000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                    main_slots=64, assoc=8)
+    params = make_step_params(4, 48, 38, 700, 7, 0)
+    _, h_static = step_ref(spec, params,
+                           init_step_state(spec, window_cap=4, main_cap=48),
+                           lo, hi)
+    ad = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                  main_slots=64, assoc=8, adaptive=True)
+    _, h_ad = step_ref(ad, params, init_step_state(ad, window_cap=4), lo, hi)
+    np.testing.assert_array_equal(np.asarray(h_static), np.asarray(h_ad))
+
+
+@pytest.mark.parametrize("assoc", [None, 8])
+def test_rebalance_to_same_quota_is_hit_noop(assoc):
+    """A mid-trace rebalance at the current quota only compacts storage —
+    the subsequent hit sequence is unchanged."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 300, size=3000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    kw = dict(width=256, rows=4, dk_bits=1024, adaptive=True)
+    if assoc is None:
+        spec = StepSpec(window_slots=8, main_slots=64, **kw)
+        params = make_step_params(4, 48, 38, 500, 7, 0)
+    else:
+        spec = StepSpec(window_slots=8, main_slots=64, assoc=assoc, **kw)
+        params = make_step_params(4, 48, 38, 700, 7, 0)
+    st = init_step_state(spec, window_cap=4)
+    _, h_plain = step_ref(spec, params, init_step_state(spec, window_cap=4),
+                          lo, hi)
+    n = 1500
+    st, hA = step_ref(spec, params, st, lo[:n], hi[:n])
+    st = rebalance(spec, params, st, st["regs"][R_WQUOTA])
+    st, hB = step_ref(spec, params, st, lo[n:], hi[n:])
+    np.testing.assert_array_equal(
+        np.asarray(h_plain),
+        np.concatenate([np.asarray(hA), np.asarray(hB)]))
+
+
+def test_rebalance_set_invariants_across_quota_moves():
+    """Drive the assoc tables through grow/shrink rebalances: residents must
+    only occupy ways below each set's usable count (no ghosts that masked
+    lookups could never evict), window residency must respect the quota,
+    and no key may be resident in both tables."""
+    rng = np.random.default_rng(9)
+    keys = rng.integers(0, 600, size=6000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=32,
+                    main_slots=64, assoc=8, adaptive=True)
+    params = make_step_params(4, 48, 38, 700, 7, 0)
+    st = init_step_state(spec, window_cap=4)
+    total = 4 + 48
+
+    def check(st, quota):
+        for tab_key, n_sets, cap in [("wtab", 4, quota),
+                                     ("mtab", 8, total - quota)]:
+            tab = np.asarray(st[tab_key])
+            A = spec.assoc
+            meta = tab[:, 2].reshape(n_sets, A)
+            res = meta >= 0
+            usable = np.array([cap // n_sets + (s < cap % n_sets)
+                               for s in range(n_sets)])
+            beyond = res & (np.arange(A)[None, :] >= usable[:, None])
+            assert not beyond.any(), (tab_key, quota)
+        wres = np.asarray(st["wtab"])[:, 2] >= 0
+        assert wres.sum() <= quota
+        wkeys = {(r[0], r[1]) for r in np.asarray(st["wtab"]) if r[2] >= 0}
+        mkeys = {(r[0], r[1]) for r in np.asarray(st["mtab"]) if r[2] >= 0}
+        assert not (wkeys & mkeys)
+
+    for i, nq in enumerate([12, 3, 26, 1, 9]):
+        s0, s1 = i * 1000, (i + 1) * 1000
+        st, _ = step_ref(spec, params, st, lo[s0:s1], hi[s0:s1])
+        st = rebalance(spec, params, st, nq)
+        assert int(np.asarray(st["regs"])[R_WQUOTA]) == nq
+        check(st, nq)
+
+
+def test_rebalance_moves_quota_and_counts_stay_consistent():
+    """Grow then shrink the flat window across epoch boundaries: the
+    resident-count registers must track the tables exactly and migration
+    must not lose more records than the shrink demands."""
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 400, size=2000, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=16,
+                    main_slots=128, adaptive=True)
+    params = make_step_params(2, 40, 32, 500, 7, 0)
+    st = init_step_state(spec, window_cap=2)
+    st, _ = step_ref(spec, params, st, lo[:1000], hi[:1000])
+    st = rebalance(spec, params, st, 10)          # grow window 2 -> 10
+    st, _ = step_ref(spec, params, st, lo[1000:], hi[1000:])
+    st = rebalance(spec, params, st, 3)           # shrink 10 -> 3 (migration)
+    regs = np.asarray(st["regs"])
+    wmeta = np.asarray(st["wmeta"])
+    mmeta = np.asarray(st["mmeta"])
+    assert regs[R_WQUOTA] == 3
+    assert (wmeta >= 0).sum() == regs[R_WCOUNT] <= 3
+    assert ((mmeta >= 0) & (mmeta < 2**31 - 1)).sum() == regs[R_MCOUNT] <= 40
+
+
+# ===========================================================================
+# 2. backend parity: fused pallas kernel == jit scan, climb active
+# ===========================================================================
+
+@pytest.mark.parametrize("assoc", [None, 4])
+def test_adaptive_pallas_matches_jit(assoc):
+    """A phase-shift trace keeps the quota mid-range (not parked at a
+    clamp), and 9000 accesses leave a partial tail epoch under 2048 — the
+    pallas backend must not climb on the padded tail (regression: it used
+    to, so final_quota and trajectory disagreed with jit whenever the trace
+    length was not a multiple of epoch_len)."""
+    tr = phase_shift_trace(9000, n_hot=800, working_set=200, advance=0.1,
+                           seed=7)
+    kw = dict(adaptive=True, assoc=assoc, climb=ClimbSpec(epoch_len=2048))
+    j = simulate_trace(tr, 100, backend="jit", **kw)
+    p = simulate_trace(tr, 100, backend="pallas", **kw)
+    assert p.hits == j.hits
+    assert p.extra["final_quota"] == j.extra["final_quota"]
+    assert p.extra["trajectory"] == j.extra["trajectory"]
+    assert len(j.extra["trajectory"]["quota"]) == 4     # full epochs only
+
+
+# ===========================================================================
+# 3. host twin parity: AdaptiveWTinyLFU == device climber, bit for bit
+# ===========================================================================
+
+@pytest.mark.parametrize("tname,trace", [
+    ("zipf", zipf_trace(6000, n_items=300, alpha=0.9, seed=5)),
+    ("phase", phase_shift_trace(6000, n_hot=300, working_set=80,
+                                advance=0.05, seed=2)),
+])
+def test_host_twin_hit_sequence_bitwise(tname, trace):
+    """Collision-free sketches on both sides: per-access hit sequence AND
+    the full quota trajectory of the climb agree exactly."""
+    C = 60
+    kw = dict(window_frac=0.05, sample_factor=8)
+    res, _, hits = simulate_trace(
+        trace, C, adaptive=True, doorkeeper=False, counters_per_item=550.0,
+        climb=ClimbSpec(epoch_len=500), return_state=True, **kw)
+    host = AdaptiveWTinyLFU(C, doorkeeper=False, counters_per_item=550.0,
+                            epoch_len=500, **kw)
+    host_hits = np.array([host.access(int(k)) for k in trace], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+    assert res.extra["trajectory"]["quota"] == host.quota_trajectory
+    assert res.extra["final_quota"] == host.quota
+
+
+def test_prot_budget_shrink_parity_bitwise():
+    """A window grow shrinks the runtime protected budget below the
+    resident protected count; the lazy per-main-hit drain must demote
+    identically on host and device (regression: the device used to drain
+    on every access, diverging from the twin and breaking the stamp
+    uniqueness the rebalance relies on)."""
+    C = 40
+    fill = zipf_trace(3000, n_items=60, alpha=0.9, seed=4)
+    tail = zipf_trace(2000, n_items=80, alpha=0.8, seed=9)
+    spec = StepSpec(width=1 << 16, rows=4, dk_bits=0, window_slots=20,
+                    main_slots=39, adaptive=True)
+    params = make_step_params(2, 38, 30, 8 * C, 8, 0)
+    st = init_step_state(spec, window_cap=2)
+    lo, hi = lanes(fill.astype(np.uint64))
+    st, dA = step_ref(spec, params, st, lo, hi)
+    st = rebalance(spec, params, st, 18)       # mcap 22 -> prot_rt 17 < 30
+    lo, hi = lanes(tail.astype(np.uint64))
+    st, dB = step_ref(spec, params, st, lo, hi)
+
+    host = AdaptiveWTinyLFU(C, window_frac=0.05, sample_factor=8,
+                            doorkeeper=False, counters_per_item=550.0,
+                            epoch_len=10**9)   # boundaries driven manually
+    hA = np.array([host.access(int(k)) for k in fill], np.int32)
+    assert host._pcount > 17                   # the shrink actually bites
+    host._rebalance(18)
+    hB = np.array([host.access(int(k)) for k in tail], np.int32)
+    np.testing.assert_array_equal(np.asarray(dA), hA)
+    np.testing.assert_array_equal(np.asarray(dB), hB)
+
+
+# ===========================================================================
+# 4. adaptivity goldens on the adversarial traces
+# ===========================================================================
+
+TOL = 0.005
+
+# pinned goldens (trace construction below must not change)
+GOLDEN_FICKLE_HOST = 0.5482
+GOLDEN_FICKLE_DEVICE = 0.5475
+GOLDEN_PHASE_HOST = 0.4061
+GOLDEN_PHASE_DEVICE = 0.4086
+
+
+class TestGoldenAdversarial:
+    """Host/device pins for the two new trace generators (static 1%
+    window).  The phase-shift pin doubles as the motivation number: the
+    static window's 0.41 is what adaptivity exists to beat."""
+    C, WARMUP, N = 500, 5_000, 60_000
+
+    def test_fickle_churn_pins(self):
+        tr = fickle_churn_trace(self.N, seed=3)
+        h = run_trace(WTinyLFU(self.C, sample_factor=8), tr,
+                      warmup=self.WARMUP)
+        d = simulate_trace(tr, self.C, warmup=self.WARMUP)
+        assert abs(h.hit_ratio - GOLDEN_FICKLE_HOST) < TOL
+        assert abs(d.hit_ratio - GOLDEN_FICKLE_DEVICE) < TOL
+
+    def test_phase_shift_pins_and_adaptive_win(self):
+        tr = phase_shift_trace(self.N, seed=3)
+        h = run_trace(WTinyLFU(self.C, sample_factor=8), tr,
+                      warmup=self.WARMUP)
+        d = simulate_trace(tr, self.C, warmup=self.WARMUP)
+        assert abs(h.hit_ratio - GOLDEN_PHASE_HOST) < TOL
+        assert abs(d.hit_ratio - GOLDEN_PHASE_DEVICE) < TOL
+        # the static 1% window loses the whole second half; the climber
+        # must recover a large chunk of it
+        a = simulate_trace(tr, self.C, warmup=self.WARMUP, adaptive=True,
+                           assoc=8, climb=ClimbSpec(epoch_len=2048))
+        assert a.hit_ratio > d.hit_ratio + 0.03
+        assert a.extra["final_quota"] > self.C * 0.1
+
+
+ACCEPT_GAP = 0.01
+STATIC_WFS = [0.01, 0.05, 0.10, 0.20, 0.40]
+
+
+@pytest.mark.parametrize("gen", [fickle_churn_trace, phase_shift_trace])
+def test_adaptive_within_001_of_best_static(gen):
+    """ISSUE 3 acceptance: one adaptive config (the defaults), both
+    adversarial traces, hit ratio within 0.01 of the best static window
+    from the {1,5,10,20,40}% sweep (production set-associative path)."""
+    C = 800
+    tr = gen(120_000, seed=3)
+    rows = simulate_sweep(tr, [C], window_fracs=STATIC_WFS,
+                          mode="sequential", assoc=8)
+    best = max(r.hit_ratio for r in rows)
+    a = simulate_trace(tr, C, adaptive=True, assoc=8, climb=ClimbSpec())
+    assert a.hit_ratio > best - ACCEPT_GAP, (
+        f"adaptive {a.hit_ratio:.4f} vs best static {best:.4f}, "
+        f"trajectory {a.extra['trajectory']['quota']}")
+
+
+def test_adaptive_sweep_rows_report_quota():
+    tr = zipf_trace(12_000, n_items=5000, alpha=0.9, seed=1)
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2],
+                          adaptive=True, climb=ClimbSpec(epoch_len=2048),
+                          mode="sequential")
+    assert len(rows) == 2
+    for r in rows:
+        assert r.extra["adaptive"] is True
+        assert 1 <= r.extra["final_quota"] <= 50
+        assert r.policy.endswith("+climb")
+    with pytest.raises(ValueError):
+        simulate_sweep(tr, [100], adaptive=True, mode="vmap")
+    # mode="auto" must resolve to sequential for adaptive grids on EVERY
+    # backend (regression: on TPU auto picked vmap and then rejected it)
+    auto = simulate_sweep(tr[:5000], [100], adaptive=True,
+                          climb=ClimbSpec(epoch_len=2048), mode="auto")
+    assert auto[0].extra["backend"] == "jit+sequential"
+
+
+def test_adaptive_degenerate_short_traces():
+    """Traces shorter than one epoch (or empty) run without climbing and
+    without crashing, like the static path."""
+    short = zipf_trace(1000, n_items=500, alpha=0.9, seed=2)
+    r = simulate_trace(short, 50, adaptive=True, climb=ClimbSpec())
+    assert 0.0 <= r.hit_ratio <= 1.0
+    assert "trajectory" not in r.extra       # no full epoch -> no climb
+    empty = simulate_trace(np.array([], np.int64), 50, adaptive=True,
+                           climb=ClimbSpec())
+    assert empty.hits == 0

@@ -108,7 +108,7 @@ class TestDataPipeline:
 
 class TestEndToEndResume:
     def test_interrupted_equals_continuous(self, tmpdir):
-        from repro.launch.train import train
+        from repro.train.driver import train
         a, b = os.path.join(tmpdir, "a"), os.path.join(tmpdir, "b")
         cont = train("chatglm3-6b", steps=6, out_dir=a, global_batch=4,
                      seq_len=32, ckpt_every=3)

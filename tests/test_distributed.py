@@ -1,7 +1,6 @@
 """Distribution-layer tests.
 
-The production-mesh dry-run (16x16 / 2x16x16) is exercised by
-launch/dryrun.py (deliverable e); here we prove the same machinery on a tiny
+The production-mesh machinery (16x16 / 2x16x16) is proven here on a tiny
 in-test mesh: sharded lowering succeeds, FSDP+TP specs resolve for every
 arch's param tree, collectives appear in the compiled module, and the HLO
 cost parser stays exact on a hand-checkable program.
@@ -21,7 +20,7 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import make_optimizer, wsd
 from repro.train import make_train_state, build_train_step
-from repro.launch.mesh import make_debug_mesh
+from repro.distributed.mesh import make_debug_mesh
 from repro.distributed.shardings import ShardingPolicy
 from repro.analysis.hlo_cost import analyze_hlo
 

@@ -310,6 +310,42 @@ def test_assoc_zero_way_window_sets_bypass_to_admission():
     np.testing.assert_array_equal(np.asarray(hits), host_hits)
 
 
+def test_counter8_reset_halving_straddles_chunks():
+    """§3.3 reset at counter_bits=8 (4 counters/word): the halving of
+    near-cap (255) byte counters fires mid-chunk-2 under 500-element chunks
+    and must land bit-for-bit with the unchunked scan — values above 127
+    exercise the 8-bit borrow/sign masking in halve_words (a wrong mask
+    leaks the high bit into the neighbouring byte)."""
+    from repro.kernels.sketch_step import _estimate_pair, precompute_probes
+    spec = StepSpec(width=256, rows=4, dk_bits=0, window_slots=2,
+                    main_slots=20, counter_bits=8)
+    params = make_step_params(2, 20, 16, 900, 255, 0, counter_bits=8)
+    rng = np.random.default_rng(5)
+    keys = np.concatenate([
+        np.full(300, 7, np.uint64),          # pins key 7's counters at 255
+        np.full(300, 9, np.uint64),
+        rng.integers(0, 50, size=600, dtype=np.uint64),
+    ])                                       # reset at add 900 = mid chunk 2
+    s_ref, h_ref = run_ref(spec, params, keys)
+    s_pal, h_pal = run_pallas_chunks(spec, params, keys, 500)
+    assert_state_equal(s_ref, s_pal)
+    np.testing.assert_array_equal(np.asarray(h_ref), h_pal)
+
+    def estimate(state, key):
+        lo, hi = lanes(np.asarray([key], np.uint64))
+        kidx, kdkb, _, _ = precompute_probes(spec, lo, hi)
+        return int(_estimate_pair(spec, state["counters"],
+                                  state["doorkeeper"],
+                                  jnp.stack([kidx[0], kidx[0]]),
+                                  jnp.stack([kdkb[0], kdkb[0]]))[0])
+
+    s_pre, _ = run_ref(spec, params, keys[:899])
+    assert estimate(s_pre, 7) == 255         # saturated before the reset
+    s_post, _ = run_ref(spec, params, keys[:900])
+    assert estimate(s_post, 7) == 127        # halved exactly, no borrow leak
+    assert int(np.asarray(s_post["regs"])[R_SIZE]) == 450
+
+
 def test_counter8_counts_past_nibble_cap():
     """8-bit packed counters keep counting where 4-bit nibbles saturate:
     a key hammered 100x under cap=100 reaches estimate 100."""

@@ -4,7 +4,8 @@ import pytest
 
 from repro.traces import (zipf_trace, zipf_probs, youtube_dynamic_trace,
                           wiki_drift_trace, spc1_like_trace, oltp_like_trace,
-                          glimpse_trace, multi_tenant_prompt_trace)
+                          glimpse_trace, multi_tenant_prompt_trace,
+                          fickle_churn_trace, phase_shift_trace)
 
 
 @pytest.mark.parametrize("gen", [
@@ -14,6 +15,8 @@ from repro.traces import (zipf_trace, zipf_probs, youtube_dynamic_trace,
     lambda n: spc1_like_trace(n, n_random=2000, seed=1),
     lambda n: oltp_like_trace(n, n_pages=2000, seed=1),
     lambda n: glimpse_trace(n, loop_items=500, n_random=2000, seed=1),
+    lambda n: fickle_churn_trace(n, n_hot=1000, seed=1),
+    lambda n: phase_shift_trace(n, n_hot=1000, working_set=400, seed=1),
 ])
 def test_generators_basic(gen):
     tr = gen(20_000)
@@ -40,6 +43,29 @@ def test_oltp_has_ascending_log():
     # ascending trend: later log accesses have larger ids on average
     a, b = log[: len(log) // 2], log[len(log) // 2:]
     assert b.mean() > a.mean()
+
+
+def test_fickle_churn_one_hit_wonders():
+    """Every churn key appears exactly once; the hot set repeats."""
+    tr = fickle_churn_trace(30_000, n_hot=1000, seed=2)
+    cold = tr[tr >= 1000]
+    _, counts = np.unique(cold, return_counts=True)
+    assert (counts == 1).all()                  # true one-hit wonders
+    assert 0.2 < len(cold) / len(tr) < 0.4      # ~30% churn share
+    hot = tr[tr < 1000]
+    _, hcounts = np.unique(hot, return_counts=True)
+    assert hcounts.max() > 50                   # zipf head repeats heavily
+
+
+def test_phase_shift_two_phases():
+    """First half: stationary zipf over the hot range.  Second half: keys
+    from a sliding working set over a fresh id range (recency-only)."""
+    tr = phase_shift_trace(40_000, n_hot=1000, working_set=400, seed=2)
+    first, second = tr[:20_000], tr[20_000:]
+    assert (first < 1000).all()
+    assert (second >= 1000).all()
+    # the working set slides: late keys sit above early keys
+    assert second[-1000:].mean() > second[:1000].mean() + 1000
 
 
 def test_multi_tenant_prefix_shared():
