@@ -26,6 +26,14 @@ Four measurements on the same golden Zipf trace:
 5. **adaptive overhead** — the runtime hill-climbed window (ISSUE 3) adds
    per-access quota masks and an O(slots log) epoch rebalance; measured as
    adaptive-vs-static set-assoc throughput at C=8192.
+6. **sharded sketch** (ISSUE 4) — ``shards=4`` splits the sketch into
+   shard-local delta writes + global reads with an epoch-boundary
+   merge_halve fold; measured as sharded-vs-unsharded set-assoc throughput
+   at C=8192 plus the same 512->65536 flatness ratio with sharding enabled
+   (the fold is amortized and the per-access delta path must stay
+   capacity-free).
+
+See docs/BENCHMARKS.md for the snapshot fields and the CI gate arms.
 
 All wall times are best-of-N to sidestep noisy-neighbour jitter; JSON rows
 record every measurement, and a compact perf snapshot is written to
@@ -240,6 +248,30 @@ def run(quick: bool = False):
                  "static_over_adaptive": round(overhead, 2),
                  "device": backend})
 
+    # -- 6. sharded sketch: delta-write path cost + flatness with shards on --
+    sh_acc = {}
+    for Cs in (512, 8192, 65536):
+        kw_sh = {"assoc": 8, "shards": 4}
+        simulate_trace(golden, Cs, **kw_sh)              # compile once
+        wall, sh_res = _best_of(
+            lambda: simulate_trace(golden, Cs, trace_name="golden-zipf",
+                                   **kw_sh), n=4 if Cs != 8192 else 2)
+        sh_acc[Cs] = len(golden) / wall
+        rows.append({"trace": "golden-zipf", "engine": "scaling:sharded(s=4)",
+                     "cache_size": Cs, "accesses": len(golden),
+                     "wall_s": round(wall, 3),
+                     "acc_per_s": round(len(golden) / wall),
+                     "hit_ratio": sh_res.hit_ratio, "device": backend})
+        print(f"  sharded(s=4,w=8) C={Cs:<6d} "
+              f"{len(golden) / wall:>12,.0f} acc/s", flush=True)
+    sh_overhead = acc[("set-assoc(w=8)", 8192)] / sh_acc[8192]
+    sh_flatness = sh_acc[65536] / sh_acc[512]
+    print(f"  sharded vs unsharded at C=8192: {sh_overhead:.2f}x cost; "
+          f"sharded flatness 512->65536: {sh_flatness:.2f}", flush=True)
+    rows.append({"trace": "golden-zipf", "engine": "speedup:sharded@8192",
+                 "unsharded_over_sharded": round(sh_overhead, 2),
+                 "flatness_512_to_65536": round(sh_flatness, 2)})
+
     # -- perf snapshot at the repo root: the numbers CI tracks across PRs ----
     snapshot = {
         "device": backend,
@@ -252,6 +284,9 @@ def run(quick: bool = False):
         "assoc_flatness_512_to_65536": round(flatness, 2),
         "adaptive_acc_per_s_8192": round(ad_acc),
         "adaptive_overhead_vs_static": round(overhead, 2),
+        "sharded_acc_per_s_8192": round(sh_acc[8192]),
+        "sharded_overhead_vs_unsharded": round(sh_overhead, 2),
+        "sharded_flatness_512_to_65536": round(sh_flatness, 2),
         "batched_dec_per_s": round(n_dec / dev_dec),
     }
     with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:

@@ -13,6 +13,13 @@ broken:
   WARNING unless corroborated by ``assoc_speedup_vs_flat_8192 < 5`` — a
   real O(capacity) regression collapses that internal ratio to ~1 while
   machine noise leaves it >= 10.  ``--strict`` makes flatness alone fatal.
+* ``sharded_flatness_512_to_65536 < threshold`` — the same tripwire for the
+  sharded-sketch path (ISSUE 4): its per-access delta writes must stay
+  capacity-free too.  Corroborated by
+  ``sharded_overhead_vs_unsharded > 3`` (a real regression — e.g. the
+  merge fold leaking into the per-access path, or delta copies — blows the
+  overhead up; machine noise leaves it near ~1-2x).  Missing fields are
+  tolerated (pre-ISSUE-4 snapshots).
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -21,6 +28,9 @@ broken:
   the committed baseline comes from a different machine, the comparison is
   skipped with a NOTE, and the flatness+corroboration tripwire above is
   the active gate.
+
+docs/BENCHMARKS.md documents every snapshot field, the gate arms, and the
+baseline refresh procedure.
 
 Usage (CI runs this right after ``benchmarks.run --only device``):
 
@@ -52,6 +62,17 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
             failures.append("set path no longer capacity-free: " + msg)
         else:
             print(f"WARNING: {msg} — not corroborated by the speedup "
+                  "indicator; attributing to machine noise", flush=True)
+
+    sh_flat = fresh.get("sharded_flatness_512_to_65536")
+    sh_over = fresh.get("sharded_overhead_vs_unsharded", 0.0)
+    if sh_flat is not None and sh_flat < threshold:
+        msg = (f"sharded flatness {sh_flat} < {threshold} "
+               f"(overhead vs unsharded: {sh_over}x)")
+        if strict or sh_over > 3:
+            failures.append("sharded path no longer capacity-free: " + msg)
+        else:
+            print(f"WARNING: {msg} — not corroborated by the overhead "
                   "indicator; attributing to machine noise", flush=True)
 
     if baseline:
@@ -99,11 +120,16 @@ def main(argv=None) -> int:
                      drop=args.drop, strict=args.strict)
     for msg in failures:
         print("FAIL:", msg, flush=True)
-    if not failures:
+    if failures:
+        print("see docs/BENCHMARKS.md for the gate arms, the noise model, "
+              "and how to refresh the baseline snapshot", flush=True)
+    else:
         print("bench gate OK:", json.dumps(
             {k: fresh.get(k) for k in ("assoc_flatness_512_to_65536",
                                        "assoc_speedup_vs_flat_8192",
-                                       "adaptive_overhead_vs_static")}),
+                                       "adaptive_overhead_vs_static",
+                                       "sharded_flatness_512_to_65536",
+                                       "sharded_overhead_vs_unsharded")}),
             flush=True)
     return 1 if failures else 0
 

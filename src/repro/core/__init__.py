@@ -1,6 +1,7 @@
 """TinyLFU core: the paper's contribution (sketch + admission + W-TinyLFU)
 plus the host cache-policy zoo it is evaluated against."""
-from .sketch import FrequencySketch, SketchConfig, ExactHistogram, default_sketch
+from .sketch import (FrequencySketch, ShardedFrequencySketch, SketchConfig,
+                     ExactHistogram, default_sketch)
 from .tinylfu import TinyLFUAdmission, tinylfu_cache
 from .wtinylfu import WTinyLFU, AdaptiveWTinyLFU
 from .policies import (
@@ -11,7 +12,8 @@ from .simulate import run_trace, run_matrix, SimResult, save_results, \
     load_results, theoretical_max_hit_ratio
 
 __all__ = [
-    "FrequencySketch", "SketchConfig", "ExactHistogram", "default_sketch",
+    "FrequencySketch", "ShardedFrequencySketch", "SketchConfig",
+    "ExactHistogram", "default_sketch",
     "TinyLFUAdmission", "tinylfu_cache", "WTinyLFU", "AdaptiveWTinyLFU",
     "Cache", "Eviction", "LRUEviction", "FIFOEviction", "RandomEviction",
     "LFUEviction", "SLRUEviction", "ReplacementPolicy", "ARC", "LIRS", "TwoQ",

@@ -8,6 +8,18 @@ the single source of truth for the parameter resolution and the climb
 arithmetic; it imports nothing heavy so the host-only policy path stays free
 of jax.
 
+Resolved climb vector (`resolve_climb`; see docs/API.md for the ClimbSpec
+view — indices are what `climb_update` and the device `_climb_step` share):
+
+    [0] delta0       initial / restart quota step (auto: wmax/16)
+    [1] wmin         smallest window quota the climb may set (>= 1)
+    [2] wmax         largest quota (auto: the adaptive table headroom)
+    [3] tol          noise hysteresis band on epoch-hit deltas
+                     (auto: epoch_len/256 ~= 0.4% hit-rate)
+    [4] restart      |ehits - EWMA| beyond which a phase shift is assumed
+                     and the step re-expands (auto: epoch_len/16 ~= 6%)
+    [5] warm_epochs  epochs that only seed the baselines (default 3)
+
 All arithmetic is int32-safe (magnitudes stay far below 2^31) and uses
 python floor division, which matches ``jnp.int32`` ``//`` (both floor).
 """

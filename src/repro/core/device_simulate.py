@@ -45,6 +45,7 @@ from repro.kernels.sketch_step import (StepSpec, make_step_params,
                                        init_step_state, step_ref, step_pallas,
                                        rebalance, R_HITS, R_WQUOTA, R_EHITS)
 from repro.kernels.sketch_common import keys_to_lanes
+from repro.kernels.sketch_merge import merge_halve
 from . import adaptive
 from .hashing import assoc_geometry, slots_for
 from .sketch import _pow2ceil
@@ -61,6 +62,14 @@ class DeviceWTinyLFU:
     ``counter_bits=8`` doubles the sketch footprint but lifts the counter cap
     from 15 to 255, so ``sample_factor`` above 16 no longer needs the host
     engine.
+
+    ``shards=S`` (pow2 > 1) partitions the frequency sketch into S
+    device-resident shards: per-access writes touch only the owning shard's
+    delta slice and a fused ``merge_halve`` folds the deltas into the global
+    estimate every ``merge_every`` accesses — inside the compiled program,
+    no host sync (kernels/sketch_merge.py).  ``merge_every=0`` auto-sizes to
+    ``min(4096, sample_size)`` so the deferred §3.3 aging stays within one
+    reset period of the per-access schedule.
     """
     capacity: int
     window_frac: float = 0.01
@@ -74,6 +83,8 @@ class DeviceWTinyLFU:
     counter_bits: int = 4
     adaptive: bool = False        # runtime hill-climbed window quota
     window_max_frac: float = 0.5  # adaptive: table headroom for the climb
+    shards: int = 1               # sketch shards; >1 = delta/global split
+    merge_every: int = 0          # sharded merge cadence; 0 = auto
 
     @property
     def window_cap(self) -> int:
@@ -114,14 +125,24 @@ class DeviceWTinyLFU:
     def width(self) -> int:
         w = _pow2ceil(int(max(1.0, self.counters_per_item * self.sample_size
                               / self.rows)))
-        return max(8, w)
+        # sharded: each shard needs at least one packed word per row
+        return max(8 * self.shards, w)
 
     @property
     def dk_bits(self) -> int:
         if not self.doorkeeper:
             return 0
-        return max(32, _pow2ceil(int(self.sample_size
-                                     * self.dk_bits_per_item)))
+        # sharded: each shard needs at least one 32-bit doorkeeper word
+        return max(32 * self.shards, _pow2ceil(int(self.sample_size
+                                                   * self.dk_bits_per_item)))
+
+    @property
+    def merge_epoch(self) -> int:
+        """Resolved sharded merge cadence (accesses between merge_halve
+        folds).  ``merge_every=0`` auto-sizes to ``min(4096, sample_size)``:
+        never defer the §3.3 aging past one reset period, and never merge
+        less often than the adaptive default epoch."""
+        return self.merge_every or max(1, min(4096, self.sample_size))
 
     @property
     def ways(self) -> int | None:
@@ -155,7 +176,8 @@ class DeviceWTinyLFU:
             window_slots=window_slots or self._table_slots(wsize),
             main_slots=main_slots or self._table_slots(msize),
             assoc=(ways or self.ways) if self.assoc is not None else None,
-            counter_bits=self.counter_bits, adaptive=self.adaptive)
+            counter_bits=self.counter_bits, adaptive=self.adaptive,
+            shards=self.shards)
 
     def params(self, warmup: int = 0) -> jnp.ndarray:
         return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
@@ -219,6 +241,88 @@ def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
 
 
 # ---------------------------------------------------------------------------
+# sharded sketches: epoch-chunked scan + in-program merge_halve
+# ---------------------------------------------------------------------------
+
+_sharded_cache: dict = {}
+
+
+def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
+    """One compiled program: scan over merge epochs, each epoch = fused step
+    over its chunk + merge_halve fold.  No host sync anywhere inside the
+    trace — the sharded twin of ``_adaptive_runner`` without the climb."""
+    key = (spec, backend, interpret)
+    if key not in _sharded_cache:
+        @jax.jit
+        def run(params, state, los, his, nvalid):
+            def body(st, x):
+                clo, chi, nv = x
+                if backend == "pallas":
+                    st, hits = step_pallas(spec, params, st, clo, chi, nv,
+                                           interpret=interpret)
+                else:
+                    st, hits = step_ref(spec, params, st, clo, chi)
+                # a partial (padded tail) epoch does not merge — the jit
+                # backend runs the tail outside the scan without a merge,
+                # and the two must agree on the final state.  The gate
+                # touches ONLY the sketch arrays the fold modifies: a
+                # whole-state tree_map would copy the cache tables every
+                # epoch, which at large capacities dwarfs the per-access
+                # work and sinks the flatness arm (measured 4x at C=65536)
+                merged = merge_halve(spec, params, st)
+                full = nv >= jnp.int32(clo.shape[0])
+                st = {**st, **{k: jnp.where(full, merged[k], st[k])
+                               for k in ("counters", "doorkeeper", "regs")}}
+                return st, hits
+            return jax.lax.scan(body, state, (los, his, nvalid))
+        _sharded_cache[key] = run
+    return _sharded_cache[key]
+
+
+def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
+                 backend: str, interpret: bool):
+    """Merge-epoch-chunked sharded simulation; returns (state, hits).
+
+    The jit backend scans whole epochs (each followed by the merge_halve
+    fold) and runs the (< merge_every) tail as one extra dispatch without a
+    final merge; the pallas backend folds the tail into a masked final
+    epoch whose merge is skipped.  Both emit identical per-access hit flags
+    and final state — and both match the host twin, which merges after
+    every ``merge_every``-th access and never on a partial tail.
+    """
+    n = lo.shape[0]
+    E = int(merge_every)
+    if backend == "pallas":
+        pad = (-n) % E
+        if pad:
+            z = jnp.zeros((pad,), lo.dtype)
+            lo = jnp.concatenate([lo, z])
+            hi = jnp.concatenate([hi, z])
+        ne = lo.shape[0] // E
+        nvalid = jnp.minimum(
+            jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
+        state, hits = _sharded_runner(spec, backend, interpret)(
+            params, state, lo.reshape(ne, E), hi.reshape(ne, E), nvalid)
+        return state, hits.reshape(-1)[:n]
+    ne = n // E
+    nfull = ne * E
+    hits_parts = []
+    if ne:
+        state, hits = _sharded_runner(spec, backend, interpret)(
+            params, state, lo[:nfull].reshape(ne, E),
+            hi[:nfull].reshape(ne, E), jnp.full((ne,), E, jnp.int32))
+        hits_parts.append(hits.reshape(-1))
+    if n - nfull:
+        state, tail = _jit_step(spec, params, state, lo[nfull:], hi[nfull:])
+        hits_parts.append(tail)
+    if not hits_parts:                       # zero-length trace
+        hits_parts.append(jnp.zeros((0,), jnp.int32))
+    hits = jnp.concatenate(hits_parts) if len(hits_parts) > 1 else \
+        hits_parts[0]
+    return state, hits
+
+
+# ---------------------------------------------------------------------------
 # adaptive window sizing: epoch-chunked scan + in-program hill-climb
 # ---------------------------------------------------------------------------
 
@@ -234,10 +338,32 @@ class ClimbSpec:
     oscillation.  A swing larger than ``restart`` (either sign — the
     workload changed) re-expands the step to ``delta0`` so the climber can
     cross the quota range quickly after a phase shift.  The quota is
-    clamped to [wmin, wmax].  Zero fields auto-size (core/adaptive.py):
-    delta0 = wmax/16, wmax = the adaptive table headroom
-    (``window_max_frac`` of capacity), tol = epoch_len/256 (~0.4% hit-rate
-    noise band), restart = epoch_len/16 (~6% hit-rate swing).
+    clamped to [wmin, wmax].
+
+    Field reference (zero fields auto-size — core/adaptive.py; rendered in
+    docs/API.md):
+
+    ``epoch_len`` (default 4096)
+        Accesses per climb epoch.  Climb + rebalance (and, with
+        ``shards>1``, the merge_halve fold) run at each epoch boundary
+        inside the compiled program; partial tail epochs never climb.
+    ``delta0`` (default 0 = auto ``wmax/16``)
+        Initial quota step, and the step the phase-shift restart re-arms.
+    ``wmin`` (default 1)
+        Smallest quota the climb may set.
+    ``wmax`` (default 0 = auto)
+        Largest quota; auto = the adaptive table headroom
+        (``window_max_frac`` of capacity — the static table sizing).
+    ``tol`` (default 0 = auto ``epoch_len/256``)
+        Noise hysteresis band (~0.4% hit-rate): epoch-hit deltas within
+        ±tol are a plateau (hold position, decay the step).
+    ``restart`` (default 0 = auto ``epoch_len/16``)
+        Disruption threshold (~6% hit-rate swing vs the EWMA baseline);
+        while tripped, improving moves double the step (capped at a
+        quarter of the quota range).
+    ``warm_epochs`` (default 3)
+        Epochs that only seed the baselines — the fill-up transient
+        swamps every signal.
     """
     epoch_len: int = 4096
     delta0: int = 0
@@ -346,7 +472,12 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
                     st, hits = step_ref(spec, params, st, clo, chi)
                 ehits = st["regs"][R_EHITS]
                 quota = st["regs"][R_WQUOTA]
-                climbed = _climb_step(params, spec, (st,) + carry[1:],
+                # sharded + adaptive: the merge_halve fold rides the climb
+                # epochs (merge first, then climb + rebalance — the host
+                # twin AdaptiveWTinyLFU merges at the same point); the
+                # `full` gate below skips both on a padded partial tail
+                stm = merge_halve(spec, params, st) if spec.shards > 1 else st
+                climbed = _climb_step(params, spec, (stm,) + carry[1:],
                                       ehits, climb)
                 # a partial (padded tail) epoch must not climb: its truncated
                 # hit count reads as a phase shift, and the jit backend —
@@ -437,6 +568,12 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     the window quota between epochs inside the same compiled program, and
     the per-epoch (quota, hits) trajectory is returned in
     ``extra["trajectory"]``.  ``window_frac`` seeds the initial quota.
+
+    ``shards=S`` (via cfg_kw) runs the sharded frequency sketch: the trace
+    is chunked into merge epochs (``merge_every`` accesses, 0 = auto) and a
+    fused ``merge_halve`` folds the shard deltas into the global estimate
+    at every boundary — combined with ``adaptive=True`` the fold rides the
+    climb epochs instead.
     """
     cfg = DeviceWTinyLFU(capacity, window_frac=window_frac,
                          sample_factor=sample_factor, adaptive=adaptive,
@@ -460,6 +597,11 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
             trajectory = {"epoch_len": climb.epoch_len,
                           "epoch_hits": np.asarray(ehits).tolist(),
                           "quota": np.asarray(quotas).tolist()}
+    elif cfg.shards > 1:
+        if backend not in ("jit", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        state, hits = _run_sharded(spec, params, state, lo, hi,
+                                   cfg.merge_epoch, backend, interpret)
     elif backend == "jit":
         state, hits = _run_jit(spec, params, state, lo, hi)
     elif backend == "pallas":
@@ -473,6 +615,10 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     counted = len(trace) - warmup
     extra = {"backend": backend, "window_frac": window_frac,
              "assoc": cfg.assoc, "device": jax.default_backend()}
+    if cfg.shards > 1:
+        extra["shards"] = cfg.shards
+        # adaptive+sharded: the fold rides the climb epochs, not merge_epoch
+        extra["merge_every"] = climb.epoch_len if adaptive else cfg.merge_epoch
     if adaptive:
         extra["adaptive"] = True
         extra["final_quota"] = int(regs[R_WQUOTA])
@@ -528,16 +674,21 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
                            adaptive=adaptive, **cfg_kw)
             for C in capacities for wf in window_fracs]
     gridlab = [(C, wf) for C in capacities for wf in window_fracs]
+    sharded = any(c.shards > 1 for c in grid)
     if mode == "auto":
-        # adaptive grids can't share geometry (quota histories diverge), so
-        # auto resolves to the only valid mode even on accelerators
-        mode = "sequential" if adaptive else (
+        # adaptive/sharded grids can't share geometry (quota histories
+        # diverge; merge epochs need the epoch-chunked runner), so auto
+        # resolves to the only valid mode even on accelerators
+        mode = "sequential" if (adaptive or sharded) else (
             "vmap" if jax.default_backend() == "tpu" else "sequential")
     if adaptive:
         if mode == "vmap":
             raise ValueError("adaptive sweeps run per-config compiled "
                              "programs: use mode='sequential'")
         climb = climb or ClimbSpec()
+    if sharded and mode == "vmap":
+        raise ValueError("sharded sweeps run per-config epoch-chunked "
+                         "programs: use mode='sequential'")
 
     trace = np.asarray(trace)
     shared_trace = trace.ndim == 1
@@ -604,6 +755,10 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
                 st, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
                                          st, l, h, climb, "jit", False)
                 outs.append(st["regs"])
+            elif c.shards > 1:
+                st, _ = _run_sharded(spec, c.params(warmup=warmup), st,
+                                     l, h, c.merge_epoch, "jit", False)
+                outs.append(st["regs"])
             else:
                 outs.append(_jit_step(spec, c.params(warmup=warmup), st,
                                       l, h)[0]["regs"])
@@ -623,6 +778,8 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         if adaptive:
             extra["adaptive"] = True
             extra["final_quota"] = int(regs[g, R_WQUOTA])
+        if grid[g].shards > 1:
+            extra["shards"] = grid[g].shards
         out.append(SimResult(
             policy="w-tinylfu(device)" + ("+climb" if adaptive else ""),
             cache_size=C, trace=trace_name,

@@ -62,6 +62,14 @@ WSET_SALT = 0x1B873593          # window table set hash
 MSET_SALT = 0xCC9E2D51          # main (SLRU) table: first-choice set hash
 MSET2_SALT = 0x38495AB5         # main table: second-choice set hash
 
+# sketch-shard salt (StepSpec.shards): key -> owning sketch shard.  Distinct
+# from every probe/doorkeeper/set salt so shard membership is uncorrelated
+# with both probe positions and cache-set placement.
+SHARD_SALT = 0x52DCE729
+# host-side seed for the splitmix64 shard hash (ShardedFrequencySketch);
+# the host twin's hash family is independent of the device's by design
+SHARD_SEED64 = 0xA24BAED4963EE407
+
 
 def mix32_np(x: np.ndarray) -> np.ndarray:
     """Reference (numpy) implementation of the 32-bit mixer used on device."""
@@ -108,6 +116,41 @@ def set_index32_np(keys: np.ndarray, n_sets: int, salt: int) -> np.ndarray:
     s = np.uint32(salt)
     h = mix32_np(lo + s) ^ mix32_np(hi ^ np.uint32(0x85EBCA6B) ^ s)
     return (h & np.uint32(n_sets - 1)).astype(np.int64)
+
+
+def shard_index32_np(keys: np.ndarray, shards: int) -> np.ndarray:
+    """Owning sketch shard of each key (``shards`` pow2).
+
+    Bit-for-bit the device's shard hash (kernels/sketch_common.shard_index):
+    diagnostics and tests can reconstruct the device's key->shard partition
+    on the host.  (The host twin ``ShardedFrequencySketch`` uses its own
+    splitmix64 shard hash — hash families never line up across the engines.)
+    """
+    return set_index32_np(keys, shards, SHARD_SALT)
+
+
+# ---------------------------------------------------------------------------
+# sketch-shard geometry (StepSpec.shards / ShardedFrequencySketch)
+# ---------------------------------------------------------------------------
+
+def shard_geometry(width: int, dk_bits: int, shards: int) -> tuple[int, int]:
+    """(width_shard, dk_bits_shard) for a sketch partitioned into ``shards``.
+
+    Each shard owns a contiguous ``width/shards``-counter slice of every row
+    (and a ``dk_bits/shards`` slice of the doorkeeper): a key's probes are
+    confined to its owning shard's slice, so per-access updates touch only
+    that shard.  Constraints: ``shards`` pow2; per-shard width a pow2
+    multiple of 8 (packed-counter word alignment); per-shard doorkeeper at
+    least one 32-bit word.
+    """
+    assert shards >= 1 and shards & (shards - 1) == 0, \
+        f"shards {shards} must be a power of two"
+    assert width % (shards * 8) == 0, \
+        f"width {width} must be a multiple of 8*shards ({shards * 8})"
+    if dk_bits:
+        assert dk_bits % (shards * 32) == 0, \
+            f"dk_bits {dk_bits} must be a multiple of 32*shards ({shards * 32})"
+    return width // shards, dk_bits // shards
 
 
 # ---------------------------------------------------------------------------

@@ -189,6 +189,159 @@ class FrequencySketch:
             self.cfg.rows, self.cfg.width)
 
 
+class ShardedFrequencySketch:
+    """Sharded TinyLFU histogram — host twin of the device engine's
+    ``StepSpec.shards`` mode (kernels/sketch_step.py + sketch_merge.py).
+
+    The counting address space is partitioned into ``shards`` slices: a key
+    owns one shard (splitmix64 shard hash) and all of its probes are
+    confined to that shard's ``width/shards``-counter (and
+    ``doorkeeper_bits/shards``-bit) slice.  Writes accumulate in shard-local
+    *delta* structures; reads compose the merged *global* estimate with the
+    delta; :meth:`merge_halve` — called by the owning policy every merge
+    epoch, mirroring the device's fused epoch-boundary fold — adds the
+    deltas into the global (CM-sketch linear merge, saturating at ``cap``)
+    and applies the paper's §3.3 aging as many halvings as the accumulated
+    sample size demands.  Between merges the combined global+delta evolves
+    exactly like an unsharded :class:`FrequencySketch`; only the reset
+    timing differs (deferred to merge boundaries), which is what the device
+    parity tests pin.
+
+    Unlike :class:`FrequencySketch`, :meth:`add` never resets on its own —
+    aging belongs to :meth:`merge_halve`.
+    """
+
+    _MEMO_LIMIT = 2_000_000               # probe memo safety valve
+
+    def __init__(self, cfg: SketchConfig, shards: int):
+        assert shards >= 2 and shards & (shards - 1) == 0, \
+            f"shards {shards} must be a power of two >= 2"
+        assert cfg.width % shards == 0, \
+            f"width {cfg.width} must be a multiple of shards ({shards})"
+        if cfg.doorkeeper_bits:
+            assert cfg.doorkeeper_bits % shards == 0
+        assert cfg.conservative, "sharded sketch is conservative-update only"
+        self.cfg = cfg
+        self.shards = shards
+        self.width_shard = cfg.width // shards
+        self.dk_bits_shard = cfg.doorkeeper_bits // shards
+        n_probes = cfg.rows * cfg.probes_per_row
+        self.gtable = [0] * (cfg.rows * cfg.width)    # merged global
+        self.dtable = [0] * (cfg.rows * cfg.width)    # shard-local deltas
+        if cfg.doorkeeper_bits:
+            self.gdk = bytearray(cfg.doorkeeper_bits)
+            self.ddk = bytearray(cfg.doorkeeper_bits)
+        else:
+            self.gdk = self.ddk = None
+        self.size = 0                      # additions since last §3.3 reset
+        self.resets = 0
+        self.merges = 0
+        self._memo: dict = {}
+        self._dk_memo: dict = {}
+        w = cfg.width
+        if cfg.rows == 1:
+            self._row_off = [0] * n_probes
+        else:
+            self._row_off = [r * w for r in range(cfg.rows)
+                             for _ in range(cfg.probes_per_row)]
+        self._probe_seeds = [((i + 1) * _SEED_STEP + cfg.seed) & _MASK64
+                             for i in range(n_probes)]
+        self._dk_seeds = [((i + 1) * _SEED_STEP + (cfg.seed ^ 0x5A5A))
+                          & _MASK64 for i in range(cfg.doorkeeper_probes)]
+
+    # -- hashing (memoized; probes confined to the owning shard's slice) -----
+    def _shard_of(self, key: int) -> int:
+        from .hashing import SHARD_SEED64
+        return _splitmix64_py((key + SHARD_SEED64) & _MASK64) % self.shards
+
+    def _probes(self, key: int):
+        p = self._memo.get(key)
+        if p is None:
+            base = self._shard_of(key) * self.width_shard
+            ws = self.width_shard
+            p = tuple(off + base + _splitmix64_py((key + s) & _MASK64) % ws
+                      for off, s in zip(self._row_off, self._probe_seeds))
+            if len(self._memo) >= self._MEMO_LIMIT:
+                self._memo.clear()
+            self._memo[key] = p
+        return p
+
+    def _dk_probes(self, key: int):
+        p = self._dk_memo.get(key)
+        if p is None:
+            base = self._shard_of(key) * self.dk_bits_shard
+            nb = self.dk_bits_shard
+            p = tuple(base + _splitmix64_py((key + s) & _MASK64) % nb
+                      for s in self._dk_seeds)
+            if len(self._dk_memo) >= self._MEMO_LIMIT:
+                self._dk_memo.clear()
+            self._dk_memo[key] = p
+        return p
+
+    # -- public api (FrequencySketch-compatible, minus the auto reset) -------
+    def add(self, key: int) -> None:
+        if self.gdk is not None:
+            present = True
+            gdk, ddk = self.gdk, self.ddk
+            for i in self._dk_probes(key):
+                if not (gdk[i] or ddk[i]):
+                    present = False
+                    ddk[i] = 1
+            if not present:                # first timer: doorkeeper absorbs
+                self.size += 1
+                return
+        g, d = self.gtable, self.dtable
+        idx = self._probes(key)
+        vals = [g[i] + d[i] for i in idx]
+        m = min(vals)
+        if m < self.cfg.cap:               # combined count caps like the
+            for i, v in zip(idx, vals):    # unsharded sketch; bump the delta
+                if v == m:
+                    d[i] += 1
+        self.size += 1
+
+    def estimate(self, key: int) -> int:
+        g, d = self.gtable, self.dtable
+        est = min(g[i] + d[i] for i in self._probes(key))
+        if self.gdk is not None:
+            gdk, ddk = self.gdk, self.ddk
+            if all(gdk[i] or ddk[i] for i in self._dk_probes(key)):
+                est += 1
+        return est
+
+    def merge_halve(self) -> None:
+        """Fold the shard deltas into the global estimate (saturating CM
+        merge) and apply the deferred §3.3 aging — the host mirror of
+        ``kernels.sketch_merge.merge_halve``, bit-for-bit including the
+        merge-first halve-second order and the multi-halving catch-up."""
+        cap = self.cfg.cap
+        self.gtable = [min(g + d, cap)
+                       for g, d in zip(self.gtable, self.dtable)]
+        self.dtable = [0] * len(self.dtable)
+        if self.gdk is not None:
+            gdk, ddk = self.gdk, self.ddk
+            for i in range(len(gdk)):
+                if ddk[i]:
+                    gdk[i] = 1
+            self.ddk = bytearray(len(ddk))
+        k = 0
+        while self.cfg.sample_size > 0 and self.size >= self.cfg.sample_size:
+            self.size //= 2
+            k += 1
+        if k:
+            self.gtable = [v >> k for v in self.gtable]
+            if self.gdk is not None:
+                self.gdk = bytearray(len(self.gdk))
+            self.resets += k
+        self.merges += 1
+
+    # numpy view (merged global + delta) for tests / parity checks
+    def table_array(self) -> np.ndarray:
+        merged = [g + d for g, d in zip(self.gtable, self.dtable)]
+        return np.asarray(merged, dtype=np.int64).reshape(
+            self.cfg.rows, self.cfg.width)
+
+
 class ExactHistogram:
     """Accurate TinyLFU: per-key exact counters (hash table), same reset
     semantics.  ``integer_division=False`` gives the floating-point reset used
@@ -226,23 +379,33 @@ class ExactHistogram:
 def default_sketch(cache_size: int, sample_factor: int = 8,
                    counters_per_item: float = 2.0, rows: int = 4,
                    doorkeeper: bool = True, dk_bits_per_item: float = 4.0,
-                   seed: int = 0) -> FrequencySketch:
+                   seed: int = 0, shards: int = 1):
     """Sizing rule used throughout the benchmarks.
 
     Defaults land at ~1.5 bytes of metadata per sample element (4-bit main
     counters x2/elem + 4 doorkeeper bits/elem), just above the paper's Fig 22
     accuracy knee (~1.25 B/elem), so the approximate sketch matches the exact
     histogram's hit ratio.  cap = W/C with the doorkeeper absorbing one count.
+
+    ``shards > 1`` returns the sharded twin (:class:`ShardedFrequencySketch`,
+    same total footprint, shard-partitioned): the owning policy must then
+    drive :meth:`~ShardedFrequencySketch.merge_halve` every merge epoch.
     """
     sample = sample_factor * cache_size
     cap = max(1, sample_factor - (1 if doorkeeper else 0))
     counters = rows * _pow2ceil(max(1.0, counters_per_item * sample / rows))
+    width = max(shards, counters // rows)
+    dk_bits = 0
+    if doorkeeper:
+        dk_bits = max(32 * shards, _pow2ceil(sample * dk_bits_per_item))
     cfg = SketchConfig(
         sample_size=sample,
-        counters=counters,
+        counters=rows * width,
         rows=rows,
         cap=cap,
-        doorkeeper_bits=_pow2ceil(sample * dk_bits_per_item) if doorkeeper else 0,
+        doorkeeper_bits=dk_bits,
         seed=seed,
     )
+    if shards > 1:
+        return ShardedFrequencySketch(cfg, shards)
     return FrequencySketch(cfg)

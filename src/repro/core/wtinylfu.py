@@ -18,6 +18,14 @@ becomes per-set LRU and the main cache a ``SetAssociativeSLRU``
 (power-of-two-choices placement, per-set protected budgets).  With
 collision-free sketches the assoc host and device engines produce identical
 per-access hit sequences (tests/test_sketch_step.py pins this).
+
+``shards=S`` swaps the sketch for the sharded twin
+(``core.sketch.ShardedFrequencySketch``): writes accumulate in shard-local
+deltas, reads compose global+delta, and every ``merge_every`` accesses the
+merge_halve fold runs — mirroring the device engine's ``StepSpec.shards``
+mode, whose per-access hit sequence it reproduces bit-for-bit under
+collision-free sketches (reset timing included: §3.3 aging is deferred to
+the merge boundaries on both sides).
 """
 from __future__ import annotations
 
@@ -38,11 +46,22 @@ class WTinyLFU(ReplacementPolicy):
     def __init__(self, capacity: int, window_frac: float = 0.01,
                  sample_factor: int = 8, protected_frac: float = 0.8,
                  seed: int = 0, counters_per_item: float = 1.0,
-                 doorkeeper: bool = True, assoc: int | None = None):
+                 doorkeeper: bool = True, assoc: int | None = None,
+                 shards: int = 1, merge_every: int = 0):
         super().__init__(capacity)
         self.window_cap = max(1, int(round(capacity * window_frac)))
         self.main_cap = max(1, capacity - self.window_cap)
         self.assoc = assoc
+        # sharded sketch twin (device StepSpec.shards): writes accumulate in
+        # shard deltas and every ``merge_every`` accesses the merge_halve
+        # fold runs — mirroring the device's epoch-boundary fused op,
+        # including the 0 = auto cadence (min(4096, sample_size), i.e.
+        # DeviceWTinyLFU.merge_epoch — aging never defers past one reset
+        # period)
+        self.shards = shards
+        self.merge_every = merge_every or max(
+            1, min(4096, sample_factor * capacity))
+        self._nacc = 0
         if assoc is None:
             self.window: OrderedDict = OrderedDict()
             self.main = SLRUEviction(self.main_cap,
@@ -60,7 +79,7 @@ class WTinyLFU(ReplacementPolicy):
             self._t = 0                    # device-matching LRU stamp
         sketch = default_sketch(capacity, sample_factor=sample_factor,
                                 seed=seed, counters_per_item=counters_per_item,
-                                doorkeeper=doorkeeper)
+                                doorkeeper=doorkeeper, shards=shards)
         self.admission = TinyLFUAdmission(sketch)
 
     def __contains__(self, key):
@@ -82,8 +101,17 @@ class WTinyLFU(ReplacementPolicy):
         return s
 
     def _access(self, key) -> bool:
-        if self.assoc is not None:
-            return self._access_assoc(key)
+        hit = (self._access_assoc(key) if self.assoc is not None
+               else self._access_flat(key))
+        if self.shards > 1:
+            # device parity: the merge_halve fold runs after every
+            # merge_every-th access completes, never on a partial tail
+            self._nacc += 1
+            if self._nacc % self.merge_every == 0:
+                self.admission.sketch.merge_halve()
+        return hit
+
+    def _access_flat(self, key) -> bool:
         self.admission.record(key)
         if key in self.window:
             self.window.move_to_end(key)
@@ -156,8 +184,9 @@ class AdaptiveWTinyLFU(ReplacementPolicy):
                  doorkeeper: bool = True, window_max_frac: float = 0.5,
                  epoch_len: int = 4096, delta0: int = 0, wmin: int = 1,
                  wmax: int = 0, tol: int = 0, restart: int = 0,
-                 warm_epochs: int = 3):
+                 warm_epochs: int = 3, shards: int = 1):
         super().__init__(capacity)
+        self.shards = shards          # sharded sketch: merge rides the epochs
         self.window_cap0 = max(1, int(round(capacity * window_frac)))
         self.main_cap0 = max(1, capacity - self.window_cap0)
         self.total = self.window_cap0 + self.main_cap0
@@ -180,7 +209,7 @@ class AdaptiveWTinyLFU(ReplacementPolicy):
         self.quota_trajectory: list[int] = []
         sketch = default_sketch(capacity, sample_factor=sample_factor,
                                 seed=seed, counters_per_item=counters_per_item,
-                                doorkeeper=doorkeeper)
+                                doorkeeper=doorkeeper, shards=shards)
         self.admission = TinyLFUAdmission(sketch)
 
     def __contains__(self, key):
@@ -232,6 +261,10 @@ class AdaptiveWTinyLFU(ReplacementPolicy):
         return hit
 
     def _epoch_boundary(self):
+        # sharded: the merge_halve fold rides the climb epochs, before the
+        # climb + rebalance — same order as the device scan body
+        if self.shards > 1:
+            self.admission.sketch.merge_halve()
         # record the quota that was IN EFFECT for the finished epoch (the
         # device scan emits the same pre-climb value next to epoch_hits)
         self.quota_trajectory.append(self.quota)

@@ -24,3 +24,33 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
     n = math.prod(shape)
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+# ---------------------------------------------------------------------------
+# sketch-shard placement (StepSpec.shards — see kernels/sketch_merge.py)
+# ---------------------------------------------------------------------------
+
+def shard_placement(n_shards: int, devices=None) -> list:
+    """Shard -> device placement map for the sharded frequency sketch.
+
+    Shard ``s`` owns the ``width/n_shards`` counter slice ``s`` of the
+    sketch buffers' delta halves plus its slice of the replicated global
+    estimate; per-access writes are shard-local, and the once-per-epoch
+    ``merge_halve`` fold is the only cross-device exchange (an all-gather
+    that refreshes every device's global replica).  Round-robin so shard
+    counts above the device count still map (multiple shards per device —
+    the single-host simulation is the n_devices=1 special case).
+    """
+    assert n_shards >= 1
+    devices = list(jax.devices()) if devices is None else list(devices)
+    assert devices, "shard placement needs at least one device"
+    return [devices[s % len(devices)] for s in range(n_shards)]
+
+
+def make_shard_mesh(n_shards: int, devices=None):
+    """1-D ``("shard",)`` mesh over ``min(n_shards, available)`` devices —
+    the placement the future multi-device sharded-sketch run will shard the
+    delta arrays over (``jax.sharding.NamedSharding`` along axis 0)."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = min(max(1, n_shards), len(devices))
+    return jax.make_mesh((n,), ("shard",), devices=devices[:n])

@@ -10,12 +10,14 @@ Layout (per the kernel deliverable spec):
   ops.py — jit'd public wrappers (+ DeviceTinyLFU facade)
   ref.py — pure-jnp oracles, bit-exact ground truth for the kernels
 """
-from .sketch_common import DeviceSketchConfig, init_state, keys_to_lanes
+from .sketch_common import (DeviceSketchConfig, init_state, keys_to_lanes,
+                            merge_words)
 from .ops import estimate, add, reset, admit, make_config, DeviceTinyLFU
 from .sketch_step import (StepSpec, make_step_params, init_step_state,
                           step_ref, step_pallas)
+from .sketch_merge import merge_halve
 
 __all__ = ["DeviceSketchConfig", "init_state", "keys_to_lanes", "estimate",
            "add", "reset", "admit", "make_config", "DeviceTinyLFU",
            "StepSpec", "make_step_params", "init_step_state", "step_ref",
-           "step_pallas"]
+           "step_pallas", "merge_words", "merge_halve"]

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hashing import (MIX32_M1, MIX32_M2, PROBE_SALTS,
-                                WSET_SALT, MSET_SALT)
+                                WSET_SALT, MSET_SALT, SHARD_SALT)
 
 DK_SALT_XOR = 0xDEADBEEF        # doorkeeper probes use salted variants
 HI_MIX_XOR = 0x85EBCA6B
@@ -108,6 +108,20 @@ def set_index(lo: jnp.ndarray, hi: jnp.ndarray, n_sets: int,
     return (h & jnp.uint32(n_sets - 1)).astype(jnp.int32)
 
 
+def shard_index(lo: jnp.ndarray, hi: jnp.ndarray,
+                shards: int) -> jnp.ndarray:
+    """Owning sketch shard of a key (``shards`` pow2; StepSpec.shards).
+
+    jnp twin of ``core.hashing.shard_index32_np``.  Uses ``SHARD_SALT`` —
+    independent of every probe/doorkeeper/cache-set salt, so shard
+    membership is uncorrelated with probe positions and set placement.
+    """
+    s = jnp.uint32(SHARD_SALT)
+    h = mix32(lo.astype(jnp.uint32) + s) ^ \
+        mix32(hi.astype(jnp.uint32) ^ jnp.uint32(HI_MIX_XOR) ^ s)
+    return (h & jnp.uint32(shards - 1)).astype(jnp.int32)
+
+
 # -- nibble helpers (int32-safe: masks clear any sign-extension bits) --------
 
 def nibble_get(word: jnp.ndarray, nib: jnp.ndarray) -> jnp.ndarray:
@@ -126,6 +140,44 @@ def halve_words(words: jnp.ndarray, counter_bits: int = 4) -> jnp.ndarray:
     extension (0x77777777 for 4-bit nibbles, 0x7F7F7F7F for 8-bit bytes)."""
     mask = 0x77777777 if counter_bits == 4 else 0x7F7F7F7F
     return (words >> 1) & jnp.int32(mask)
+
+
+def merge_words(a: jnp.ndarray, b: jnp.ndarray,
+                counter_bits: int = 4) -> jnp.ndarray:
+    """Per-field SATURATING add of packed counter words: CM-sketch linear
+    merge (counts add) with every field pinned at the counter maximum.
+
+    A plain word-wise ``a + b`` would carry a field that overflows into its
+    neighbouring packed counter, silently corrupting another key's count —
+    the merge splits even/odd fields into separate lanes so each sum gets a
+    spare high bit, then saturates any field that overflowed:
+
+        4-bit: even nibbles masked 0x0F0F0F0F sum to <= 30 inside their
+        byte; bit 4 of the byte flags >= 16, and ``flag * 0xF`` builds the
+        saturation value without cross-byte carries (bytes are 0 or 1).
+        8-bit: same scheme over 0x00FF00FF halfword lanes, flag bit 8.
+
+    Shard folds (kernels/sketch_merge.merge_halve) rely on this: the
+    engine's own invariant keeps global+delta <= cap so the saturation is
+    never hit there, but merging independently-built sketches (multi-device
+    aggregation) must not borrow across fields.
+    """
+    assert counter_bits in (4, 8)
+    if counter_bits == 4:
+        lane_mask, flag_shift, flag_mask, fmax = 0x0F0F0F0F, 4, 0x01010101, 0xF
+    else:
+        lane_mask, flag_shift, flag_mask, fmax = 0x00FF00FF, 8, 0x00010001, 0xFF
+    lane_mask = jnp.int32(lane_mask)
+    flag_mask = jnp.int32(flag_mask)
+
+    def lane_sum(x, y):
+        s = (x & lane_mask) + (y & lane_mask)
+        over = (s >> flag_shift) & flag_mask          # 1 per overflowed field
+        return (s | over * jnp.int32(fmax)) & lane_mask
+
+    even = lane_sum(a, b)
+    odd = lane_sum(a >> counter_bits, b >> counter_bits)
+    return even | (odd << counter_bits)
 
 
 def bit_get(words: jnp.ndarray, bit: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,80 @@
+"""Epoch-boundary fold for sharded frequency sketches (StepSpec.shards).
+
+Sharded mode splits the TinyLFU sketch into S shard-partitioned structures:
+``counters``/``doorkeeper`` carry [merged global || shard delta] halves in
+one buffer; per-access writes land in the owning shard's slice of the delta
+half while reads compose the global half with the delta.  This module is the
+other half of the contract: :func:`merge_halve` runs at epoch boundaries —
+inside the
+same compiled program as the step scan and (in adaptive mode) right next to
+``kernels.sketch_step.rebalance``, no host sync — and
+
+1. **merges**: folds every shard's delta into the read-optimized global
+   estimate.  CM-sketch counts are linearly mergeable (the property
+   Lightweight Robust Size-Aware Cache Management leans on for its
+   multi-sketch variants), so the fold is a per-field SATURATING add
+   (``sketch_common.merge_words`` — no borrow may leak into a neighbouring
+   packed counter) plus a bitwise OR of the doorkeeper deltas;
+2. **halves**: applies the paper's §3.3 aging — deferred from the per-access
+   path, which in sharded mode never resets — as many times as the
+   accumulated sample size demands (an epoch longer than the sample period W
+   owes more than one halving; ``k`` halvings of packed fields are ``k``
+   passes of ``halve_words``, i.e. field >> k), clearing the doorkeeper
+   exactly like the unsharded reset;
+3. **clears** the deltas, so the next epoch accumulates from zero.
+
+The §3.3 divide-by-2 commutes with the merge in exact arithmetic (half of a
+sum is the sum of halves); in integer arithmetic the fold runs merge-first,
+halve-second, which tests/test_sketch_merge.py pins together with the
+saturation and no-borrow-leak invariants at both counter widths.
+
+On the future multi-device placement (``distributed.mesh.shard_placement``)
+each device owns one shard's delta slice and the merge is the once-per-epoch
+all-gather that refreshes every device's replica of the global estimate —
+the per-access path stays free of cross-device traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sketch_common import halve_words, merge_words
+from .sketch_step import StepSpec, P_SAMPLE, R_SIZE
+
+
+def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
+    """Fold shard deltas into the global sketch and apply the deferred §3.3
+    aging; returns the new state (deltas cleared).
+
+    Pure jnp, O(width) once per epoch — amortized over the epoch it leaves
+    the per-access cost untouched (the same contract as ``rebalance``).
+    The number of halvings is data-dependent (``size`` may have crossed the
+    sample period W several times within one epoch), so it runs as a tiny
+    ``while_loop`` on the scalar followed by a ``fori_loop`` of full-array
+    halving passes — zero iterations on the epochs where no reset is due.
+    """
+    assert spec.shards > 1, "merge_halve requires StepSpec.shards > 1"
+    H, HD = spec.counter_words, spec.dk_words
+    g = merge_words(state["counters"][:H], state["counters"][H:],
+                    spec.counter_bits)
+    dk = state["doorkeeper"][:HD] | state["doorkeeper"][HD:]
+
+    size = state["regs"][R_SIZE]
+    W = params[P_SAMPLE]
+
+    def more(c):
+        return (W > 0) & (c[0] >= W)
+
+    def halve_size(c):
+        return c[0] // 2, c[1] + 1
+
+    size, k = jax.lax.while_loop(more, halve_size, (size, jnp.int32(0)))
+    g = jax.lax.fori_loop(
+        0, k, lambda i, x: halve_words(x, spec.counter_bits), g)
+    dk = jnp.where(k > 0, jnp.zeros_like(dk), dk)
+
+    regs = state["regs"].at[R_SIZE].set(size)
+    return {**state,
+            "counters": jnp.concatenate([g, jnp.zeros_like(g)]),
+            "doorkeeper": jnp.concatenate([dk, jnp.zeros_like(dk)]),
+            "regs": regs}

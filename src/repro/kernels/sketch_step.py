@@ -59,6 +59,19 @@ Sketch counters are ``counter_bits`` ∈ {4, 8} wide (8 or 4 per int32 word):
 doubles the sketch footprint but lifts the cap to 255 so large
 ``sample_factor`` configurations no longer need the host engine.
 
+**Sharded sketches (``StepSpec.shards = S``)** — for capacities whose
+counters outgrow one core's VMEM, the sketch address space partitions into S
+shards: a key's probes are confined to its owning shard's ``width/S``-counter
+(and ``dk_bits/S``-doorkeeper-bit) slice, ``counters``/``doorkeeper`` carry
+[merged global || shard delta] halves in one buffer, per-access writes land
+in the owning shard's slice of the delta half, reads compose global + delta,
+and the §3.3 reset moves from the per-access path to the epoch-boundary
+``kernels.sketch_merge.merge_halve`` fold (saturating CM-sketch merge +
+deferred halving, inside the same compiled program).
+``shards=1`` (the default) compiles the identical program — all shard logic
+sits under static Python branches, same pattern as ``assoc=None`` /
+``adaptive=False``.
+
 Semantics contract (tests/test_sketch_step.py, tests/test_device_simulate.py):
 
 * ``step_ref`` (pure-jnp `lax.scan`) and ``step_pallas`` (fused kernel) are
@@ -99,9 +112,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.hashing import WSET_SALT, MSET_SALT, MSET2_SALT, set_ways
+from repro.core.hashing import (WSET_SALT, MSET_SALT, MSET2_SALT, set_ways,
+                                shard_geometry)
 from .sketch_common import (probe_index, dk_probe_index, set_index,
-                            halve_words)
+                            shard_index, halve_words)
 
 # python ints (not jnp scalars): jnp scalars at module scope would be closed
 # over as captured constants, which pallas kernels reject
@@ -143,7 +157,62 @@ def _pow2(x: int) -> bool:
 
 @dataclass(frozen=True)
 class StepSpec:
-    """Static geometry of one simulated W-TinyLFU instance."""
+    """Static geometry of one simulated W-TinyLFU instance.
+
+    Every field is compile-time static: two ``StepSpec`` values that differ
+    in any field compile (and cache) separate programs.  Per-config scalars
+    that may vary across a vmapped sweep live in the traced ``params``
+    vector instead (:func:`make_step_params`).
+
+    Field reference (see docs/API.md for the rendered version):
+
+    ``width``
+        Sketch counters per row.  Power of two, multiple of 8 (counters are
+        packed 8- or 4-per-int32 word).  With ``shards=S`` also a multiple
+        of ``8*S`` — each shard owns a contiguous ``width/S`` slice.
+    ``rows`` (default 4)
+        CM-sketch depth: independent probe rows, estimate = min over rows.
+        At most ``len(PROBE_SALTS)`` (8).
+    ``dk_bits`` (default 0)
+        Doorkeeper Bloom-filter bits (paper §3.4.2).  0 disables the
+        doorkeeper; otherwise a power of two >= 32 (packed 32-per-int32;
+        with ``shards=S``: a multiple of ``32*S``).
+    ``dk_probes`` (default 3)
+        Bloom probes per doorkeeper insert/query.
+    ``window_slots`` / ``main_slots`` (default 1)
+        Static table sizes; must be >= any window/main capacity the params
+        configure (excess slots become init-time padding, or runtime
+        headroom when ``adaptive``).  In set mode each must be
+        ``assoc * pow2`` (sets x ways).
+    ``assoc`` (default None)
+        None = flat exact tables (global LRU/SLRU, O(capacity) per access).
+        W = W-way set-associative layout, O(ways) per access.  Interaction:
+        vmapped sweeps share one static geometry — every grid member must
+        keep ``main_cap >= shared main set count`` (enforced by
+        ``simulate_sweep``) or its main table would be unreachable.
+    ``counter_bits`` (default 4)
+        Packed sketch counter width: 4 (cap <= 15, the paper's §3.4.1
+        layout) or 8 (cap <= 255, doubles the sketch footprint, lifts the
+        ``sample_factor > 16`` host-engine limitation).
+    ``adaptive`` (default False)
+        Runtime window quota in ``regs[R_WQUOTA]`` hill-climbed at epoch
+        boundaries (``core.device_simulate.ClimbSpec``).  False compiles
+        the identical program as before the feature existed.  Interaction:
+        adaptive sweeps are sequential-mode only (quota histories diverge,
+        defeating vmap's shared geometry).
+    ``shards`` (default 1)
+        Frequency-sketch shards (pow2).  ``S > 1`` partitions the sketch
+        address space: a key's probes are confined to its owning shard's
+        ``width/S``-counter (and ``dk_bits/S``-bit) slice, the sketch
+        buffers carry [merged global || shard delta] halves, per-access
+        writes land in the owning shard's slice of the delta half, reads
+        compose global + delta, and the §3.3 reset moves from the
+        per-access path to the epoch-boundary
+        :func:`repro.kernels.sketch_merge.merge_halve` fold.  ``shards=1``
+        compiles the identical program (all shard logic is under static
+        Python branches).  Interaction: sharded runs are epoch-chunked
+        (``merge_every``) and sequential-sweep only, like ``adaptive``.
+    """
     width: int                    # sketch counters per row (pow2, mult of 8)
     rows: int = 4
     dk_bits: int = 0              # doorkeeper bits (pow2 >= 32); 0 = off
@@ -153,12 +222,15 @@ class StepSpec:
     assoc: int | None = None      # ways per set; None = flat exact tables
     counter_bits: int = 4         # sketch counter width: 4 (cap 15) or 8 (255)
     adaptive: bool = False        # runtime window quota (regs[R_WQUOTA])
+    shards: int = 1               # sketch shards (pow2); >1 = delta/global
 
     def __post_init__(self):
         assert _pow2(self.width) and self.width % 8 == 0
         assert self.counter_bits in (4, 8)
         assert self.dk_bits == 0 or (_pow2(self.dk_bits) and self.dk_bits >= 32)
         assert self.window_slots >= 1 and self.main_slots >= 1
+        # validates shards pow2 + per-shard word alignment
+        shard_geometry(self.width, self.dk_bits, self.shards)
         if self.assoc is not None:
             assert self.assoc >= 1
             assert self.window_slots % self.assoc == 0 and \
@@ -183,6 +255,22 @@ class StepSpec:
     @property
     def dk_words(self) -> int:
         return max(1, self.dk_bits // 32)
+
+    @property
+    def width_shard(self) -> int:     # counters per row owned by one shard
+        return self.width // self.shards
+
+    @property
+    def dk_bits_shard(self) -> int:   # doorkeeper bits owned by one shard
+        return self.dk_bits // self.shards
+
+    @property
+    def counter_words(self) -> int:   # words in the global counter image
+        return self.rows * self.words_per_row
+
+    @property
+    def sketch_halves(self) -> int:   # sharded: [global || delta] halves
+        return 2 if self.shards > 1 else 1
 
     @property
     def dkp(self) -> int:         # stored doorkeeper probes per table entry
@@ -223,6 +311,11 @@ def make_step_params(window_cap: int, main_cap: int, prot_cap: int,
 
 
 def _state_keys(spec: StepSpec) -> tuple[str, ...]:
+    # sharded mode keeps the same keys: "counters"/"doorkeeper" simply carry
+    # TWO halves — [merged global || shard-partitioned delta].  One buffer
+    # (not separate delta arrays) so the per-access DUS write chain has the
+    # exact shape XLA CPU already updates in place on the unsharded path;
+    # separate delta buffers measured 4 full copies per access at big widths
     if spec.assoc is None:
         return ("counters", "doorkeeper", "wlo", "whi", "wmeta", "widx",
                 "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
@@ -255,9 +348,15 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
     regs = jnp.zeros((NREGS,), jnp.int32)
     if spec.adaptive:
         regs = regs.at[R_WQUOTA].set(wcap)
+    # sharded (sketch_halves == 2): the arrays carry [global || delta]
+    # halves in ONE buffer — shard s owns words [s*words/S, (s+1)*words/S)
+    # of every row slice in the delta half, and per-access writes land only
+    # there (probe indices are shard-confined)
     common = {
-        "counters": jnp.zeros((spec.rows * spec.words_per_row,), jnp.int32),
-        "doorkeeper": jnp.zeros((spec.dk_words,), jnp.int32),
+        "counters": jnp.zeros((spec.sketch_halves * spec.counter_words,),
+                              jnp.int32),
+        "doorkeeper": jnp.zeros((spec.sketch_halves * spec.dk_words,),
+                                jnp.int32),
         "regs": regs,
     }
     if spec.adaptive:
@@ -315,14 +414,32 @@ def precompute_probes(spec: StepSpec, lo: jnp.ndarray, hi: jnp.ndarray):
     (power-of-two-choices placement): the resident copy lives in exactly one,
     lookups probe both, and the insert victim is the weakest of both sets'
     2*ways records.
+
+    ``spec.shards > 1`` confines every probe to the key's owning shard:
+    probe = shard * width_shard + (hash & (width_shard - 1)), and likewise
+    for doorkeeper bits — so the per-access sketch update touches only the
+    owning shard's slice of the delta arrays.  At shards=1 the expressions
+    reduce to the unsharded ones bit-for-bit.
     """
-    idx = jnp.stack([probe_index(lo, hi, r, spec.width)
-                     for r in range(spec.rows)], axis=-1)
-    if spec.dk_bits:
-        dkb = jnp.stack([dk_probe_index(lo, hi, p, spec.dk_bits)
-                         for p in range(spec.dk_probes)], axis=-1)
+    if spec.shards > 1:
+        ks = shard_index(lo, hi, spec.shards)
+        idx = jnp.stack([ks * spec.width_shard
+                         + probe_index(lo, hi, r, spec.width_shard)
+                         for r in range(spec.rows)], axis=-1)
+        if spec.dk_bits:
+            dkb = jnp.stack([ks * spec.dk_bits_shard
+                             + dk_probe_index(lo, hi, p, spec.dk_bits_shard)
+                             for p in range(spec.dk_probes)], axis=-1)
+        else:
+            dkb = jnp.zeros(lo.shape + (1,), jnp.int32)
     else:
-        dkb = jnp.zeros(lo.shape + (1,), jnp.int32)
+        idx = jnp.stack([probe_index(lo, hi, r, spec.width)
+                         for r in range(spec.rows)], axis=-1)
+        if spec.dk_bits:
+            dkb = jnp.stack([dk_probe_index(lo, hi, p, spec.dk_bits)
+                             for p in range(spec.dk_probes)], axis=-1)
+        else:
+            dkb = jnp.zeros(lo.shape + (1,), jnp.int32)
     if spec.assoc is not None:
         wset = set_index(lo, hi, spec.window_sets, WSET_SALT)
         mset = jnp.stack([set_index(lo, hi, spec.main_sets, MSET_SALT),
@@ -340,6 +457,21 @@ def precompute_probes(spec: StepSpec, lo: jnp.ndarray, hi: jnp.ndarray):
 
 def _row_offsets(spec: StepSpec) -> jnp.ndarray:
     return (jnp.arange(spec.rows, dtype=jnp.int32) * spec.words_per_row)
+
+
+def _ds_gather(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """(k,) positions -> (k,) values as UNROLLED 1-element dynamic slices.
+
+    The sharded path reads the doubled [global || delta] sketch buffers;
+    above ~256KB of operand XLA CPU's parallel task partitioner starts
+    multithreading the k-element gather fusions (outer_dimension_partitions
+    on a 3..8-element output), putting a thread-pool dispatch on every
+    access — measured 3-5x at width 2^17.  Scalar dynamic slices are
+    costed by the slice, not the operand, and a 1-element output cannot be
+    partitioned.
+    """
+    return jnp.concatenate([jax.lax.dynamic_slice(arr, (idx[i],), (1,))
+                            for i in range(idx.shape[0])])
 
 
 def _counter_vals(spec: StepSpec, words: jnp.ndarray,
@@ -366,6 +498,17 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
     (the set-associative path needs this for capacity-independent access
     cost); the flat path keeps the fused masked ``where`` which measured
     faster at its small sizes.
+
+    Sharded mode (``spec.shards > 1``): ``counters``/``dk`` carry
+    [global || delta] halves in one buffer.  Only the delta half is
+    written (probe indices confine the writes to the owning shard's
+    slice); a counter's effective value is global+delta and a doorkeeper
+    bit is global|delta, so between merges the combined structure evolves
+    exactly like the unsharded sketch.  The §3.3 reset is SKIPPED here —
+    it moves to the epoch-boundary ``merge_halve`` fold.  (One buffer, not
+    separate delta arrays: the single-buffer DUS chain is the shape XLA
+    CPU's copy elision already handles in place on the unsharded path —
+    separate delta buffers measured 4 full-array copies per access.)
     """
     # single-word writes are dynamic_update_slice, NOT scatter (.at[].set):
     # XLA CPU updates a loop-carried buffer in place for DUS but lowers the
@@ -381,8 +524,26 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
         np_ = spec.dk_probes
         w_idx = kdkb >> 5
         bpos = kdkb & 31
-        words = dk[w_idx]                              # (dkp,) one gather
-        pre = (words >> bpos) & 1
+        if spec.shards > 1:
+            dw_idx = spec.dk_words + w_idx             # delta half (written)
+            # barrier: materialize BOTH gathers before any write fusion —
+            # a dynamic-slice read fused INTO a later DUS write re-reads
+            # the original buffer mid-chain, keeping it live and costing
+            # two full copies per access
+            words, gwords = jax.lax.optimization_barrier(
+                (_ds_gather(dk, dw_idx), _ds_gather(dk, w_idx)))
+            eff_words = words | gwords                 # | global half (read)
+            # the global-half gather feeds only the LATER counter writes
+            # (via the gate), not the dk writes below — anchor it into the
+            # first dk write or the scheduler may run it after the write
+            # and copy the whole doorkeeper every access (see _sched_dep)
+            zdk = _sched_dep(eff_words)
+        else:
+            dw_idx = w_idx
+            words = dk[w_idx]                          # (dkp,) one gather
+            eff_words = words
+            zdk = None
+        pre = (eff_words >> bpos) & 1
         present = jnp.int32(1)
         for i in range(np_):
             eff = pre[i]
@@ -392,28 +553,53 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
         bitm = jnp.int32(1) << bpos
         for i in range(np_):
             merged = words[i] | bitm[i]
+            if i == 0 and zdk is not None:
+                merged = merged | zdk                  # always 0; see above
             for j in range(np_):
                 if j != i:                             # same-word probes merge
                     merged = merged | jnp.where(w_idx[j] == w_idx[i],
                                                 bitm[j], 0)
-            dk = jax.lax.dynamic_update_slice(dk, merged[None], (w_idx[i],))
+            dk = jax.lax.dynamic_update_slice(dk, merged[None], (dw_idx[i],))
         gate = present.astype(jnp.bool_)   # repeat visitor -> main table
     else:
         gate = jnp.bool_(True)
 
     flat = _row_offsets(spec) + _word_of(spec, kidx)   # (rows,) word positions
-    words = counters[flat]
-    vals = _counter_vals(spec, words, kidx)
-    m = vals.min()
+    if spec.shards > 1:
+        dflat = spec.counter_words + flat              # delta half (written)
+        # barrier: same read-materialization discipline as the doorkeeper
+        words, gw = jax.lax.optimization_barrier(
+            (_ds_gather(counters, dflat), _ds_gather(counters, flat)))
+        # conservative update judges the COMBINED count; the bump lands in
+        # the delta field.  bump only fires while the combined min < cap,
+        # so every field keeps global+delta <= cap (no overflow, and the
+        # merge fold never actually saturates in-engine).  The min runs as
+        # an unrolled minimum chain, not a reduce: XLA CPU's parallel task
+        # partitioner multithreads small reduce fusions whose fused gathers
+        # touch big operands, costing a thread dispatch per access
+        vals = (_counter_vals(spec, words, kidx)
+                + _counter_vals(spec, gw, kidx))
+        m = vals[0]
+        for r in range(1, spec.rows):
+            m = jnp.minimum(m, vals[r])
+    else:
+        dflat = flat
+        words = counters[flat]
+        vals = _counter_vals(spec, words, kidx)
+        m = vals.min()
     bump = gate & (m < params[P_CAP])
     sub = kidx & (spec.counters_per_word - 1)
     new = jnp.where(bump & (vals == m),
                     words + (jnp.int32(1) << (sub * spec.counter_bits)), words)
     for r in range(spec.rows):         # rows write disjoint word segments
         counters = jax.lax.dynamic_update_slice(
-            counters, new[r][None], (flat[r],))
+            counters, new[r][None], (dflat[r],))
 
     size = size + 1
+    if spec.shards > 1:
+        # sharded: aging is deferred to the epoch-boundary merge_halve fold
+        # (kernels/sketch_merge.py) — the per-access path never resets
+        return counters, dk, size
     do_reset = (params[P_SAMPLE] > 0) & (size >= params[P_SAMPLE])
     if use_cond:
         # dynamic-trip-count word loops: 0 iterations on the (vast majority
@@ -451,13 +637,43 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     """TinyLFU estimates for two resident entries from their stored probes.
 
     idx2: (2, rows); dkb2: (2, dkp) -> (2,) int32 estimates.
+
+    Sharded mode: an estimate composes the global half + the delta half of
+    the split buffers (each entry's stored probes already point into its
+    owning shard's slice).  The row min / doorkeeper all run as unrolled
+    chains instead of reduces — XLA CPU's parallel task partitioner
+    multithreads reduce fusions whose fused gathers touch the doubled
+    buffers, costing a thread-pool dispatch per access (measured 5x).
     """
-    words = counters[_row_offsets(spec)[None, :] + _word_of(spec, idx2)]
-    est = _counter_vals(spec, words, idx2).min(axis=-1)
+    flat2 = _row_offsets(spec)[None, :] + _word_of(spec, idx2)
+    if spec.shards > 1:
+        ff = flat2.reshape(-1)
+        k = ff.shape[0]
+        gw = _ds_gather(counters, ff).reshape(2, k // 2)
+        dw = _ds_gather(counters, spec.counter_words + ff).reshape(2, k // 2)
+        vals = (_counter_vals(spec, gw, idx2)
+                + _counter_vals(spec, dw, idx2))
+        est = vals[:, 0]
+        for r in range(1, spec.rows):
+            est = jnp.minimum(est, vals[:, r])
+    else:
+        vals = _counter_vals(spec, counters[flat2], idx2)
+        est = vals.min(axis=-1)
     if spec.dk_bits:
-        w2 = dk[dkb2 >> 5]
-        ok = (((w2 >> (dkb2 & 31)) & 1) == 1).all(axis=-1)
-        est = est + ok.astype(jnp.int32)
+        if spec.shards > 1:
+            bb = (dkb2 >> 5).reshape(-1)
+            kb = bb.shape[0]
+            w2 = (_ds_gather(dk, bb)
+                  | _ds_gather(dk, spec.dk_words + bb)).reshape(2, kb // 2)
+            bits = (w2 >> (dkb2 & 31)) & 1
+            ok = bits[:, 0]
+            for p in range(1, bits.shape[1]):
+                ok = ok & bits[:, p]
+            est = est + ok
+        else:
+            w2 = dk[dkb2 >> 5]
+            ok = (((w2 >> (dkb2 & 31)) & 1) == 1).all(axis=-1)
+            est = est + ok.astype(jnp.int32)
     return est
 
 
@@ -476,6 +692,8 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     t = regs[R_T]
 
     # -- 1. admission.record(key): sketch add + automatic §3.3 reset ---------
+    # (sharded: the add writes the delta half only; aging waits for the
+    # epoch-boundary merge_halve fold)
     counters, dk, size = _sketch_add(spec, params, state["counters"],
                                      state["doorkeeper"], regs[R_SIZE],
                                      kidx, kdkb)
@@ -644,6 +862,8 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     t = regs[R_T]
 
     # -- 1. admission.record(key): sketch add + amortized in-place reset -----
+    # (sharded: the add writes the delta half only; no per-access reset —
+    # aging happens in the epoch-boundary merge_halve fold)
     counters, dk, size = _sketch_add(spec, params, state["counters"],
                                      state["doorkeeper"], regs[R_SIZE],
                                      kidx, kdkb, use_cond=True)

@@ -209,6 +209,27 @@ def test_host_twin_hit_sequence_bitwise(tname, trace):
     assert res.extra["final_quota"] == host.quota
 
 
+def test_sharded_adaptive_host_twin_bitwise():
+    """ISSUE 4: the sharded sketch composes with the adaptive climber — the
+    merge_halve fold rides the climb epochs (merge first, then climb +
+    rebalance) on both engines, and with collision-free sketches the hit
+    sequence AND quota trajectory agree exactly."""
+    C = 60
+    trace = phase_shift_trace(6000, n_hot=300, working_set=80, advance=0.05,
+                              seed=2)
+    kw = dict(window_frac=0.05, sample_factor=8)
+    res, _, hits = simulate_trace(
+        trace, C, adaptive=True, shards=4, doorkeeper=False,
+        counters_per_item=550.0, climb=ClimbSpec(epoch_len=500),
+        return_state=True, **kw)
+    host = AdaptiveWTinyLFU(C, doorkeeper=False, counters_per_item=550.0,
+                            epoch_len=500, shards=4, **kw)
+    host_hits = np.array([host.access(int(k)) for k in trace], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+    assert res.extra["trajectory"]["quota"] == host.quota_trajectory
+    assert res.extra["shards"] == 4
+
+
 def test_prot_budget_shrink_parity_bitwise():
     """A window grow shrinks the runtime protected budget below the
     resident protected count; the lazy per-main-hit drain must demote

@@ -198,6 +198,79 @@ def test_sweep_reports_amortized_wall():
         assert r.wall_s == pytest.approx(r.extra["grid_wall_s"] / 2)
 
 
+# ===========================================================================
+# sharded sketches (shards=) — ISSUE 4
+# ===========================================================================
+
+
+class TestGoldenSharded:
+    """ISSUE 4 acceptance: sharded sketches at shards ∈ {2, 4} stay within
+    ±0.01 of the exact host W-TinyLFU on both golden traces.  The sharded
+    engine differs from exact in three bounded ways: the 32-bit hash
+    family, the shard-partitioned probe space (same expected collision
+    rate), and §3.3 aging deferred to merge boundaries (at most one reset
+    period late by the merge_epoch auto-sizing).  Observed deltas are
+    ~0.005 — the band would catch any behavioral regression."""
+    C, WARMUP = 200, 10_000
+
+    def test_zipf_sharded_within_tolerance(self):
+        tr = golden_zipf_trace()
+        h = run_trace(WTinyLFU(self.C, sample_factor=8), tr,
+                      warmup=self.WARMUP)
+        for s in (2, 4):
+            d = simulate_trace(tr, self.C, warmup=self.WARMUP, shards=s)
+            assert abs(d.hit_ratio - h.hit_ratio) < ASSOC_TOL, (s, d.hit_ratio)
+            assert d.extra["shards"] == s
+            # auto cadence: never defer aging past one reset period
+            assert d.extra["merge_every"] == min(4096, 8 * self.C)
+
+    def test_scanhot_sharded_assoc_within_tolerance(self):
+        """Production shape: sharded sketch + set-associative tables."""
+        tr = scan_then_hotspot_trace()
+        h = run_trace(WTinyLFU(400, sample_factor=8), tr, warmup=5_000)
+        for s in (2, 4):
+            d = simulate_trace(tr, 400, warmup=5_000, shards=s, assoc=8)
+            assert abs(d.hit_ratio - h.hit_ratio) < ASSOC_TOL, (s, d.hit_ratio)
+
+
+def test_sharded_pallas_backend_matches_jit():
+    """Merge-epoch-chunked fused kernel == jit scan, partial tail included
+    (3000 accesses is not a multiple of the 1600-access auto cadence)."""
+    tr = golden_zipf_trace()[:3000]
+    j = simulate_trace(tr, 200, backend="jit", shards=4)
+    p = simulate_trace(tr, 200, backend="pallas", shards=4)
+    assert p.hits == j.hits and p.accesses == j.accesses
+
+
+def test_sharded_sweep_matches_single_runs():
+    """Sequential sharded sweeps run the same epoch-chunked program per grid
+    point: each row is bit-identical to its standalone simulate_trace."""
+    tr = golden_zipf_trace()[:8000]
+    rows = simulate_sweep(tr, [100], window_fracs=[0.01, 0.2], warmup=1000,
+                          mode="sequential", shards=2)
+    for row in rows:
+        single = simulate_trace(tr, 100, window_frac=row.extra["window_frac"],
+                                warmup=1000, shards=2)
+        assert row.hits == single.hits
+        assert row.extra["shards"] == 2
+    # vmapped grids cannot host the epoch-chunked merge: clear error, and
+    # mode="auto" resolves to sequential on every backend
+    with pytest.raises(ValueError):
+        simulate_sweep(tr, [100], shards=2, mode="vmap")
+    auto = simulate_sweep(tr[:4000], [100], shards=2, mode="auto")
+    assert auto[0].extra["backend"] == "jit+sequential"
+
+
+def test_sharded_degenerate_short_traces():
+    """Traces shorter than one merge epoch (or empty) run without a merge
+    and without crashing."""
+    short = golden_zipf_trace()[:500]
+    r = simulate_trace(short, 50, shards=2)
+    assert 0.0 <= r.hit_ratio <= 1.0
+    empty = simulate_trace(np.array([], np.int64), 50, shards=2)
+    assert empty.hits == 0
+
+
 def test_counter8_matches_host_large_sample_factor():
     """Satellite: counter_bits=8 lifts the 4-bit cap (15) so sample_factor >
     16 no longer needs the host engine; device cap matches the host's."""

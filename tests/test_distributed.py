@@ -117,3 +117,22 @@ class TestShardingRules:
         cost = analyze_hlo(compiled.as_text())
         expected = 7 * 2 * 8 * 64 * 64            # dots only
         assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_sketch_shard_placement_round_robin():
+    """Sketch-shard placement map (ISSUE 4): every shard maps to a device,
+    round-robin when shards exceed the device count, and the 1-D shard mesh
+    is bounded by the available devices."""
+    import jax
+    from repro.distributed.mesh import shard_placement, make_shard_mesh
+
+    devs = jax.devices()
+    pl = shard_placement(8)
+    assert len(pl) == 8
+    assert all(d in devs for d in pl)
+    # round-robin: shard s and shard s+len(devs) share a device
+    for s in range(8 - len(devs)):
+        assert pl[s] == pl[s + len(devs)]
+    mesh = make_shard_mesh(4)
+    assert mesh.axis_names == ("shard",)
+    assert mesh.devices.size == min(4, len(devs))

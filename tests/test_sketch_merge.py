@@ -1,0 +1,231 @@
+"""Sketch mergeability invariants (ISSUE 4): the properties that make
+per-shard counting sound.
+
+CM-sketch counts are linearly mergeable — counts add — and the paper's §3.3
+aging (divide-by-2) commutes with the merge in exact arithmetic.  These
+tests pin what the implementation guarantees at both counter widths:
+
+* ``merge_words`` is a per-field SATURATING add: fields pin at the counter
+  maximum and no overflow may borrow into the neighbouring packed counter
+  ("no borrow leak across shard folds");
+* merge-then-halve equals halve-then-merge exactly whenever the integer
+  arithmetic allows it (even fields, no saturation), and never diverges by
+  more than the floor-division ulp otherwise;
+* ``merge_halve`` applies the deferred §3.3 reset bit-for-bit like the
+  per-access reset would have (saturated counters halve with no borrow
+  leak; an epoch owing several resets catches up with k halvings);
+* merged shard estimates equal a single unsharded sketch's estimates under
+  collision-free hashing — on the host twin and differentially on the
+  device engine (the sharded step with aging disabled reproduces the
+  unsharded step's hit sequence bit-for-bit).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.sketch import (FrequencySketch, ShardedFrequencySketch,
+                               SketchConfig)
+from repro.kernels.sketch_common import halve_words, merge_words, keys_to_lanes
+from repro.kernels.sketch_step import (StepSpec, make_step_params,
+                                       init_step_state, step_ref, R_SIZE)
+from repro.kernels.sketch_merge import merge_halve
+
+
+def _pack(fields: np.ndarray, bits: int) -> np.ndarray:
+    """(W, fields_per_word) int fields -> (W,) packed int32 words."""
+    n = 32 // bits
+    w = np.zeros(fields.shape[0], np.int64)
+    for i in range(n):
+        w |= fields[:, i].astype(np.int64) << (i * bits)
+    return w.astype(np.uint32).view(np.int32)
+
+
+def _unpack(words: np.ndarray, bits: int) -> np.ndarray:
+    n = 32 // bits
+    u = np.asarray(words).view(np.uint32).astype(np.int64)
+    return np.stack([(u >> (i * bits)) & ((1 << bits) - 1)
+                     for i in range(n)], axis=-1)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_merge_words_is_per_field_saturating_add(bits):
+    fmax = (1 << bits) - 1
+    n = 32 // bits
+    rng = np.random.default_rng(bits)
+    fa = rng.integers(0, fmax + 1, size=(256, n))
+    fb = rng.integers(0, fmax + 1, size=(256, n))
+    got = np.asarray(merge_words(jnp.asarray(_pack(fa, bits)),
+                                 jnp.asarray(_pack(fb, bits)), bits))
+    np.testing.assert_array_equal(got, _pack(np.minimum(fa + fb, fmax), bits))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_merge_words_saturation_no_borrow_leak(bits):
+    """Adversarial layout: saturating fields alternate with zero fields — a
+    carry-leaking merge would deposit a 1 in the zero neighbours."""
+    fmax = (1 << bits) - 1
+    n = 32 // bits
+    fields = np.zeros((8, n), np.int64)
+    fields[:, ::2] = fmax                       # 15,0,15,0,... / 255,0,...
+    w = jnp.asarray(_pack(fields, bits))
+    got = _unpack(np.asarray(merge_words(w, w, bits)), bits)
+    assert (got[:, ::2] == fmax).all()          # saturated, not wrapped
+    assert (got[:, 1::2] == 0).all()            # neighbours untouched
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_merge_commutes_with_halve(bits):
+    """§3.3 aging commutes with the merge: exactly on even unsaturated
+    fields, and within the floor-division ulp (<= 1) in general."""
+    fmax = (1 << bits) - 1
+    n = 32 // bits
+    rng = np.random.default_rng(7 + bits)
+    # even fields whose sums stay below saturation: exact commutation
+    fa = 2 * rng.integers(0, fmax // 4, size=(128, n))
+    fb = 2 * rng.integers(0, fmax // 4, size=(128, n))
+    a, b = jnp.asarray(_pack(fa, bits)), jnp.asarray(_pack(fb, bits))
+    mh = halve_words(merge_words(a, b, bits), bits)
+    hm = merge_words(halve_words(a, bits), halve_words(b, bits), bits)
+    np.testing.assert_array_equal(np.asarray(mh), np.asarray(hm))
+    # arbitrary parity, sums below saturation: the two orders differ by at
+    # most the floor-division ulp.  (Saturation breaks commutation — which
+    # is exactly why the engine always merges FIRST and halves second.)
+    fa = rng.integers(0, fmax // 2 + 1, size=(128, n))
+    fb = rng.integers(0, fmax // 2, size=(128, n))
+    a, b = jnp.asarray(_pack(fa, bits)), jnp.asarray(_pack(fb, bits))
+    mh = _unpack(np.asarray(halve_words(merge_words(a, b, bits), bits)), bits)
+    hm = _unpack(np.asarray(merge_words(halve_words(a, bits),
+                                        halve_words(b, bits), bits)), bits)
+    assert np.abs(mh - hm).max() <= 1
+
+
+@pytest.mark.parametrize("bits,cap", [(4, 15), (8, 255)])
+def test_merge_halve_saturated_reset_no_borrow_leak(bits, cap):
+    """In-engine §3.3 catch-up: a key hammered to a saturated counter, then
+    a merge_halve with the sample size crossed — the global must read
+    cap//2 exactly (15->7 / 255->127), with no borrow leaking from the
+    halving of the packed neighbours, and the deltas must clear."""
+    spec = StepSpec(width=64, rows=4, dk_bits=0, window_slots=1,
+                    main_slots=8, counter_bits=bits, shards=2)
+    params = make_step_params(1, 8, 6, 0, cap, 0, counter_bits=bits)
+    keys = np.full(cap + 50, 42, np.uint64)     # saturate key 42
+    lo, hi = keys_to_lanes(keys)
+    st, _ = step_ref(spec, params, init_step_state(spec),
+                     lo.astype(jnp.int32), hi.astype(jnp.int32))
+    from repro.kernels.sketch_step import _estimate_pair, precompute_probes
+    kidx, kdkb, _, _ = precompute_probes(spec, lo[:1].astype(jnp.int32),
+                                         hi[:1].astype(jnp.int32))
+    pair = (jnp.stack([kidx[0], kidx[0]]), jnp.stack([kdkb[0], kdkb[0]]))
+    est = _estimate_pair(spec, st["counters"], st["doorkeeper"], *pair)
+    assert int(est[0]) == cap                    # saturated before the fold
+    # sample crossed once: W = half the adds -> exactly one halving
+    params_w = make_step_params(1, 8, 6, (cap + 50) // 2 + 1, cap, 0,
+                                counter_bits=bits)
+    st2 = merge_halve(spec, params_w, st)
+    est2 = _estimate_pair(spec, st2["counters"], st2["doorkeeper"], *pair)
+    assert int(est2[0]) == cap // 2              # halved exactly
+    # the delta halves are cleared by the fold
+    H = spec.counter_words
+    assert int(np.abs(np.asarray(st2["counters"])[H:]).sum()) == 0
+    assert int(np.abs(np.asarray(st2["doorkeeper"])[spec.dk_words:]).sum()) == 0
+
+
+def test_merge_halve_multi_reset_catchup():
+    """An epoch that crossed the sample period k times owes k halvings:
+    4000 adds at W=1000 leave size 500 (4000 -> 2000 -> 1000 -> 500) and
+    fields shifted by 3."""
+    spec = StepSpec(width=64, rows=4, dk_bits=0, window_slots=1,
+                    main_slots=8, shards=2)
+    params = make_step_params(1, 8, 6, 1000, 15, 0)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 200, size=4000, dtype=np.uint64)
+    lo, hi = keys_to_lanes(keys)
+    st, _ = step_ref(spec, params, init_step_state(spec),
+                     lo.astype(jnp.int32), hi.astype(jnp.int32))
+    assert int(st["regs"][R_SIZE]) == 4000       # sharded: no inline reset
+    H = spec.counter_words
+    pre = _unpack(np.asarray(merge_words(st["counters"][:H],
+                                         st["counters"][H:], 4)), 4)
+    st2 = merge_halve(spec, params, st)
+    assert int(st2["regs"][R_SIZE]) == 500
+    np.testing.assert_array_equal(
+        _unpack(np.asarray(st2["counters"])[:H], 4), pre >> 3)
+
+
+def test_merged_shard_estimates_equal_single_sketch():
+    """Host twin: under collision-free hashing (huge width) the sharded
+    sketch's post-merge estimates equal a single unsharded sketch's — both
+    are the true capped counts, shard partitioning invisible."""
+    # sample_size far beyond the adds: aging never fires on either side
+    # (FrequencySketch resets when size >= sample_size, so 0 would reset
+    # every add — the never-reset convention is sample-huge on the host)
+    cfg = SketchConfig(sample_size=10**9, counters=4 * (1 << 16), rows=4,
+                       cap=15, doorkeeper_bits=1 << 14)
+    single = FrequencySketch(cfg)
+    sharded = ShardedFrequencySketch(cfg, shards=4)
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 400, size=6000)
+    for k in keys:
+        single.add(int(k))
+        sharded.add(int(k))
+    sharded.merge_halve()
+    for k in np.unique(keys):
+        assert sharded.estimate(int(k)) == single.estimate(int(k))
+    assert sharded.estimate(10**9) == single.estimate(10**9) == 0
+
+
+def test_sharded_sketch_merge_halve_matches_frequency_sketch_reset():
+    """When every per-access reset point lands on a merge boundary (W=1000,
+    cadence 500: the first reset fires at add 1000 and the post-reset size
+    W/2 re-crosses W exactly one cadence later) the sharded host sketch
+    ages exactly like FrequencySketch.reset(): same reset count and same
+    estimates after the same adds (collision-free so the hash family
+    cannot matter)."""
+    W, E = 1000, 500
+    cfg = SketchConfig(sample_size=W, counters=4 * (1 << 16), rows=4,
+                       cap=15, doorkeeper_bits=1 << 14)
+    single = FrequencySketch(cfg)
+    sharded = ShardedFrequencySketch(cfg, shards=2)
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 120, size=2 * W)
+    for i, k in enumerate(keys):
+        single.add(int(k))                       # auto-resets at W
+        sharded.add(int(k))
+        if (i + 1) % E == 0:
+            sharded.merge_halve()                # deferred reset, same point
+    assert sharded.resets == single.resets == 3
+    assert sharded.size == single.size == W // 2
+    for k in np.unique(keys):
+        assert sharded.estimate(int(k)) == single.estimate(int(k))
+
+
+@pytest.mark.parametrize("assoc", [None, 8])
+def test_sharded_no_aging_matches_unsharded_bitwise(assoc):
+    """Device differential: with aging disabled (sample=0) the merge fold
+    is invisible to estimates (global+delta is invariant) and under
+    collision-free hashing the sharded step reproduces the unsharded hit
+    sequence bit-for-bit — shard partitioning changes nothing but the
+    collision structure."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 300, size=4000, dtype=np.uint64)
+    lo, hi = keys_to_lanes(keys)
+    lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
+    kw = dict(width=1 << 16, rows=4, dk_bits=1 << 14)
+    if assoc is None:
+        base = dict(window_slots=2, main_slots=40)
+    else:
+        base = dict(window_slots=8, main_slots=64, assoc=8)
+    params = make_step_params(2, 40, 32, 0, 7, 0)
+    u = StepSpec(**kw, **base)
+    s = StepSpec(**kw, **base, shards=4)
+    _, hu = step_ref(u, params, init_step_state(u, 2, 40), lo, hi)
+    st, hs = step_ref(s, params, init_step_state(s, 2, 40), lo, hi)
+    np.testing.assert_array_equal(np.asarray(hu), np.asarray(hs))
+    # ... and a mid-stream merge fold is a hit-sequence no-op
+    st, hA = step_ref(s, params, init_step_state(s, 2, 40), lo[:2000],
+                      hi[:2000])
+    st = merge_halve(s, params, st)
+    _, hB = step_ref(s, params, st, lo[2000:], hi[2000:])
+    np.testing.assert_array_equal(
+        np.asarray(hu),
+        np.concatenate([np.asarray(hA), np.asarray(hB)]))

@@ -346,6 +346,86 @@ def test_counter8_reset_halving_straddles_chunks():
     assert int(np.asarray(s_post["regs"])[R_SIZE]) == 450
 
 
+# ===========================================================================
+# sharded sketches (StepSpec.shards)
+# ===========================================================================
+
+def test_shards1_is_the_identical_program():
+    """shards=1 (the default) must compile the identical program: the state
+    tree carries single-half sketch buffers and the lowered module is
+    byte-identical to a spec that never mentions shards — the same
+    exactness-ladder pin as assoc=None / adaptive=False."""
+    import jax
+    base = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                    main_slots=64, assoc=8)
+    pinned = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                      main_slots=64, assoc=8, shards=1)
+    assert set(init_step_state(pinned).keys()) == set(init_step_state(base))
+    assert init_step_state(pinned)["counters"].shape == \
+        init_step_state(base)["counters"].shape
+    params = make_step_params(4, 48, 38, 700, 7, 0)
+    lo, hi = lanes(np.arange(16, dtype=np.uint64))
+    low = [jax.jit(step_ref, static_argnums=0)
+           .lower(s, params, init_step_state(s), lo, hi).as_text()
+           for s in (base, pinned)]
+    assert low[0] == low[1]
+    # ... and the sharded program is genuinely different: the sketch
+    # buffers double into [global || delta] halves
+    sharded = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                      main_slots=64, assoc=8, shards=2)
+    st = init_step_state(sharded)
+    assert st["counters"].shape[0] == 2 * init_step_state(base)["counters"].shape[0]
+    assert st["doorkeeper"].shape[0] == 2 * init_step_state(base)["doorkeeper"].shape[0]
+
+
+SHARDED_SPECS = [
+    # flat, doorkeeper on, 4 shards
+    (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2, main_slots=60,
+              shards=4),
+     make_step_params(2, 60, 48, 500, 7, 0)),
+    # set-associative, 2 shards
+    (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8, main_slots=64,
+              assoc=8, shards=2),
+     make_step_params(4, 48, 38, 700, 7, 0)),
+    # 8-bit counters, no doorkeeper, 8 shards
+    (StepSpec(width=512, rows=2, dk_bits=0, window_slots=4, main_slots=32,
+              assoc=4, counter_bits=8, shards=8),
+     make_step_params(3, 30, 24, 400, 100, 0, counter_bits=8)),
+]
+
+
+@pytest.mark.parametrize("spec,params", SHARDED_SPECS)
+def test_sharded_pallas_matches_ref_bitwise(spec, params):
+    """Sharded fused kernel == scan twin: the delta arrays ride the same
+    donated-state path, across chunk splits and padded tails."""
+    rng = np.random.default_rng(spec.shards)
+    keys = rng.integers(0, 400, size=1300, dtype=np.uint64)
+    s_ref, h_ref = run_ref(spec, params, keys)
+    s_pal, h_pal = run_pallas_chunks(spec, params, keys, 500)
+    assert_state_equal(s_ref, s_pal)
+    np.testing.assert_array_equal(np.asarray(h_ref), h_pal)
+
+
+@pytest.mark.parametrize("assoc", [None, 8])
+def test_sharded_host_twin_hit_sequence_bitwise(assoc):
+    """Collision-free sketches on both sides: the sharded device engine —
+    driven through epoch-chunked merges like the production runner —
+    reproduces the host ``WTinyLFU(shards=...)`` per-access hit sequence
+    exactly, deferred §3.3 reset timing included."""
+    from repro.traces import zipf_trace
+    from repro.core.device_simulate import simulate_trace
+    C, E = 60, 700
+    tr = zipf_trace(5000, n_items=300, alpha=0.9, seed=5)
+    _, _, hits = simulate_trace(
+        tr, C, shards=4, merge_every=E, assoc=assoc, doorkeeper=False,
+        counters_per_item=550.0, return_state=True)
+    host = WTinyLFU(C, window_frac=0.01, sample_factor=8, doorkeeper=False,
+                    counters_per_item=550.0, assoc=assoc, shards=4,
+                    merge_every=E)
+    host_hits = np.array([host.access(int(k)) for k in tr], np.int32)
+    np.testing.assert_array_equal(np.asarray(hits), host_hits)
+
+
 def test_counter8_counts_past_nibble_cap():
     """8-bit packed counters keep counting where 4-bit nibbles saturate:
     a key hammered 100x under cap=100 reaches estimate 100."""

@@ -1,0 +1,125 @@
+"""Docs reference checker (ISSUE 4): fail CI when a doc references a file
+or symbol that no longer exists.
+
+Scans ``docs/*.md`` and ``README.md`` for backtick-quoted references and
+verifies two kinds:
+
+* **paths** — tokens that look like file paths (contain a known extension,
+  e.g. ``kernels/sketch_step.py`` or ``BENCH_device.json``).  Resolved
+  against the repo root, ``src/``, and ``src/repro/`` (docs conventionally
+  drop the ``src/repro/`` prefix for in-package files).  A trailing
+  ``:<line>`` or anchor is stripped.
+* **dotted symbols** — tokens starting with ``repro.`` (e.g.
+  ``repro.core.device_simulate.simulate_trace``).  The longest module
+  prefix must resolve to a ``.py`` file (or package ``__init__.py``) under
+  ``src/``, and any remaining attribute must appear in that file as a
+  ``def``/``class`` definition or assignment target (grep-based — simple
+  on purpose; it catches renames and deletions, not signature drift).
+
+Anything else inside backticks (shell commands, inline code, field names)
+is ignored.  Keep doc references in one of the two checkable forms so this
+gate keeps meaning something.
+
+Usage: ``python tools/check_docs.py [--root REPO_ROOT]`` — exits 1 with a
+list of stale references on failure.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_PATHLIKE = re.compile(
+    r"^[A-Za-z0-9_.{/\\-]*\.(py|md|json|yml|yaml|toml|txt)(:\d+)?(#[\w-]*)?$")
+_DOTTED = re.compile(r"^repro(\.[A-Za-z_]\w*)+$")
+
+
+def _iter_refs(text: str):
+    for m in _BACKTICK.finditer(text):
+        tok = m.group(1).strip()
+        # strip decorations that commonly wrap a reference
+        tok = tok.strip("*,;:()[]")
+        if not tok or " " in tok or "*" in tok or "{" in tok:
+            continue                      # commands, globs, templates
+        yield tok
+
+
+def _check_path(tok: str, root: str) -> bool:
+    tok = tok.split("#")[0]
+    tok = re.sub(r":\d+$", "", tok)
+    for base in ("", "src", os.path.join("src", "repro")):
+        if os.path.exists(os.path.join(root, base, tok)):
+            return True
+    return False
+
+
+def _check_symbol(tok: str, root: str) -> bool:
+    parts = tok.split(".")
+    # longest module prefix that is a real file / package
+    for cut in range(len(parts), 0, -1):
+        mod = os.path.join(root, "src", *parts[:cut])
+        for cand in (mod + ".py", os.path.join(mod, "__init__.py")):
+            if os.path.exists(cand):
+                rest = parts[cut:]
+                if not rest:
+                    return True
+                # only the first attribute is greppable (module-level name)
+                name = re.escape(rest[0])
+                pat = re.compile(
+                    rf"^\s*(def\s+{name}\b|class\s+{name}\b|{name}\s*[:=])",
+                    re.M)
+                with open(cand) as f:
+                    return bool(pat.search(f.read()))
+    return False
+
+
+def check_file(path: str, root: str) -> list[str]:
+    with open(path) as f:
+        text = f.read()
+    rel = os.path.relpath(path, root)
+    stale = []
+    for tok in _iter_refs(text):
+        if _DOTTED.match(tok):
+            if not _check_symbol(tok, root):
+                stale.append(f"{rel}: stale symbol reference `{tok}`")
+        elif _PATHLIKE.match(tok):
+            if not _check_path(tok, root):
+                stale.append(f"{rel}: stale path reference `{tok}`")
+    return stale
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=_REPO_ROOT)
+    args = ap.parse_args(argv)
+
+    targets = sorted(glob.glob(os.path.join(args.root, "docs", "*.md")))
+    readme = os.path.join(args.root, "README.md")
+    if os.path.exists(readme):
+        targets.append(readme)
+    if not targets:
+        print("check_docs: nothing to check (no docs/*.md or README.md)")
+        return 1
+
+    failures = []
+    n_refs = 0
+    for path in targets:
+        with open(path) as f:
+            n_refs += sum(1 for t in _iter_refs(f.read())
+                          if _DOTTED.match(t) or _PATHLIKE.match(t))
+        failures.extend(check_file(path, args.root))
+    for msg in failures:
+        print("FAIL:", msg, flush=True)
+    if not failures:
+        print(f"docs OK: {n_refs} path/symbol references across "
+              f"{len(targets)} files all resolve", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
