@@ -77,6 +77,69 @@ def _machine_fingerprint() -> str:
     return f"{model} x{os.cpu_count()}"
 
 
+_MESH_BENCH_SCRIPT = r"""
+import json, os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+import jax
+from repro.core.device_simulate import simulate_trace
+from repro.distributed.mesh import make_shard_mesh
+from repro.traces import zipf_trace
+
+n = %(n)d
+tr = zipf_trace(n, n_items=n - 5_000, alpha=0.9, seed=7)
+kw = dict(assoc=8, shards=4)
+mesh = make_shard_mesh(4)
+
+
+def best_of(fn, reps=2):
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+simulate_trace(tr, 8192, **kw)                                # compile
+sh_wall, _ = best_of(lambda: simulate_trace(tr, 8192, **kw))
+_, _, hs = simulate_trace(tr, 8192, return_state=True, **kw)
+simulate_trace(tr, 8192, mesh=mesh, **kw)                     # compile
+m_wall, _ = best_of(lambda: simulate_trace(tr, 8192, mesh=mesh, **kw))
+_, _, hm = simulate_trace(tr, 8192, mesh=mesh, return_state=True, **kw)
+print(json.dumps({
+    "mesh_devices": len(jax.devices()),
+    "accesses": n,
+    "sharded_1dev_acc_per_s": round(n / sh_wall),
+    "mesh_acc_per_s": round(n / m_wall),
+    "mesh_overhead_vs_sharded": round(m_wall / sh_wall, 2),
+    "parity_ok": bool((np.asarray(hs) == np.asarray(hm)).all()),
+}))
+"""
+
+
+def _mesh_subprocess_bench(quick: bool) -> dict | None:
+    """Run the 2-forced-host-device mesh measurement; None on failure (the
+    snapshot then simply omits the mesh_* fields, which check_bench
+    tolerates — pre-mesh snapshots look the same)."""
+    import subprocess
+    import sys
+    env = dict(os.environ, PYTHONPATH=os.path.join(_REPO_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)          # the script pins its own device count
+    try:
+        r = subprocess.run(
+            [sys.executable, "-c",
+             _MESH_BENCH_SCRIPT % {"n": 15_000 if quick else 30_000}],
+            capture_output=True, text=True, env=env, timeout=1800)
+    except subprocess.TimeoutExpired:
+        print("  mesh bench: subprocess timed out — skipping", flush=True)
+        return None
+    if r.returncode != 0:
+        print("  mesh bench: subprocess failed — skipping\n"
+              + r.stderr[-500:], flush=True)
+        return None
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def _best_of(fn, n=3):
     best, out = float("inf"), None
     for _ in range(n):
@@ -196,10 +259,16 @@ def run(quick: bool = False):
                  "device": backend})
 
     # -- 4. capacity scaling: flat O(C) argmin vs set-associative O(ways) ----
+    # C=262144 pushes the UNSHARDED sketch width to 2^19 counters/row —
+    # past the XLA-CPU gather-partitioning cliff at >= 2^18 that the
+    # size-gated unrolled scalar-slice gathers fix (ISSUE 5; ROADMAP
+    # "XLA-CPU cost-model cliffs"), so the 512 -> 262144 flatness ratio is
+    # the regression tripwire for that fix (healthy ~0.75 — the unrolled
+    # reads' constant cost — vs 0.28 measured with the cliff present)
     golden = (tr if length == 60_000
               else zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7))
     flat_caps = [512, 8192]
-    assoc_caps = [512, 8192, 65536]
+    assoc_caps = [512, 8192, 65536, 262144]
     acc = {}
     for label, caps, kw in [("scan(flat)", flat_caps, {}),
                             ("set-assoc(w=8)", assoc_caps, {"assoc": 8})]:
@@ -221,12 +290,15 @@ def run(quick: bool = False):
                   f"{len(golden) / wall:>12,.0f} acc/s", flush=True)
     speedup = acc[("set-assoc(w=8)", 8192)] / acc[("scan(flat)", 8192)]
     flatness = acc[("set-assoc(w=8)", 65536)] / acc[("set-assoc(w=8)", 512)]
+    flatness_xl = (acc[("set-assoc(w=8)", 262144)]
+                   / acc[("set-assoc(w=8)", 512)])
     print(f"  set-assoc vs flat at C=8192: {speedup:.1f}x; "
-          f"flatness 512->65536 (1.0 = capacity-free): {flatness:.2f}",
-          flush=True)
+          f"flatness 512->65536 (1.0 = capacity-free): {flatness:.2f}; "
+          f"512->262144 (width 2^19): {flatness_xl:.2f}", flush=True)
     rows.append({"trace": "golden-zipf", "engine": "speedup:set-assoc@8192",
                  "speedup": round(speedup, 2),
-                 "flatness_512_to_65536": round(flatness, 2)})
+                 "flatness_512_to_65536": round(flatness, 2),
+                 "flatness_512_to_262144": round(flatness_xl, 2)})
 
     # -- 5. adaptive window engine: per-access masks + epoch rebalance cost --
     from repro.core.device_simulate import ClimbSpec
@@ -272,6 +344,20 @@ def run(quick: bool = False):
                  "unsharded_over_sharded": round(sh_overhead, 2),
                  "flatness_512_to_65536": round(sh_flatness, 2)})
 
+    # -- 7. multi-device mesh run (ISSUE 5): 2 forced host devices -----------
+    # forcing the host device count only works before jax initializes, so
+    # the mesh measurement runs in a subprocess: single-device sharded and
+    # mesh-sharded on the same trace in the same environment, reporting
+    # throughput + bitwise parity of the hit sequences.
+    mesh = _mesh_subprocess_bench(quick)
+    if mesh:
+        rows.append({"trace": "golden-zipf", "engine": "mesh(s=4,d=2)",
+                     **mesh, "device": backend})
+        print(f"  mesh(s=4,d=2)    C=8192 {mesh['mesh_acc_per_s']:>12,.0f} "
+              f"acc/s ({mesh['mesh_overhead_vs_sharded']:.1f}x sharded cost, "
+              f"parity {'OK' if mesh['parity_ok'] else 'BROKEN'})",
+              flush=True)
+
     # -- perf snapshot at the repo root: the numbers CI tracks across PRs ----
     snapshot = {
         "device": backend,
@@ -284,11 +370,19 @@ def run(quick: bool = False):
         "assoc_flatness_512_to_65536": round(flatness, 2),
         "adaptive_acc_per_s_8192": round(ad_acc),
         "adaptive_overhead_vs_static": round(overhead, 2),
+        "assoc_acc_per_s_xl_C": round(acc[("set-assoc(w=8)", 262144)]),
+        "assoc_flatness_512_to_262144": round(flatness_xl, 2),
         "sharded_acc_per_s_8192": round(sh_acc[8192]),
         "sharded_overhead_vs_unsharded": round(sh_overhead, 2),
         "sharded_flatness_512_to_65536": round(sh_flatness, 2),
         "batched_dec_per_s": round(n_dec / dev_dec),
     }
+    if mesh:
+        snapshot["mesh_devices"] = mesh["mesh_devices"]
+        snapshot["mesh_acc_per_s_8192"] = round(mesh["mesh_acc_per_s"])
+        snapshot["mesh_overhead_vs_sharded"] = round(
+            mesh["mesh_overhead_vs_sharded"], 2)
+        snapshot["mesh_parity_ok"] = mesh["parity_ok"]
     with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
         json.dump(snapshot, f, indent=1)
 

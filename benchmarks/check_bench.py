@@ -20,6 +20,14 @@ broken:
   merge fold leaking into the per-access path, or delta copies — blows the
   overhead up; machine noise leaves it near ~1-2x).  Missing fields are
   tolerated (pre-ISSUE-4 snapshots).
+* ``assoc_flatness_512_to_262144 < threshold`` — the UNSHARDED path at a
+  2^19-counter sketch width, past the XLA-CPU gather-partitioning cliff
+  the ISSUE 5 unrolled-gather fix removed; same corroboration as the
+  65536 arm.  Missing in pre-ISSUE-5 snapshots.
+* ``mesh_parity_ok`` false — the forced-2-host-device mesh run no longer
+  reproduces the single-device sharded hit sequence bit-for-bit.  This is
+  an exactness invariant, so it fails unconditionally (no noise model);
+  the field is absent when the bench could not run the subprocess.
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -64,6 +72,24 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
             print(f"WARNING: {msg} — not corroborated by the speedup "
                   "indicator; attributing to machine noise", flush=True)
 
+    # unsharded path at width 2^19 (ISSUE 5: the gather-partitioning cliff
+    # fix) — same corroboration logic as the 65536 arm; missing in
+    # pre-ISSUE-5 snapshots.  Own threshold: past _big_operand the sketch
+    # reads run the unrolled-scalar-slice discipline, whose constant cost
+    # puts the healthy ratio near ~0.75 (measured 0.76 vs 0.28 with the
+    # cliff present), so the 0.9 default would warn on every healthy run.
+    flat_xl = fresh.get("assoc_flatness_512_to_262144")
+    xl_threshold = min(threshold, 0.6)
+    if flat_xl is not None and flat_xl < xl_threshold:
+        msg = (f"flatness 512->262144 {flat_xl} < {xl_threshold} "
+               f"(speedup vs flat engine: {speedup}x)")
+        if strict or speedup < 5:
+            failures.append(
+                "unsharded path hit the large-width gather cliff: " + msg)
+        else:
+            print(f"WARNING: {msg} — not corroborated by the speedup "
+                  "indicator; attributing to machine noise", flush=True)
+
     sh_flat = fresh.get("sharded_flatness_512_to_65536")
     sh_over = fresh.get("sharded_overhead_vs_unsharded", 0.0)
     if sh_flat is not None and sh_flat < threshold:
@@ -74,6 +100,16 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
         else:
             print(f"WARNING: {msg} — not corroborated by the overhead "
                   "indicator; attributing to machine noise", flush=True)
+
+    # multi-device mesh run (ISSUE 5): bit-identity to the single-device
+    # sharded run is a hard invariant, not a throughput number — no noise
+    # model applies.  Missing in pre-mesh snapshots (or when the bench
+    # could not spawn the forced-2-device subprocess).
+    if fresh.get("mesh_parity_ok") is False:
+        failures.append(
+            "mesh run diverged from the single-device sharded run "
+            "(mesh_parity_ok false) — the multi-device exactness ladder "
+            "is broken")
 
     if baseline:
         same_machine = (baseline.get("machine") and
@@ -126,10 +162,12 @@ def main(argv=None) -> int:
     else:
         print("bench gate OK:", json.dumps(
             {k: fresh.get(k) for k in ("assoc_flatness_512_to_65536",
+                                       "assoc_flatness_512_to_262144",
                                        "assoc_speedup_vs_flat_8192",
                                        "adaptive_overhead_vs_static",
                                        "sharded_flatness_512_to_65536",
-                                       "sharded_overhead_vs_unsharded")}),
+                                       "sharded_overhead_vs_unsharded",
+                                       "mesh_parity_ok")}),
             flush=True)
     return 1 if failures else 0
 

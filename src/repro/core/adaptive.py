@@ -86,3 +86,29 @@ def climb_update(climb: list[int], ehits: int, prev: int, dirn: int,
     elif nq >= wmax:
         dirn = -1
     return nq, ehits, dirn, delta, ewma, trend, k + 1
+
+
+def window_set_ways(quota: int, n_sets: int, load) -> list[int]:
+    """Usable window ways per set for a runtime ``quota`` (ISSUE 5).
+
+    ``quota >= n_sets`` keeps the exact uniform rule the static padding
+    bakes in (``core.hashing.set_ways``: base everywhere, the first
+    ``quota % n_sets`` sets one extra way) — a quota pinned at the
+    configured split therefore still reproduces the static path
+    bit-for-bit.  Below ``n_sets`` the uniform rule hands the few usable
+    ways to a FIXED prefix of sets regardless of traffic, starving hot
+    sets under skewed key->set load; instead the quota's ways go to the
+    ``quota`` most-loaded sets of the last epoch (``load`` = per-set
+    window-access counts, ties broken by set index — a stable argsort on
+    descending load, matching the device's jnp twin in
+    ``kernels.sketch_step._rebalance_set`` bit-for-bit).
+    """
+    quota, n_sets = int(quota), int(n_sets)
+    if quota >= n_sets:
+        base, rem = divmod(quota, n_sets)
+        return [base + (1 if s < rem else 0) for s in range(n_sets)]
+    order = sorted(range(n_sets), key=lambda s: (-int(load[s]), s))
+    ways = [0] * n_sets
+    for s in order[:quota]:
+        ways[s] = 1
+    return ways

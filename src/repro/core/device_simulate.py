@@ -43,9 +43,10 @@ import jax.numpy as jnp
 
 from repro.kernels.sketch_step import (StepSpec, make_step_params,
                                        init_step_state, step_ref, step_pallas,
-                                       rebalance, R_HITS, R_WQUOTA, R_EHITS)
+                                       rebalance, _state_keys,
+                                       R_HITS, R_WQUOTA, R_EHITS)
 from repro.kernels.sketch_common import keys_to_lanes
-from repro.kernels.sketch_merge import merge_halve
+from repro.kernels.sketch_merge import merge_halve, merge_halve_mesh
 from . import adaptive
 from .hashing import assoc_geometry, slots_for
 from .sketch import _pow2ceil
@@ -70,6 +71,21 @@ class DeviceWTinyLFU:
     no host sync (kernels/sketch_merge.py).  ``merge_every=0`` auto-sizes to
     ``min(4096, sample_size)`` so the deferred §3.3 aging stays within one
     reset period of the per-access schedule.
+
+    ``mesh=`` (a 1-D ``("shard",)`` mesh from
+    ``distributed.mesh.make_shard_mesh``) executes the sharded run over
+    MULTIPLE devices: the delta halves become shard-major arrays
+    partitioned along the mesh axis (block placement — device ``d`` owns
+    shards ``[d*S/D, (d+1)*S/D)``, matching
+    ``distributed.mesh.shard_placement``), the global halves and cache
+    tables are replicated, per-access delta writes are device-local, the
+    admission estimate is the one per-access exchange (a 2-int ``psum``),
+    and the epoch ``merge_halve`` fold is the one cross-device STATE
+    exchange (all-gather of deltas -> saturating merge -> deferred
+    halvings -> refreshed global replica on every device).  Bit-identical
+    to the single-device sharded run — same hit sequence, same final
+    sketch state (tests/test_distributed.py pins this over forced host
+    devices).  Requires ``shards % n_devices == 0`` and ``backend="jit"``.
     """
     capacity: int
     window_frac: float = 0.01
@@ -85,6 +101,7 @@ class DeviceWTinyLFU:
     window_max_frac: float = 0.5  # adaptive: table headroom for the climb
     shards: int = 1               # sketch shards; >1 = delta/global split
     merge_every: int = 0          # sharded merge cadence; 0 = auto
+    mesh: object = None           # ("shard",) mesh; None = single device
 
     @property
     def window_cap(self) -> int:
@@ -177,7 +194,24 @@ class DeviceWTinyLFU:
             main_slots=main_slots or self._table_slots(msize),
             assoc=(ways or self.ways) if self.assoc is not None else None,
             counter_bits=self.counter_bits, adaptive=self.adaptive,
-            shards=self.shards)
+            shards=self.shards, mesh_devices=self.mesh_devices)
+
+    @property
+    def mesh_devices(self) -> int:
+        """Devices of the ``("shard",)`` mesh (0 = single-device layout)."""
+        if self.mesh is None:
+            return 0
+        if tuple(self.mesh.axis_names) != ("shard",):
+            raise ValueError(f"mesh axes {self.mesh.axis_names} != "
+                             "('shard',) — build it with "
+                             "distributed.mesh.make_shard_mesh")
+        n = int(self.mesh.devices.size)
+        if self.shards <= 1:
+            raise ValueError("mesh execution requires shards > 1")
+        if self.shards % n:
+            raise ValueError(f"shards {self.shards} must be a multiple of "
+                             f"the mesh size {n} (block placement)")
+        return n
 
     def params(self, warmup: int = 0) -> jnp.ndarray:
         return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
@@ -245,6 +279,106 @@ def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
 # ---------------------------------------------------------------------------
 
 _sharded_cache: dict = {}
+_mesh_cache: dict = {}
+
+
+def _mesh_state_specs(spec: StepSpec):
+    """shard_map in/out partition specs for the mesh-layout state pytree:
+    the shard-major delta arrays ride the ("shard",) axis, everything else
+    (global sketch halves, cache tables, registers) is replicated."""
+    from jax.sharding import PartitionSpec as P
+    return {k: (P("shard") if k in ("dcounters", "ddoorkeeper") else P())
+            for k in _state_keys(spec)}
+
+
+def _from_mesh_state(spec: StepSpec, state: dict) -> dict:
+    """Mesh-layout state -> the single-device [global || delta] layout, so
+    callers (and the parity tests) compare final sketch words directly."""
+    out = {k: v for k, v in state.items()
+           if k not in ("dcounters", "ddoorkeeper")}
+    delta = state["dcounters"].transpose(1, 0, 2).reshape(spec.counter_words)
+    out["counters"] = jnp.concatenate([state["counters"], delta])
+    ddk = (state["ddoorkeeper"].reshape(spec.dk_words) if spec.dk_bits
+           else jnp.zeros_like(state["doorkeeper"]))
+    out["doorkeeper"] = jnp.concatenate([state["doorkeeper"], ddk])
+    return out
+
+
+def _mesh_runner(spec: StepSpec, mesh, adaptive: bool):
+    """One compiled multi-device program: a shard_map over the ("shard",)
+    mesh whose body is the epoch-chunked scan — fused step over each
+    (nvalid-masked) epoch, then the merge_halve_mesh all-gather fold (and,
+    when adaptive, climb + rebalance) gated off on the padded partial tail
+    epoch, exactly like the pallas backend's masked tail (whose final
+    state/hits are pinned bit-identical to the jit backend's
+    tail-outside-the-scan form).  Every device runs the identical
+    replicated computation over the replicated cache tables; only its
+    local delta blocks differ."""
+    key = (spec, mesh, adaptive)
+    if key not in _mesh_cache:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        sspec = _mesh_state_specs(spec)
+
+        if not adaptive:
+            def fn(params, state, los, his, nvalid):
+                def body(st, x):
+                    clo, chi, nv = x
+                    st, hits = step_ref(spec, params, st, clo, chi, nv)
+                    merged = merge_halve_mesh(spec, params, st)
+                    full = nv >= jnp.int32(clo.shape[0])
+                    st = {**st, **{k: jnp.where(full, merged[k], st[k])
+                                   for k in ("counters", "doorkeeper",
+                                             "dcounters", "ddoorkeeper",
+                                             "regs")}}
+                    return st, hits
+                return jax.lax.scan(body, state, (los, his, nvalid))
+
+            _mesh_cache[key] = jax.jit(shard_map(
+                fn, mesh=mesh, in_specs=(P(), sspec, P(), P(), P()),
+                out_specs=(sspec, P()), check_rep=False))
+        else:
+            def fn(params, state, los, his, nvalid, climb):
+                def body(carry, x):
+                    clo, chi, nv = x
+                    st = carry[0]
+                    st, hits = step_ref(spec, params, st, clo, chi, nv)
+                    ehits = st["regs"][R_EHITS]
+                    quota = st["regs"][R_WQUOTA]
+                    # merge rides the climb epochs: fold first, then climb
+                    # + rebalance — same order as the single-device runner
+                    stm = merge_halve_mesh(spec, params, st)
+                    climbed = _climb_step(params, spec, (stm,) + carry[1:],
+                                          ehits, climb)
+                    full = nv >= jnp.int32(clo.shape[0])
+                    carry = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(full, a, b), climbed,
+                        (st,) + carry[1:])
+                    return carry, (hits, ehits, quota)
+
+                init = (state, jnp.int32(-1), jnp.int32(1), climb[0],
+                        jnp.int32(-1), jnp.int32(0), jnp.int32(0))
+                (st, *_), (hits, ehits, quotas) = jax.lax.scan(
+                    body, init, (los, his, nvalid))
+                return st, hits, ehits, quotas
+
+            _mesh_cache[key] = jax.jit(shard_map(
+                fn, mesh=mesh, in_specs=(P(), sspec, P(), P(), P(), P()),
+                out_specs=(sspec, P(), P(), P()), check_rep=False))
+    return _mesh_cache[key]
+
+
+def _pad_epochs(lo, hi, n: int, E: int):
+    """Pad the trace to whole epochs; returns (los, his, nvalid) chunked."""
+    pad = (-n) % E
+    if pad:
+        z = jnp.zeros((pad,), lo.dtype)
+        lo = jnp.concatenate([lo, z])
+        hi = jnp.concatenate([hi, z])
+    ne = lo.shape[0] // E
+    nvalid = jnp.minimum(
+        jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
+    return lo.reshape(ne, E), hi.reshape(ne, E), nvalid
 
 
 def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
@@ -280,7 +414,7 @@ def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
 
 
 def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
-                 backend: str, interpret: bool):
+                 backend: str, interpret: bool, mesh=None):
     """Merge-epoch-chunked sharded simulation; returns (state, hits).
 
     The jit backend scans whole epochs (each followed by the merge_halve
@@ -289,20 +423,23 @@ def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
     epoch whose merge is skipped.  Both emit identical per-access hit flags
     and final state — and both match the host twin, which merges after
     every ``merge_every``-th access and never on a partial tail.
+
+    ``mesh`` selects the multi-device shard_map runner (delta blocks
+    device-local, merge fold = the epoch all-gather); it uses the masked
+    final epoch like the pallas backend, so its hits and final state are
+    bit-identical to both single-device backends.
     """
     n = lo.shape[0]
     E = int(merge_every)
+    if mesh is not None:
+        los, his, nvalid = _pad_epochs(lo, hi, n, E)
+        state, hits = _mesh_runner(spec, mesh, False)(
+            params, state, los, his, nvalid)
+        return state, hits.reshape(-1)[:n]
     if backend == "pallas":
-        pad = (-n) % E
-        if pad:
-            z = jnp.zeros((pad,), lo.dtype)
-            lo = jnp.concatenate([lo, z])
-            hi = jnp.concatenate([hi, z])
-        ne = lo.shape[0] // E
-        nvalid = jnp.minimum(
-            jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
+        los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits = _sharded_runner(spec, backend, interpret)(
-            params, state, lo.reshape(ne, E), hi.reshape(ne, E), nvalid)
+            params, state, los, his, nvalid)
         return state, hits.reshape(-1)[:n]
     ne = n // E
     nfull = ne * E
@@ -499,31 +636,32 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
 
 
 def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
-                  lo, hi, climb: ClimbSpec, backend: str, interpret: bool):
+                  lo, hi, climb: ClimbSpec, backend: str, interpret: bool,
+                  mesh=None):
     """Epoch-chunked adaptive simulation; returns (state, hits, trajectory).
 
     The jit backend scans whole epochs and runs the (< epoch_len) tail as
     one extra dispatch without a final climb; the pallas backend folds the
     tail into a masked final epoch whose climb is skipped.  Both emit
     identical per-access hit flags, final quota, and trajectory (full
-    epochs only).
+    epochs only).  ``mesh`` selects the multi-device shard_map runner
+    (masked final epoch, like pallas) — the merge_halve_mesh all-gather
+    rides the climb epochs.
     """
     n = lo.shape[0]
     E = int(climb.epoch_len)
     cvec = jnp.asarray(climb.resolve(cfg))
+    if mesh is not None:
+        los, his, nvalid = _pad_epochs(lo, hi, n, E)
+        state, hits, ehits, quotas = _mesh_runner(spec, mesh, True)(
+            params, state, los, his, nvalid, cvec)
+        nfull = n // E
+        traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
+        return state, hits.reshape(-1)[:n], traj
     if backend == "pallas":
-        pad = (-n) % E
-        if pad:
-            z = jnp.zeros((pad,), lo.dtype)
-            lo = jnp.concatenate([lo, z])
-            hi = jnp.concatenate([hi, z])
-        ne = lo.shape[0] // E
-        nvalid = jnp.minimum(
-            jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
+        los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits, ehits, quotas = _adaptive_runner(
-            spec, backend, interpret)(params, state,
-                                      lo.reshape(ne, E), hi.reshape(ne, E),
-                                      nvalid, cvec)
+            spec, backend, interpret)(params, state, los, his, nvalid, cvec)
         nfull = n // E                   # drop the partial tail's row so the
         traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
         return state, hits.reshape(-1)[:n], traj  # trajectory matches jit
@@ -586,13 +724,17 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
         interpret = jax.default_backend() != "tpu"
     climb = climb or ClimbSpec()
 
+    if cfg.mesh is not None and backend != "jit":
+        raise ValueError("mesh execution runs the jit scan under shard_map: "
+                         "use backend='jit'")
     t0 = time.perf_counter()
     trajectory = None
     if adaptive:
         if backend not in ("jit", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         state, hits, (ehits, quotas) = _run_adaptive(
-            cfg, spec, params, state, lo, hi, climb, backend, interpret)
+            cfg, spec, params, state, lo, hi, climb, backend, interpret,
+            mesh=cfg.mesh)
         if ehits is not None:
             trajectory = {"epoch_len": climb.epoch_len,
                           "epoch_hits": np.asarray(ehits).tolist(),
@@ -601,7 +743,8 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
         if backend not in ("jit", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         state, hits = _run_sharded(spec, params, state, lo, hi,
-                                   cfg.merge_epoch, backend, interpret)
+                                   cfg.merge_epoch, backend, interpret,
+                                   mesh=cfg.mesh)
     elif backend == "jit":
         state, hits = _run_jit(spec, params, state, lo, hi)
     elif backend == "pallas":
@@ -609,12 +752,18 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
                                   interpret)
     else:
         raise ValueError(f"unknown backend {backend!r}")
+    if cfg.mesh is not None:
+        # hand back the single-device [global || delta] layout so callers
+        # compare final sketch state across placements directly
+        state = _from_mesh_state(spec, state)
     regs = np.asarray(state["regs"])
     wall = time.perf_counter() - t0
 
     counted = len(trace) - warmup
     extra = {"backend": backend, "window_frac": window_frac,
              "assoc": cfg.assoc, "device": jax.default_backend()}
+    if cfg.mesh is not None:
+        extra["mesh_devices"] = cfg.mesh_devices
     if cfg.shards > 1:
         extra["shards"] = cfg.shards
         # adaptive+sharded: the fold rides the climb epochs, not merge_epoch
@@ -753,11 +902,13 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
             st = init_step_state(spec, c.window_cap, c.main_cap)
             if adaptive:
                 st, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
-                                         st, l, h, climb, "jit", False)
+                                         st, l, h, climb, "jit", False,
+                                         mesh=c.mesh)
                 outs.append(st["regs"])
             elif c.shards > 1:
                 st, _ = _run_sharded(spec, c.params(warmup=warmup), st,
-                                     l, h, c.merge_epoch, "jit", False)
+                                     l, h, c.merge_epoch, "jit", False,
+                                     mesh=c.mesh)
                 outs.append(st["regs"])
             else:
                 outs.append(_jit_step(spec, c.params(warmup=warmup), st,

@@ -30,27 +30,54 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
 # sketch-shard placement (StepSpec.shards — see kernels/sketch_merge.py)
 # ---------------------------------------------------------------------------
 
+def _shard_mesh_size(n_shards: int, n_devices: int) -> int:
+    """Devices a ``("shard",)`` mesh uses for ``n_shards`` shards: the
+    largest DIVISOR of ``n_shards`` that fits the available devices, so the
+    shard-major delta arrays partition evenly along the mesh axis (shards
+    are a power of two, so this is the largest power of two <= both)."""
+    assert n_shards >= 1 and n_devices >= 1
+    n = min(n_shards, n_devices)
+    while n_shards % n:
+        n -= 1
+    return n
+
+
 def shard_placement(n_shards: int, devices=None) -> list:
     """Shard -> device placement map for the sharded frequency sketch.
 
     Shard ``s`` owns the ``width/n_shards`` counter slice ``s`` of the
     sketch buffers' delta halves plus its slice of the replicated global
     estimate; per-access writes are shard-local, and the once-per-epoch
-    ``merge_halve`` fold is the only cross-device exchange (an all-gather
-    that refreshes every device's global replica).  Round-robin so shard
-    counts above the device count still map (multiple shards per device —
-    the single-host simulation is the n_devices=1 special case).
+    ``merge_halve`` fold is the only cross-device state exchange (an
+    all-gather that refreshes every device's global replica).
+
+    BLOCK placement: with ``D`` mesh devices (``_shard_mesh_size`` — the
+    largest divisor of ``n_shards`` that fits), device ``d`` owns the
+    ``n_shards/D`` consecutive shards ``[d*S/D, (d+1)*S/D)``.  This is
+    exactly how ``jax.sharding.NamedSharding``/``shard_map`` split axis 0
+    of the shard-major delta arrays over :func:`make_shard_mesh`, so this
+    map, the mesh runner (``core.device_simulate`` ``DeviceWTinyLFU``
+    ``(mesh=)``), and a sharding-visualizer all describe the same
+    placement.  (It used to be round-robin, which contradicted the mesh's
+    contiguous split whenever ``n_shards > n_devices`` — ISSUE 5.)
+    The single-host simulation is the n_devices=1 special case.
     """
     assert n_shards >= 1
     devices = list(jax.devices()) if devices is None else list(devices)
     assert devices, "shard placement needs at least one device"
-    return [devices[s % len(devices)] for s in range(n_shards)]
+    n = _shard_mesh_size(n_shards, len(devices))
+    per = n_shards // n
+    return [devices[s // per] for s in range(n_shards)]
 
 
 def make_shard_mesh(n_shards: int, devices=None):
-    """1-D ``("shard",)`` mesh over ``min(n_shards, available)`` devices —
-    the placement the future multi-device sharded-sketch run will shard the
-    delta arrays over (``jax.sharding.NamedSharding`` along axis 0)."""
+    """1-D ``("shard",)`` mesh for the multi-device sharded-sketch run
+    (``core.device_simulate.simulate_trace(..., shards=S, mesh=...)``): the
+    delta arrays are partitioned along axis 0 (``NamedSharding``/
+    ``shard_map``), so the mesh takes the largest divisor of ``n_shards``
+    that the available devices can host — device ``d`` then owns the
+    contiguous shard block ``[d*S/D, (d+1)*S/D)``, consistent with
+    :func:`shard_placement`."""
     devices = list(jax.devices()) if devices is None else list(devices)
-    n = min(max(1, n_shards), len(devices))
+    n = _shard_mesh_size(max(1, n_shards), len(devices))
     return jax.make_mesh((n,), ("shard",), devices=devices[:n])

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from .sketch_common import halve_words, merge_words
-from .sketch_step import StepSpec, P_SAMPLE, R_SIZE
+from .sketch_step import StepSpec, MESH_AXIS, P_SAMPLE, R_SIZE
 
 
 def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
@@ -78,3 +78,42 @@ def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
             "counters": jnp.concatenate([g, jnp.zeros_like(g)]),
             "doorkeeper": jnp.concatenate([dk, jnp.zeros_like(dk)]),
             "regs": regs}
+
+
+def merge_halve_mesh(spec: StepSpec, params: jnp.ndarray,
+                     state: dict) -> dict:
+    """Multi-device :func:`merge_halve`: the once-per-epoch all-gather.
+
+    Runs inside the shard_map body of the mesh runner
+    (``core.device_simulate._run_sharded`` with a mesh): each device
+    all-gathers the other devices' shard-major delta blocks
+    (``dcounters``/``ddoorkeeper``, the ONLY sharded state), reorders them
+    into the single-device delta-half layout, and then applies the exact
+    single-device fold — saturating merge into the replicated global
+    halves, deferred halvings, doorkeeper OR/clear — so every device ends
+    the epoch holding an identical refreshed global replica and zeroed
+    local deltas.  O(width) exchanged once per epoch; the per-access path
+    stays free of state exchange.
+    """
+    assert spec.mesh_devices, "merge_halve_mesh requires StepSpec.mesh_devices"
+    cd = jax.lax.all_gather(state["dcounters"], MESH_AXIS,
+                            axis=0, tiled=True)          # (S, rows, wps)
+    dd = jax.lax.all_gather(state["ddoorkeeper"], MESH_AXIS,
+                            axis=0, tiled=True)          # (S, dkw_shard)
+    # shard-major -> the delta-half flat layout (row-major with per-shard
+    # slices inside each row: r*words_per_row + s*wps_shard + w), then the
+    # fold IS the single-device merge_halve on the reassembled [global ||
+    # delta] buffers — exact by construction, one copy of the §3.3 aging
+    delta = cd.transpose(1, 0, 2).reshape(spec.counter_words)
+    ddk = (dd.reshape(spec.dk_words) if spec.dk_bits
+           else jnp.zeros_like(state["doorkeeper"]))
+    folded = merge_halve(spec, params, {
+        **state,
+        "counters": jnp.concatenate([state["counters"], delta]),
+        "doorkeeper": jnp.concatenate([state["doorkeeper"], ddk]),
+    })
+    H, HD = spec.counter_words, spec.dk_words
+    return {**folded, "counters": folded["counters"][:H],
+            "doorkeeper": folded["doorkeeper"][:HD],
+            "dcounters": jnp.zeros_like(state["dcounters"]),
+            "ddoorkeeper": jnp.zeros_like(state["ddoorkeeper"])}

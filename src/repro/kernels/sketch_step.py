@@ -150,6 +150,11 @@ NREGS = 8
 WT_LO, WT_HI, WT_META, WT_MSET, WT_MSET2 = 0, 1, 2, 3, 4
 MT_LO, MT_HI, MT_META = 0, 1, 2
 
+# mesh axis name of the multi-device sharded-sketch run (StepSpec.mesh_devices
+# > 0 — the step then executes inside a shard_map over
+# distributed.mesh.make_shard_mesh and the delta halves are device-local)
+MESH_AXIS = "shard"
+
 
 def _pow2(x: int) -> bool:
     return x > 0 and (x & (x - 1)) == 0
@@ -212,6 +217,20 @@ class StepSpec:
         compiles the identical program (all shard logic is under static
         Python branches).  Interaction: sharded runs are epoch-chunked
         (``merge_every``) and sequential-sweep only, like ``adaptive``.
+    ``mesh_devices`` (default 0)
+        Multi-device sharded execution (``core.device_simulate``
+        ``DeviceWTinyLFU(mesh=)``): the step runs inside a ``shard_map``
+        over a 1-D ``("shard",)`` mesh of that many devices
+        (``distributed.mesh.make_shard_mesh``), the sketch delta halves
+        live as shard-major arrays partitioned along the mesh axis
+        (``dcounters``/``ddoorkeeper`` state keys — per-access writes are
+        device-local), the global halves stay replicated, and the one
+        per-access cross-device exchange is the tiny admission-estimate
+        ``psum`` (the shard owning a candidate/victim contributes its
+        delta-composed estimate).  Requires ``shards % mesh_devices == 0``
+        (block placement: device ``d`` owns shards
+        ``[d*S/D, (d+1)*S/D)``, matching
+        ``distributed.mesh.shard_placement``).  0 = single-device layout.
     """
     width: int                    # sketch counters per row (pow2, mult of 8)
     rows: int = 4
@@ -223,8 +242,14 @@ class StepSpec:
     counter_bits: int = 4         # sketch counter width: 4 (cap 15) or 8 (255)
     adaptive: bool = False        # runtime window quota (regs[R_WQUOTA])
     shards: int = 1               # sketch shards (pow2); >1 = delta/global
+    mesh_devices: int = 0         # shard_map devices; 0 = single-device
 
     def __post_init__(self):
+        if self.mesh_devices:
+            assert self.shards > 1, "mesh execution requires shards > 1"
+            assert self.shards % self.mesh_devices == 0, (
+                f"shards {self.shards} must be a multiple of mesh_devices "
+                f"{self.mesh_devices} (block placement)")
         assert _pow2(self.width) and self.width % 8 == 0
         assert self.counter_bits in (4, 8)
         assert self.dk_bits == 0 or (_pow2(self.dk_bits) and self.dk_bits >= 32)
@@ -273,6 +298,18 @@ class StepSpec:
         return 2 if self.shards > 1 else 1
 
     @property
+    def local_shards(self) -> int:    # shards owned by one mesh device
+        return self.shards // max(1, self.mesh_devices)
+
+    @property
+    def wps_shard(self) -> int:       # counter words per row per shard
+        return self.words_per_row // self.shards
+
+    @property
+    def dkw_shard(self) -> int:       # doorkeeper words per shard
+        return max(1, self.dk_words // self.shards)
+
+    @property
     def dkp(self) -> int:         # stored doorkeeper probes per table entry
         return self.dk_probes if self.dk_bits else 1
 
@@ -315,11 +352,17 @@ def _state_keys(spec: StepSpec) -> tuple[str, ...]:
     # TWO halves — [merged global || shard-partitioned delta].  One buffer
     # (not separate delta arrays) so the per-access DUS write chain has the
     # exact shape XLA CPU already updates in place on the unsharded path;
-    # separate delta buffers measured 4 full copies per access at big widths
+    # separate delta buffers measured 4 full copies per access at big widths.
+    # Mesh mode is the exception: "counters"/"doorkeeper" hold ONLY the
+    # replicated global halves and the deltas live in shard-major
+    # "dcounters"/"ddoorkeeper" arrays partitioned along the mesh axis.
+    mesh = ("dcounters", "ddoorkeeper") if spec.mesh_devices else ()
+    load = (("wsl", "wuw") if spec.adaptive and spec.assoc is not None
+            else ())
     if spec.assoc is None:
-        return ("counters", "doorkeeper", "wlo", "whi", "wmeta", "widx",
-                "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
-    return ("counters", "doorkeeper", "wtab", "mtab", "regs")
+        return ("counters", "doorkeeper", *mesh, "wlo", "whi", "wmeta",
+                "widx", "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
+    return ("counters", "doorkeeper", *mesh, "wtab", "mtab", *load, "regs")
 
 
 def init_step_state(spec: StepSpec, window_cap: int | None = None,
@@ -351,14 +394,35 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
     # sharded (sketch_halves == 2): the arrays carry [global || delta]
     # halves in ONE buffer — shard s owns words [s*words/S, (s+1)*words/S)
     # of every row slice in the delta half, and per-access writes land only
-    # there (probe indices are shard-confined)
-    common = {
-        "counters": jnp.zeros((spec.sketch_halves * spec.counter_words,),
-                              jnp.int32),
-        "doorkeeper": jnp.zeros((spec.sketch_halves * spec.dk_words,),
-                                jnp.int32),
-        "regs": regs,
-    }
+    # there (probe indices are shard-confined).  Mesh mode splits the delta
+    # out into shard-major arrays (axis 0 = shard) so a NamedSharding /
+    # shard_map along ("shard",) makes per-access delta writes device-local.
+    if spec.mesh_devices:
+        common = {
+            "counters": jnp.zeros((spec.counter_words,), jnp.int32),
+            "doorkeeper": jnp.zeros((spec.dk_words,), jnp.int32),
+            "dcounters": jnp.zeros(
+                (spec.shards, spec.rows, spec.wps_shard), jnp.int32),
+            "ddoorkeeper": jnp.zeros((spec.shards, spec.dkw_shard),
+                                     jnp.int32),
+            "regs": regs,
+        }
+    else:
+        common = {
+            "counters": jnp.zeros((spec.sketch_halves * spec.counter_words,),
+                                  jnp.int32),
+            "doorkeeper": jnp.zeros((spec.sketch_halves * spec.dk_words,),
+                                    jnp.int32),
+            "regs": regs,
+        }
+    if spec.adaptive and spec.assoc is not None:
+        # load-aware window quota distribution state (ISSUE 5): per-set
+        # window access counts this epoch + the current usable-way vector
+        # (seeded with the uniform set_ways rule, which the per-access path
+        # used to compute arithmetically)
+        nws = spec.window_slots // spec.assoc
+        common["wsl"] = jnp.zeros((nws,), jnp.int32)
+        common["wuw"] = jnp.asarray(set_ways(wcap, nws), jnp.int32)
     if spec.adaptive:
         # no init-time padding: capacities live in regs/params at runtime
         wcap = spec.window_slots
@@ -474,6 +538,21 @@ def _ds_gather(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
                             for i in range(idx.shape[0])])
 
 
+# operand bytes beyond which the unsharded sketch reads switch from fused
+# fancy-indexing gathers to the unrolled-scalar-slice discipline: the
+# partitioner cliff lands at ~512KB single-half buffers (width 2^18 at the
+# default geometry — ROADMAP "XLA-CPU cost-model cliffs"), while BELOW it
+# the fused gathers are measurably cheaper (~1.4x at C=512; the same
+# size-dependent trade as the flat path's fused masked reset).  The sharded
+# branches stay unconditionally unrolled — their doubled buffers cliff a
+# tier earlier and PR 4 measured them there.
+_PARTITION_CLIFF_BYTES = 1 << 19
+
+
+def _big_operand(nwords: int) -> bool:
+    return nwords * 4 >= _PARTITION_CLIFF_BYTES
+
+
 def _counter_vals(spec: StepSpec, words: jnp.ndarray,
                   idx: jnp.ndarray) -> jnp.ndarray:
     """counter_bits-wide counter values at probe positions idx (…, rows)."""
@@ -509,7 +588,13 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
     separate delta arrays: the single-buffer DUS chain is the shape XLA
     CPU's copy elision already handles in place on the unsharded path —
     separate delta buffers measured 4 full-array copies per access.)
+
+    Mesh mode (``spec.mesh_devices > 0``): dispatched to
+    :func:`_sketch_add_mesh` — ``counters``/``dk`` arrive as
+    (global, local-delta) tuples inside a shard_map body.
     """
+    if spec.mesh_devices:
+        return _sketch_add_mesh(spec, params, counters, dk, size, kidx, kdkb)
     # single-word writes are dynamic_update_slice, NOT scatter (.at[].set):
     # XLA CPU updates a loop-carried buffer in place for DUS but lowers the
     # equivalent scatter to a full-array copy, which would put an O(width)
@@ -540,7 +625,15 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
             zdk = _sched_dep(eff_words)
         else:
             dw_idx = w_idx
-            words = dk[w_idx]                          # (dkp,) one gather
+            if _big_operand(spec.dk_words):
+                # unrolled scalar-slice gather + barrier, same discipline
+                # as the sharded branch: the fused (dkp,)-element gather is
+                # costed by its OPERAND and the parallel task partitioner
+                # multithreads it past the cliff — a thread-pool dispatch
+                # per access
+                words = jax.lax.optimization_barrier(_ds_gather(dk, w_idx))
+            else:
+                words = dk[w_idx]                      # (dkp,) one gather
             eff_words = words
             zdk = None
         pre = (eff_words >> bpos) & 1
@@ -584,9 +677,21 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
             m = jnp.minimum(m, vals[r])
     else:
         dflat = flat
-        words = counters[flat]
-        vals = _counter_vals(spec, words, kidx)
-        m = vals.min()
+        if _big_operand(spec.counter_words):
+            # unrolled scalar-slice gather + unrolled minimum chain (not a
+            # reduce): the same in-place discipline the sharded path needed
+            # — a fused (rows,)-gather over a >= 2^18-counter buffer gets
+            # multithreaded by the parallel task partitioner, putting a
+            # thread-pool dispatch on every access
+            words = jax.lax.optimization_barrier(_ds_gather(counters, flat))
+            vals = _counter_vals(spec, words, kidx)
+            m = vals[0]
+            for r in range(1, spec.rows):
+                m = jnp.minimum(m, vals[r])
+        else:
+            words = counters[flat]
+            vals = _counter_vals(spec, words, kidx)
+            m = vals.min()
     bump = gate & (m < params[P_CAP])
     sub = kidx & (spec.counters_per_word - 1)
     new = jnp.where(bump & (vals == m),
@@ -633,6 +738,136 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
     return counters, dk, size
 
 
+def _sketch_add_mesh(spec: StepSpec, params, counters, dk, size, kidx, kdkb):
+    """Multi-device twin of the sharded ``_sketch_add`` branch (runs inside
+    a ``shard_map`` body over :data:`MESH_AXIS`).
+
+    ``counters`` is a (global ``(counter_words,)``, local delta
+    ``(local_shards, rows, wps_shard)``) pair; ``dk`` likewise with the
+    local doorkeeper deltas ``(local_shards, dkw_shard)``.  Every device
+    runs the identical replicated computation over the replicated global
+    halves and cache tables, but a key's delta slice is resident on exactly
+    one device (block placement: device ``d`` owns shards
+    ``[d*L, (d+1)*L)``), so the masked delta writes are device-local and
+    the sketch add needs NO cross-device exchange: the doorkeeper gate and
+    the conservative-update bump are consumed only by the owner's writes —
+    a non-owner computes don't-care values there and writes nothing.
+    Arithmetic is field-for-field the single-device sharded branch, so the
+    combined [global || all-gathered deltas] state evolves bit-identically.
+    """
+    cg, cd = counters
+    dkg, dd = dk
+    L = spec.local_shards
+    ks = kidx[0] // spec.width_shard             # owning shard (rows agree)
+    base = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32) * L
+    local = (ks >= base) & (ks < base + L)
+    lks = jnp.clip(ks - base, 0, L - 1)
+    cdf = cd.reshape(-1)
+    ddf = dd.reshape(-1)
+
+    if spec.dk_bits:
+        np_ = spec.dk_probes
+        w_idx = kdkb >> 5                        # global-half word positions
+        bpos = kdkb & 31
+        # local delta word: shard-major (local shard, word-within-shard)
+        ldw = lks * spec.dkw_shard + ((kdkb - ks * spec.dk_bits_shard) >> 5)
+        words, gwords = jax.lax.optimization_barrier(
+            (_ds_gather(ddf, ldw), _ds_gather(dkg, w_idx)))
+        # owner composes delta|global exactly like the single-device branch;
+        # a non-owner's `present` is a don't-care (bump writes are masked)
+        eff_words = jnp.where(local, words, 0) | gwords
+        pre = (eff_words >> bpos) & 1
+        present = jnp.int32(1)
+        for i in range(np_):
+            eff = pre[i]
+            for j in range(i):                   # set by an earlier probe?
+                eff = eff | (kdkb[j] == kdkb[i]).astype(jnp.int32)
+            present &= eff
+        bitm = jnp.int32(1) << bpos
+        for i in range(np_):
+            merged = words[i] | bitm[i]
+            for j in range(np_):
+                if j != i:                       # same-word probes merge
+                    merged = merged | jnp.where(w_idx[j] == w_idx[i],
+                                                bitm[j], 0)
+            ddf = jax.lax.dynamic_update_slice(
+                ddf, jnp.where(local, merged, words[i])[None], (ldw[i],))
+        gate = present.astype(jnp.bool_)
+    else:
+        gate = jnp.bool_(True)
+
+    flat = _row_offsets(spec) + _word_of(spec, kidx)      # global positions
+    h = kidx - ks * spec.width_shard             # per-shard probe offsets
+    dflat = ((lks * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32))
+             * spec.wps_shard + _word_of(spec, h))
+    words, gw = jax.lax.optimization_barrier(
+        (_ds_gather(cdf, dflat), _ds_gather(cg, flat)))
+    vals = (jnp.where(local, _counter_vals(spec, words, kidx), 0)
+            + _counter_vals(spec, gw, kidx))
+    m = vals[0]
+    for r in range(1, spec.rows):
+        m = jnp.minimum(m, vals[r])
+    bump = gate & (m < params[P_CAP])
+    sub = kidx & (spec.counters_per_word - 1)
+    new = jnp.where(bump & (vals == m),
+                    words + (jnp.int32(1) << (sub * spec.counter_bits)), words)
+    for r in range(spec.rows):
+        cdf = jax.lax.dynamic_update_slice(
+            cdf, jnp.where(local, new[r], words[r])[None], (dflat[r],))
+    # aging is deferred to the epoch-boundary all-gather merge_halve fold
+    return ((cg, cdf.reshape(cd.shape)), (dkg, ddf.reshape(dd.shape)),
+            size + 1)
+
+
+def _estimate_pair_mesh(spec: StepSpec, counters, dk, idx2, dkb2):
+    """Mesh twin of the sharded ``_estimate_pair`` branch — the ONE
+    per-access cross-device exchange.
+
+    Each estimated entry (candidate, victim) belongs to exactly one shard,
+    whose owning device composes global + local delta (and the doorkeeper
+    bit) into the full estimate; everyone else contributes 0 and a
+    ``psum`` over :data:`MESH_AXIS` hands every device the two exact int32
+    estimates, so the (replicated) admission verdict — and with it the
+    whole cache-table evolution — stays bit-identical to the single-device
+    sharded run.
+    """
+    cg, cd = counters
+    dkg, dd = dk
+    L = spec.local_shards
+    base = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32) * L
+    ks2 = idx2[:, 0] // spec.width_shard         # (2,) owning shards
+    own2 = (ks2 >= base) & (ks2 < base + L)
+    lks2 = jnp.clip(ks2 - base, 0, L - 1)
+    cdf = cd.reshape(-1)
+    ddf = dd.reshape(-1)
+
+    flat2 = _row_offsets(spec)[None, :] + _word_of(spec, idx2)
+    gw = _ds_gather(cg, flat2.reshape(-1)).reshape(2, spec.rows)
+    h2 = idx2 - ks2[:, None] * spec.width_shard
+    dflat2 = ((lks2[:, None] * spec.rows
+               + jnp.arange(spec.rows, dtype=jnp.int32)[None, :])
+              * spec.wps_shard + _word_of(spec, h2))
+    dw = _ds_gather(cdf, dflat2.reshape(-1)).reshape(2, spec.rows)
+    vals = (_counter_vals(spec, gw, idx2)
+            + jnp.where(own2[:, None], _counter_vals(spec, dw, idx2), 0))
+    est = vals[:, 0]
+    for r in range(1, spec.rows):
+        est = jnp.minimum(est, vals[:, r])
+    if spec.dk_bits:
+        bb = (dkb2 >> 5).reshape(-1)
+        gbits = _ds_gather(dkg, bb).reshape(2, spec.dkp)
+        ldw2 = (lks2[:, None] * spec.dkw_shard
+                + ((dkb2 - ks2[:, None] * spec.dk_bits_shard) >> 5))
+        dbits = _ds_gather(ddf, ldw2.reshape(-1)).reshape(2, spec.dkp)
+        w2 = gbits | jnp.where(own2[:, None], dbits, 0)
+        bits = (w2 >> (dkb2 & 31)) & 1
+        ok = bits[:, 0]
+        for p in range(1, bits.shape[1]):
+            ok = ok & bits[:, p]
+        est = est + ok
+    return jax.lax.psum(jnp.where(own2, est, 0), MESH_AXIS)
+
+
 def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     """TinyLFU estimates for two resident entries from their stored probes.
 
@@ -644,11 +879,22 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     chains instead of reduces — XLA CPU's parallel task partitioner
     multithreads reduce fusions whose fused gathers touch the doubled
     buffers, costing a thread-pool dispatch per access (measured 5x).
+
+    The unsharded branch switches to the same discipline (unrolled
+    scalar-slice gathers + unrolled reduce chains) once its buffers reach
+    ``_big_operand`` (~512KB, width >= 2^18 at default geometry — ROADMAP
+    "XLA-CPU cost-model cliffs"); below that the fused gathers are cheaper
+    and every pre-cliff program stays byte-identical to the PR 4 one.
+
+    Mesh mode dispatches to :func:`_estimate_pair_mesh` — the one
+    per-access cross-device exchange of the multi-device sharded run.
     """
+    if spec.mesh_devices:
+        return _estimate_pair_mesh(spec, counters, dk, idx2, dkb2)
     flat2 = _row_offsets(spec)[None, :] + _word_of(spec, idx2)
+    ff = flat2.reshape(-1)
+    k = ff.shape[0]
     if spec.shards > 1:
-        ff = flat2.reshape(-1)
-        k = ff.shape[0]
         gw = _ds_gather(counters, ff).reshape(2, k // 2)
         dw = _ds_gather(counters, spec.counter_words + ff).reshape(2, k // 2)
         vals = (_counter_vals(spec, gw, idx2)
@@ -656,15 +902,25 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
         est = vals[:, 0]
         for r in range(1, spec.rows):
             est = jnp.minimum(est, vals[:, r])
+    elif _big_operand(spec.counter_words):
+        gw = _ds_gather(counters, ff).reshape(2, k // 2)
+        vals = _counter_vals(spec, gw, idx2)
+        est = vals[:, 0]
+        for r in range(1, spec.rows):
+            est = jnp.minimum(est, vals[:, r])
     else:
         vals = _counter_vals(spec, counters[flat2], idx2)
         est = vals.min(axis=-1)
     if spec.dk_bits:
-        if spec.shards > 1:
-            bb = (dkb2 >> 5).reshape(-1)
-            kb = bb.shape[0]
-            w2 = (_ds_gather(dk, bb)
-                  | _ds_gather(dk, spec.dk_words + bb)).reshape(2, kb // 2)
+        bb = (dkb2 >> 5).reshape(-1)
+        kb = bb.shape[0]
+        if spec.shards > 1 or _big_operand(spec.dk_words):
+            if spec.shards > 1:
+                w2 = (_ds_gather(dk, bb)
+                      | _ds_gather(dk, spec.dk_words + bb)).reshape(2,
+                                                                    kb // 2)
+            else:
+                w2 = _ds_gather(dk, bb).reshape(2, kb // 2)
             bits = (w2 >> (dkb2 & 31)) & 1
             ok = bits[:, 0]
             for p in range(1, bits.shape[1]):
@@ -693,9 +949,13 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
 
     # -- 1. admission.record(key): sketch add + automatic §3.3 reset ---------
     # (sharded: the add writes the delta half only; aging waits for the
-    # epoch-boundary merge_halve fold)
-    counters, dk, size = _sketch_add(spec, params, state["counters"],
-                                     state["doorkeeper"], regs[R_SIZE],
+    # epoch-boundary merge_halve fold; mesh: global/local-delta pairs)
+    if spec.mesh_devices:
+        cin = (state["counters"], state["dcounters"])
+        din = (state["doorkeeper"], state["ddoorkeeper"])
+    else:
+        cin, din = state["counters"], state["doorkeeper"]
+    counters, dk, size = _sketch_add(spec, params, cin, din, regs[R_SIZE],
                                      kidx, kdkb)
 
     wlo, whi, wmeta = state["wlo"], state["whi"], state["wmeta"]
@@ -816,7 +1076,13 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     else:
         regs = jnp.stack([size, pcount, t + 1, regs[R_HITS] + counted,
                           regs[4], regs[5], regs[6], regs[7]])
-    new_state = {"counters": counters, "doorkeeper": dk,
+    if spec.mesh_devices:
+        (cg, cd), (dkg, dd) = counters, dk
+        sketch = {"counters": cg, "doorkeeper": dkg,
+                  "dcounters": cd, "ddoorkeeper": dd}
+    else:
+        sketch = {"counters": counters, "doorkeeper": dk}
+    new_state = {**sketch,
                  "wlo": wlo, "whi": whi, "wmeta": wmeta,
                  "widx": widx, "wdkb": wdkb,
                  "mlo": mlo, "mhi": mhi, "mmeta": mmeta,
@@ -863,9 +1129,14 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
 
     # -- 1. admission.record(key): sketch add + amortized in-place reset -----
     # (sharded: the add writes the delta half only; no per-access reset —
-    # aging happens in the epoch-boundary merge_halve fold)
-    counters, dk, size = _sketch_add(spec, params, state["counters"],
-                                     state["doorkeeper"], regs[R_SIZE],
+    # aging happens in the epoch-boundary merge_halve fold; mesh:
+    # global/local-delta pairs)
+    if spec.mesh_devices:
+        cin = (state["counters"], state["dcounters"])
+        din = (state["doorkeeper"], state["ddoorkeeper"])
+    else:
+        cin, din = state["counters"], state["doorkeeper"]
+    counters, dk, size = _sketch_add(spec, params, cin, din, regs[R_SIZE],
                                      kidx, kdkb, use_cond=True)
 
     wtab, mtab = state["wtab"], state["mtab"]
@@ -873,20 +1144,23 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     same_km = km2 == km1
 
     if spec.adaptive:
-        # runtime window quota: per-set usable ways follow the same
-        # distribution rule as init-time padding (core.hashing.set_ways —
-        # the first quota % n_sets sets keep one extra way), so a quota
-        # pinned at the configured split reproduces the static padding
-        # exactly.  Ways at or beyond a set's usable count READ as padding
+        # runtime window quota: per-set usable ways come from the ``wuw``
+        # state vector, refreshed by each epoch rebalance — uniform
+        # (core.hashing.set_ways: first quota % n_sets sets keep one extra
+        # way) while quota >= n_sets, load-aware below it (the quota's ways
+        # go to the sets with the highest window traffic last epoch —
+        # core.adaptive.window_set_ways), so small quotas no longer starve
+        # hot sets.  Ways at or beyond a set's usable count READ as padding
         # (_I32_MAX) for every decision; the epoch rebalance keeps them
         # EMPTY in storage, so the write-back restores _EMPTY bit-exactly.
         wquota = regs[R_WQUOTA]
         mcap_rt = params[P_WINDOW_CAP] + params[P_MAIN_CAP] - wquota
         nws, nms = spec.window_sets, spec.main_sets
         way_ids = jnp.arange(A, dtype=jnp.int32)
+        wuw = state["wuw"]
 
         def w_usable(s):
-            return wquota // nws + (s < wquota % nws).astype(jnp.int32)
+            return jax.lax.dynamic_slice(wuw, (s,), (1,))[0]
 
         def m_usable(s):
             return mcap_rt // nms + (s < mcap_rt % nms).astype(jnp.int32)
@@ -1043,14 +1317,27 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     # -- 6. bookkeeping (R_PCOUNT is unused: protected counts are per-set) ---
     counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
     if spec.adaptive:
+        # per-set window-traffic telemetry feeding the next rebalance's
+        # load-aware quota distribution (single-word DUS, O(1) per access)
+        wsl = state["wsl"]
+        lcur = jax.lax.dynamic_slice(wsl, (kwset,), (1,))
+        wsl = jax.lax.dynamic_update_slice(wsl, lcur + 1, (kwset,))
         regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
                           wquota, regs[5], regs[6],
                           regs[R_EHITS] + hit.astype(jnp.int32)])
     else:
         regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
                           regs[4], regs[5], regs[6], regs[7]])
-    new_state = {"counters": counters, "doorkeeper": dk,
-                 "wtab": wtab, "mtab": mtab, "regs": regs}
+    if spec.mesh_devices:
+        (cg, cd), (dkg, dd) = counters, dk
+        sketch = {"counters": cg, "doorkeeper": dkg,
+                  "dcounters": cd, "ddoorkeeper": dd}
+    else:
+        sketch = {"counters": counters, "doorkeeper": dk}
+    new_state = {**sketch, "wtab": wtab, "mtab": mtab, "regs": regs}
+    if spec.adaptive:
+        new_state["wsl"] = wsl
+        new_state["wuw"] = wuw
     return new_state, hit.astype(jnp.int32)
 
 
@@ -1143,7 +1430,18 @@ def _rebalance_set(spec: StepSpec, params, state, nq):
         t3n = jnp.where(keep[:, :, None], t3s, blank[None, None, :])
         return t3n, t3s, evict
 
-    uw = nq // nws + (jnp.arange(nws, dtype=jnp.int32) < nq % nws)
+    # window quota distribution (jnp twin of core.adaptive.window_set_ways):
+    # uniform while nq >= nws (bit-identical to the static set_ways padding,
+    # preserving pinned-quota == static); below nws the ways go to the nq
+    # most-loaded sets of the finished epoch (state["wsl"] telemetry) so a
+    # small quota cannot starve hot sets under skewed key->set load.  The
+    # argsort is stable, so ties break by set index like the host rule.
+    load = state["wsl"]
+    uniform = nq // nws + (jnp.arange(nws, dtype=jnp.int32) < nq % nws)
+    order = jnp.argsort(-load)                   # hottest first, stable
+    ranks = jnp.zeros((nws,), jnp.int32).at[order].set(
+        jnp.arange(nws, dtype=jnp.int32))
+    uw = jnp.where(nq < nws, (ranks < nq).astype(jnp.int32), uniform)
     um = mcap_new // nms + (jnp.arange(nms, dtype=jnp.int32) < mcap_new % nms)
     w3n, w3s, w_evict = compact(wtab, nws, spec.wcols, WT_META, uw)
     m3n, _, _ = compact(mtab, nms, spec.mcols, MT_META, um)
@@ -1174,7 +1472,8 @@ def _rebalance_set(spec: StepSpec, params, state, nq):
 
     regs = jnp.stack([regs[R_SIZE], regs[R_PCOUNT], regs[R_T], regs[R_HITS],
                       nq, regs[R_WCOUNT], regs[R_MCOUNT], jnp.int32(0)])
-    return {**state, "wtab": wtab, "mtab": mtab, "regs": regs}
+    return {**state, "wtab": wtab, "mtab": mtab, "regs": regs,
+            "wsl": jnp.zeros_like(load), "wuw": uw}
 
 
 def rebalance(spec: StepSpec, params: jnp.ndarray, state: dict,

@@ -115,14 +115,17 @@ def test_rebalance_set_invariants_across_quota_moves():
     total = 4 + 48
 
     def check(st, quota):
-        for tab_key, n_sets, cap in [("wtab", 4, quota),
-                                     ("mtab", 8, total - quota)]:
+        # window usable ways come from the load-aware wuw state vector
+        # (ISSUE 5); the main side keeps the uniform rule
+        for tab_key, n_sets, usable in [
+                ("wtab", 4, np.asarray(st["wuw"])),
+                ("mtab", 8, np.array([(total - quota) // 8
+                                      + (s < (total - quota) % 8)
+                                      for s in range(8)]))]:
             tab = np.asarray(st[tab_key])
             A = spec.assoc
             meta = tab[:, 2].reshape(n_sets, A)
             res = meta >= 0
-            usable = np.array([cap // n_sets + (s < cap % n_sets)
-                               for s in range(n_sets)])
             beyond = res & (np.arange(A)[None, :] >= usable[:, None])
             assert not beyond.any(), (tab_key, quota)
         wres = np.asarray(st["wtab"])[:, 2] >= 0
@@ -131,12 +134,83 @@ def test_rebalance_set_invariants_across_quota_moves():
         mkeys = {(r[0], r[1]) for r in np.asarray(st["mtab"]) if r[2] >= 0}
         assert not (wkeys & mkeys)
 
+    from repro.core.adaptive import window_set_ways
     for i, nq in enumerate([12, 3, 26, 1, 9]):
         s0, s1 = i * 1000, (i + 1) * 1000
         st, _ = step_ref(spec, params, st, lo[s0:s1], hi[s0:s1])
+        load = np.asarray(st["wsl"])
+        assert load.sum() == 1000            # every access counts its set
         st = rebalance(spec, params, st, nq)
         assert int(np.asarray(st["regs"])[R_WQUOTA]) == nq
+        # the device's jnp distribution == the shared host rule, and the
+        # usable-way budget always sums to the quota
+        np.testing.assert_array_equal(np.asarray(st["wuw"]),
+                                      window_set_ways(nq, 4, load))
+        assert np.asarray(st["wuw"]).sum() == nq
+        assert int(np.asarray(st["wsl"]).sum()) == 0     # telemetry reset
         check(st, nq)
+
+
+def test_small_quota_load_aware_ways_follow_hot_sets():
+    """ISSUE 5 satellite: at quotas below the window set count the old
+    uniform rule handed the few usable ways to a FIXED prefix of sets, so
+    keys hashing to any other set could never use the window.  The
+    load-aware distribution must move the ways to the sets actually
+    carrying traffic — and recover the window hits on a skewed trace whose
+    hot sets are exactly the ones the uniform rule starved."""
+    from repro.core.adaptive import window_set_ways
+    from repro.core.hashing import set_index32_np, WSET_SALT
+
+    nws = 4
+    spec = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=32,
+                    main_slots=64, assoc=8, adaptive=True)
+    params = make_step_params(2, 50, 40, 700, 7, 0)
+
+    # bucket candidate keys by their window set; hot sets are 2 and 3 —
+    # precisely the sets the uniform rule gives ZERO ways at quota 2
+    pool = np.arange(1, 40_000, dtype=np.uint64)
+    wset = set_index32_np(pool, nws, WSET_SALT)
+    hot2 = pool[wset == 2]
+    hot3 = pool[wset == 3]
+    assert len(hot2) > 700 and len(hot3) > 700
+
+    # churny bursts: a FRESH key per burst, 3 back-to-back accesses, hot
+    # sets alternating — window-friendly (2 hits/burst with an MRU way in
+    # the set), admission-hostile (every key is new, so a starved window
+    # yields almost nothing)
+    def burst_trace(n_bursts):
+        ks = np.empty((n_bursts, 3), np.uint64)
+        for b in range(n_bursts):
+            src = hot2 if b % 2 == 0 else hot3
+            ks[b, :] = src[b // 2 % len(src)]
+        return ks.reshape(-1)
+
+    tr = burst_trace(1600)                     # 4800 accesses
+    lo, hi = lanes(tr)
+
+    st = init_step_state(spec, window_cap=2)
+    st, _ = step_ref(spec, params, st, lo[:1200], hi[:1200])
+    load = np.asarray(st["wsl"])
+    assert load[2] + load[3] == 1200           # the skew is real
+    st = rebalance(spec, params, st, 2)
+    wuw = np.asarray(st["wuw"])
+    np.testing.assert_array_equal(wuw, [0, 0, 1, 1])   # ways follow load
+    np.testing.assert_array_equal(wuw, window_set_ways(2, nws, load))
+    _, h_aware = step_ref(spec, params, st, lo[1200:], hi[1200:])
+
+    # the static path bakes the uniform [1, 1, 0, 0] padding at init — its
+    # window never sees the hot sets and the tail hits collapse
+    stat = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=32,
+                    main_slots=64, assoc=8)
+    ss = init_step_state(stat, window_cap=2, main_cap=50)
+    ss, _ = step_ref(stat, params, ss, lo[:1200], hi[:1200])
+    _, h_starved = step_ref(stat, params, ss, lo[1200:], hi[1200:])
+
+    aware = int(np.asarray(h_aware).sum())
+    starved = int(np.asarray(h_starved).sum())
+    # ~2 hits per 3-access burst once the ways sit in the hot sets
+    assert aware > 0.5 * (len(tr) - 1200), (aware, starved)
+    assert aware > starved + 0.3 * (len(tr) - 1200), (aware, starved)
 
 
 def test_rebalance_moves_quota_and_counts_stay_consistent():

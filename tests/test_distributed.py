@@ -119,10 +119,13 @@ class TestShardingRules:
         assert abs(cost.flops - expected) / expected < 0.05
 
 
-def test_sketch_shard_placement_round_robin():
-    """Sketch-shard placement map (ISSUE 4): every shard maps to a device,
-    round-robin when shards exceed the device count, and the 1-D shard mesh
-    is bounded by the available devices."""
+def test_sketch_shard_placement_block():
+    """Sketch-shard placement map (ISSUE 5): every shard maps to a device,
+    BLOCK placement when shards exceed the device count (device ``d`` owns
+    the contiguous shards ``[d*S/D, (d+1)*S/D)`` — exactly how
+    NamedSharding/shard_map split axis 0 of the shard-major delta arrays
+    over ``make_shard_mesh``), and the 1-D shard mesh size is the largest
+    divisor of the shard count that the available devices can host."""
     import jax
     from repro.distributed.mesh import shard_placement, make_shard_mesh
 
@@ -130,9 +133,135 @@ def test_sketch_shard_placement_round_robin():
     pl = shard_placement(8)
     assert len(pl) == 8
     assert all(d in devs for d in pl)
-    # round-robin: shard s and shard s+len(devs) share a device
-    for s in range(8 - len(devs)):
-        assert pl[s] == pl[s + len(devs)]
+    # block: co-located shards are CONSECUTIVE, and the run of shards on
+    # one device never interleaves with another device's
+    per = 8 // len({id(d) for d in pl})
+    for s in range(8):
+        assert pl[s] == pl[(s // per) * per]
     mesh = make_shard_mesh(4)
     assert mesh.axis_names == ("shard",)
-    assert mesh.devices.size == min(4, len(devs))
+    assert 4 % mesh.devices.size == 0
+    assert mesh.devices.size <= min(4, len(devs))
+
+
+def test_shard_placement_matches_mesh_n4_d2():
+    """ISSUE 5 regression: with n_shards=4 over n_devices=2 the placement
+    map and the mesh partitioning used to disagree (round-robin
+    [d0,d1,d0,d1] vs the mesh's contiguous [d0,d0,d1,d1] block split).
+    They must describe the same placement — shards 0,1 on the first mesh
+    device, shards 2,3 on the second."""
+    from repro.distributed.mesh import shard_placement, _shard_mesh_size
+
+    d0, d1 = object(), object()
+    pl = shard_placement(4, [d0, d1])
+    assert pl == [d0, d0, d1, d1]
+    # and a device count that does NOT divide the shard count falls back
+    # to the largest divisor instead of producing an uneven split
+    assert _shard_mesh_size(4, 3) == 2
+    pl3 = shard_placement(4, [d0, d1, object()])
+    assert pl3 == [d0, d0, d1, d1]
+    # one device: everything co-located (the single-host special case)
+    assert shard_placement(4, [d0]) == [d0] * 4
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharded-sketch execution (ISSUE 5 tentpole): the mesh run
+# over 2 forced host devices must be bit-identical to the single-device
+# sharded run — hit sequence, final sketch state, and (adaptive) the full
+# quota trajectory — for shards in {2,4}, flat and assoc layouts.
+# ---------------------------------------------------------------------------
+
+MESH_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+import jax
+from repro.core.device_simulate import simulate_trace, ClimbSpec
+from repro.distributed.mesh import make_shard_mesh, shard_placement
+from repro.traces import zipf_trace, phase_shift_trace
+
+assert len(jax.devices()) == 2
+tr = zipf_trace(8000, n_items=600, alpha=0.9, seed=3)
+
+
+def parity(trace, C, **kw):
+    mesh = make_shard_mesh(kw["shards"])
+    assert mesh.devices.size == 2
+    # the placement map and the mesh describe the same block placement
+    per = kw["shards"] // 2
+    pl = shard_placement(kw["shards"])
+    assert all(pl[s] == mesh.devices.flat[s // per]
+               for s in range(kw["shards"]))
+    rs, ss, hs = simulate_trace(trace, C, return_state=True, **kw)
+    rm, sm, hm = simulate_trace(trace, C, mesh=mesh, return_state=True, **kw)
+    assert rm.extra["mesh_devices"] == 2
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hm))
+    for k in ss:
+        np.testing.assert_array_equal(np.asarray(ss[k]), np.asarray(sm[k]),
+                                      err_msg=k)
+    return rs, rm
+
+
+for shards in (2, 4):
+    parity(tr, 200, shards=shards, merge_every=512)            # flat tables
+    parity(tr, 400, shards=shards, merge_every=512, assoc=8)   # set-assoc
+print("OK parity flat+assoc")
+
+# adaptive: full stack (runtime quota + sharded sketch + mesh), trajectory
+tp = phase_shift_trace(8000, n_hot=300, working_set=80, advance=0.05, seed=2)
+for shards in (2, 4):
+    ra, rm = parity(tp, 200, shards=shards, adaptive=True, assoc=8,
+                    climb=ClimbSpec(epoch_len=512))
+    assert ra.extra["trajectory"] == rm.extra["trajectory"]
+    assert ra.extra["final_quota"] == rm.extra["final_quota"]
+print("OK parity adaptive")
+"""
+
+MESH_GOLDEN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+import jax
+from repro.core.device_simulate import simulate_trace
+from repro.distributed.mesh import make_shard_mesh
+from repro.traces import zipf_trace
+from repro.traces.synthetic import zipf_probs, _sample_from_probs
+
+assert len(jax.devices()) == 2
+mesh = make_shard_mesh(2)
+# the PR 1 golden pins (tests/test_device_simulate.py), tolerance widened
+# to +-0.01 for the sharded+mesh path (deferred-reset timing shifts the
+# estimates slightly; observed deltas are well under 0.005)
+z = zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7)
+r = simulate_trace(z, 200, warmup=10_000, shards=2, mesh=mesh)
+assert abs(r.hit_ratio - 0.3498) < 0.01, r.hit_ratio
+rng = np.random.default_rng(13)
+s = np.concatenate([np.arange(100_000, 125_000, dtype=np.int64),
+                    _sample_from_probs(zipf_probs(2_000, 1.0), 35_000,
+                                       rng).astype(np.int64)])
+r2 = simulate_trace(s, 400, warmup=5_000, shards=2, mesh=mesh)
+assert abs(r2.hit_ratio - 0.4837) < 0.01, r2.hit_ratio
+print("OK goldens", round(r.hit_ratio, 4), round(r2.hit_ratio, 4))
+"""
+
+
+def _run_forced_device_script(script, timeout=900):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_mesh_sharded_parity_two_devices():
+    out = _run_forced_device_script(MESH_PARITY_SCRIPT)
+    assert "OK parity flat+assoc" in out
+    assert "OK parity adaptive" in out
+
+
+def test_mesh_sharded_goldens_two_devices():
+    out = _run_forced_device_script(MESH_GOLDEN_SCRIPT)
+    assert "OK goldens" in out

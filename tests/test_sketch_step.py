@@ -378,6 +378,39 @@ def test_shards1_is_the_identical_program():
     assert st["doorkeeper"].shape[0] == 2 * init_step_state(base)["doorkeeper"].shape[0]
 
 
+def test_big_operand_unrolled_branch_matches_fused_bitwise(monkeypatch):
+    """ISSUE 5: past ``_big_operand`` the unsharded sketch reads switch to
+    the unrolled-scalar-slice discipline; every regular test runs at
+    pre-cliff widths where the fused path compiles byte-identically, so
+    force the threshold to 0 and pin the unrolled branches bitwise against
+    the fused ones (hits AND final state, both layouts) — otherwise an
+    indexing bug there would surface only as silent hit-ratio drift in the
+    benchmark."""
+    from repro.kernels import sketch_step
+
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 400, size=2500, dtype=np.uint64)
+    lo, hi = lanes(keys)
+    for spec, params in [
+            (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2,
+                      main_slots=40),
+             make_step_params(2, 40, 32, 500, 7, 0)),
+            (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                      main_slots=64, assoc=8),
+             make_step_params(4, 48, 38, 700, 7, 0))]:
+        st_f, h_f = step_ref(spec, params, init_step_state(spec), lo, hi)
+        # step_ref is un-jitted here, so it re-traces under the patched
+        # threshold (no compile cache keyed on spec can serve the fused
+        # build)
+        monkeypatch.setattr(sketch_step, "_PARTITION_CLIFF_BYTES", 0)
+        st_u, h_u = step_ref(spec, params, init_step_state(spec), lo, hi)
+        monkeypatch.undo()
+        np.testing.assert_array_equal(np.asarray(h_f), np.asarray(h_u))
+        for k in st_f:
+            np.testing.assert_array_equal(np.asarray(st_f[k]),
+                                          np.asarray(st_u[k]), err_msg=k)
+
+
 SHARDED_SPECS = [
     # flat, doorkeeper on, 4 shards
     (StepSpec(width=256, rows=4, dk_bits=1024, window_slots=2, main_slots=60,
