@@ -103,15 +103,24 @@ def best_of(fn, reps=2):
 simulate_trace(tr, 8192, **kw)                                # compile
 sh_wall, _ = best_of(lambda: simulate_trace(tr, 8192, **kw))
 _, _, hs = simulate_trace(tr, 8192, return_state=True, **kw)
+# exact chunked exchange (mesh_exchange="chunk", the default): the only
+# collective is the entry/exit delta gather/split — must be bit-identical
 simulate_trace(tr, 8192, mesh=mesh, **kw)                     # compile
 m_wall, _ = best_of(lambda: simulate_trace(tr, 8192, mesh=mesh, **kw))
 _, _, hm = simulate_trace(tr, 8192, mesh=mesh, return_state=True, **kw)
+# speculative stale-global admission: one all-gather fold per merge epoch
+simulate_trace(tr, 8192, mesh=mesh, mesh_exchange="stale", **kw)
+s_wall, rs = best_of(lambda: simulate_trace(tr, 8192, mesh=mesh,
+                                            mesh_exchange="stale", **kw))
 print(json.dumps({
     "mesh_devices": len(jax.devices()),
     "accesses": n,
     "sharded_1dev_acc_per_s": round(n / sh_wall),
     "mesh_acc_per_s": round(n / m_wall),
+    "mesh_chunked_acc_per_s": round(n / m_wall),
+    "mesh_stale_acc_per_s": round(n / s_wall),
     "mesh_overhead_vs_sharded": round(m_wall / sh_wall, 2),
+    "mesh_stale_overhead_vs_sharded": round(s_wall / sh_wall, 2),
     "parity_ok": bool((np.asarray(hs) == np.asarray(hm)).all()),
 }))
 """
@@ -344,18 +353,21 @@ def run(quick: bool = False):
                  "unsharded_over_sharded": round(sh_overhead, 2),
                  "flatness_512_to_65536": round(sh_flatness, 2)})
 
-    # -- 7. multi-device mesh run (ISSUE 5): 2 forced host devices -----------
+    # -- 7. multi-device mesh run (ISSUE 5/6): 2 forced host devices ---------
     # forcing the host device count only works before jax initializes, so
-    # the mesh measurement runs in a subprocess: single-device sharded and
-    # mesh-sharded on the same trace in the same environment, reporting
-    # throughput + bitwise parity of the hit sequences.
+    # the mesh measurement runs in a subprocess: single-device sharded,
+    # exact chunked-exchange mesh, and speculative stale-global mesh on the
+    # same trace in the same environment, reporting throughput + bitwise
+    # parity of the chunked hit sequence.
     mesh = _mesh_subprocess_bench(quick)
     if mesh:
         rows.append({"trace": "golden-zipf", "engine": "mesh(s=4,d=2)",
                      **mesh, "device": backend})
         print(f"  mesh(s=4,d=2)    C=8192 {mesh['mesh_acc_per_s']:>12,.0f} "
               f"acc/s ({mesh['mesh_overhead_vs_sharded']:.1f}x sharded cost, "
-              f"parity {'OK' if mesh['parity_ok'] else 'BROKEN'})",
+              f"parity {'OK' if mesh['parity_ok'] else 'BROKEN'}; stale "
+              f"{mesh['mesh_stale_acc_per_s']:,.0f} acc/s, "
+              f"{mesh['mesh_stale_overhead_vs_sharded']:.1f}x)",
               flush=True)
 
     # -- perf snapshot at the repo root: the numbers CI tracks across PRs ----
@@ -380,8 +392,14 @@ def run(quick: bool = False):
     if mesh:
         snapshot["mesh_devices"] = mesh["mesh_devices"]
         snapshot["mesh_acc_per_s_8192"] = round(mesh["mesh_acc_per_s"])
+        snapshot["mesh_chunked_acc_per_s_8192"] = round(
+            mesh["mesh_chunked_acc_per_s"])
+        snapshot["mesh_stale_acc_per_s_8192"] = round(
+            mesh["mesh_stale_acc_per_s"])
         snapshot["mesh_overhead_vs_sharded"] = round(
             mesh["mesh_overhead_vs_sharded"], 2)
+        snapshot["mesh_stale_overhead_vs_sharded"] = round(
+            mesh["mesh_stale_overhead_vs_sharded"], 2)
         snapshot["mesh_parity_ok"] = mesh["parity_ok"]
     with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
         json.dump(snapshot, f, indent=1)

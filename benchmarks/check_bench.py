@@ -28,6 +28,14 @@ broken:
   reproduces the single-device sharded hit sequence bit-for-bit.  This is
   an exactness invariant, so it fails unconditionally (no noise model);
   the field is absent when the bench could not run the subprocess.
+* ``mesh_overhead_vs_sharded > 3`` — the ISSUE 6 collective-cadence
+  tripwire: the exact chunked-exchange mesh run exchanges state only on
+  entering/leaving the compiled program, so its overhead vs the
+  single-device sharded run sits near ~1x.  A per-access collective
+  sneaking back into the step (the bug this gate was built after measured
+  62.8x) scales the overhead with the epoch length, far past any machine
+  noise — so a miss WARNS at > 3 and only fails when corroborated by
+  ``> 10`` (or ``--strict``).  Missing in pre-ISSUE-6 snapshots.
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -111,6 +119,23 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
             "(mesh_parity_ok false) — the multi-device exactness ladder "
             "is broken")
 
+    # mesh collective cadence (ISSUE 6): the exact chunked exchange keeps
+    # the per-access path collective-free, so overhead vs the single-device
+    # sharded run stays near ~1x.  A real regression (a collective back in
+    # the step scan) scales with the epoch length — the original per-access
+    # psum measured 62.8x — so > 3 warns and > 10 (or --strict)
+    # corroborates it into a failure; plain machine noise cannot push a
+    # collective-free program past ~10x.
+    m_over = fresh.get("mesh_overhead_vs_sharded")
+    if m_over is not None and m_over > 3.0:
+        msg = f"mesh chunked-exchange overhead {m_over}x > 3x vs sharded"
+        if strict or m_over > 10.0:
+            failures.append(
+                "per-access mesh collective is back: " + msg)
+        else:
+            print(f"WARNING: {msg} — under the 10x corroboration bar; "
+                  "attributing to machine noise", flush=True)
+
     if baseline:
         same_machine = (baseline.get("machine") and
                         baseline.get("machine") == fresh.get("machine") and
@@ -167,6 +192,8 @@ def main(argv=None) -> int:
                                        "adaptive_overhead_vs_static",
                                        "sharded_flatness_512_to_65536",
                                        "sharded_overhead_vs_unsharded",
+                                       "mesh_overhead_vs_sharded",
+                                       "mesh_stale_overhead_vs_sharded",
                                        "mesh_parity_ok")}),
             flush=True)
     return 1 if failures else 0

@@ -34,14 +34,14 @@ lanes on the way in (TPU has no 64-bit integer multiply — DESIGN.md §2).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sketch_step import (StepSpec, make_step_params,
+from repro.kernels.sketch_step import (StepSpec, MESH_AXIS, make_step_params,
                                        init_step_state, step_ref, step_pallas,
                                        rebalance, _state_keys,
                                        R_HITS, R_WQUOTA, R_EHITS)
@@ -78,14 +78,29 @@ class DeviceWTinyLFU:
     partitioned along the mesh axis (block placement — device ``d`` owns
     shards ``[d*S/D, (d+1)*S/D)``, matching
     ``distributed.mesh.shard_placement``), the global halves and cache
-    tables are replicated, per-access delta writes are device-local, the
-    admission estimate is the one per-access exchange (a 2-int ``psum``),
-    and the epoch ``merge_halve`` fold is the one cross-device STATE
-    exchange (all-gather of deltas -> saturating merge -> deferred
-    halvings -> refreshed global replica on every device).  Bit-identical
-    to the single-device sharded run — same hit sequence, same final
-    sketch state (tests/test_distributed.py pins this over forced host
-    devices).  Requires ``shards % n_devices == 0`` and ``backend="jit"``.
+    tables are replicated, and the per-access path exchanges NOTHING —
+    all cross-device traffic is per-epoch-chunk or rarer, selected by
+    ``mesh_exchange`` (it used to be one 2-int ``psum`` per access, a 62x
+    overhead on the forced-2-device bench):
+
+    * ``"chunk"`` (default, exact): one all-gather of the delta blocks on
+      entering the compiled program composes the single-device
+      [global || delta] layout on every device, each device then replays
+      the identical epoch-chunked single-device program (step scan +
+      ``merge_halve`` fold, which keeps the deltas self-contained), and
+      the local delta blocks are sliced back out at exit.  Bit-identical
+      to the single-device sharded run — same hit sequence, same final
+      sketch state (tests/test_distributed.py pins this over forced host
+      devices).
+    * ``"stale"`` (speculative): per-access delta writes stay
+      device-local and admission estimates read only the replicated
+      global halves — stale by at most one merge epoch — so the one
+      collective is the per-epoch ``merge_halve_mesh`` all-gather fold
+      that reconciles the deltas.  Lands in the goldens-±0.01 tier of the
+      exactness ladder, with the host twin
+      ``WTinyLFU(stale_admission=True)``.
+
+    Requires ``shards % n_devices == 0`` and ``backend="jit"``.
     """
     capacity: int
     window_frac: float = 0.01
@@ -102,6 +117,7 @@ class DeviceWTinyLFU:
     shards: int = 1               # sketch shards; >1 = delta/global split
     merge_every: int = 0          # sharded merge cadence; 0 = auto
     mesh: object = None           # ("shard",) mesh; None = single device
+    mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
 
     @property
     def window_cap(self) -> int:
@@ -194,12 +210,22 @@ class DeviceWTinyLFU:
             main_slots=main_slots or self._table_slots(msize),
             assoc=(ways or self.ways) if self.assoc is not None else None,
             counter_bits=self.counter_bits, adaptive=self.adaptive,
-            shards=self.shards, mesh_devices=self.mesh_devices)
+            shards=self.shards, mesh_devices=self.mesh_devices,
+            # normalized so single-device specs share one compile cache key
+            mesh_exchange=self.mesh_exchange if self.mesh is not None
+            else "chunk")
 
     @property
     def mesh_devices(self) -> int:
         """Devices of the ``("shard",)`` mesh (0 = single-device layout)."""
+        if self.mesh_exchange not in ("chunk", "stale"):
+            raise ValueError(f"mesh_exchange {self.mesh_exchange!r} must be "
+                             "'chunk' or 'stale'")
         if self.mesh is None:
+            if self.mesh_exchange != "chunk":
+                raise ValueError("mesh_exchange='stale' requires mesh= (a "
+                                 "('shard',) mesh from "
+                                 "distributed.mesh.make_shard_mesh)")
             return 0
         if tuple(self.mesh.axis_names) != ("shard",):
             raise ValueError(f"mesh axes {self.mesh.axis_names} != "
@@ -280,6 +306,10 @@ def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
 
 _sharded_cache: dict = {}
 _mesh_cache: dict = {}
+# compiled mesh runners are keyed on (spec, mesh, adaptive); a geometry sweep
+# mints a fresh spec per grid point, and each entry pins a compiled
+# multi-device executable — bound the memo like the host set-index memos
+_MESH_CACHE_LIMIT = 32
 
 
 def _mesh_state_specs(spec: StepSpec):
@@ -304,66 +334,141 @@ def _from_mesh_state(spec: StepSpec, state: dict) -> dict:
     return out
 
 
+def _gather_delta_state(spec: StepSpec, state: dict) -> dict:
+    """Inside the shard_map body: all-gather the device-local delta blocks
+    and compose the single-device [global || delta] layout on EVERY device
+    — the one collective of the exact ``mesh_exchange="chunk"`` mode, paid
+    once on entering the compiled program (the epoch fold keeps the
+    replicated replica self-contained from then on)."""
+    cd = jax.lax.all_gather(state["dcounters"], MESH_AXIS, axis=0, tiled=True)
+    delta = cd.transpose(1, 0, 2).reshape(spec.counter_words)
+    if spec.dk_bits:
+        dd = jax.lax.all_gather(state["ddoorkeeper"], MESH_AXIS,
+                                axis=0, tiled=True)
+        ddk = dd.reshape(spec.dk_words)
+    else:
+        ddk = jnp.zeros_like(state["doorkeeper"])
+    out = {k: v for k, v in state.items()
+           if k not in ("dcounters", "ddoorkeeper")}
+    out["counters"] = jnp.concatenate([state["counters"], delta])
+    out["doorkeeper"] = jnp.concatenate([state["doorkeeper"], ddk])
+    return out
+
+
+def _split_delta_state(spec: StepSpec, state: dict, state0: dict) -> dict:
+    """Inverse of :func:`_gather_delta_state` on exiting the program: slice
+    this device's block of the (replicated) delta half back out so the
+    returned pytree matches the mesh-layout partition specs.  ``state0`` is
+    the device-local input state (for the dk_bits=0 placeholder, whose
+    (local_shards, 1) block never reshapes from the flat layout)."""
+    H, HD = spec.counter_words, spec.dk_words
+    L = spec.local_shards
+    base = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32) * L
+    delta = state["counters"][H:].reshape(
+        spec.rows, spec.shards, spec.wps_shard).transpose(1, 0, 2)
+    out = {k: v for k, v in state.items()
+           if k not in ("counters", "doorkeeper")}
+    out["counters"] = state["counters"][:H]
+    out["doorkeeper"] = state["doorkeeper"][:HD]
+    out["dcounters"] = jax.lax.dynamic_slice(
+        delta, (base, jnp.int32(0), jnp.int32(0)),
+        (L, spec.rows, spec.wps_shard))
+    if spec.dk_bits:
+        ddk = state["doorkeeper"][HD:].reshape(spec.shards, spec.dkw_shard)
+        out["ddoorkeeper"] = jax.lax.dynamic_slice(
+            ddk, (base, jnp.int32(0)), (L, spec.dkw_shard))
+    else:
+        out["ddoorkeeper"] = state0["ddoorkeeper"]
+    return out
+
+
 def _mesh_runner(spec: StepSpec, mesh, adaptive: bool):
     """One compiled multi-device program: a shard_map over the ("shard",)
-    mesh whose body is the epoch-chunked scan — fused step over each
-    (nvalid-masked) epoch, then the merge_halve_mesh all-gather fold (and,
-    when adaptive, climb + rebalance) gated off on the padded partial tail
-    epoch, exactly like the pallas backend's masked tail (whose final
-    state/hits are pinned bit-identical to the jit backend's
-    tail-outside-the-scan form).  Every device runs the identical
-    replicated computation over the replicated cache tables; only its
-    local delta blocks differ."""
+    mesh whose body is the epoch-chunked scan — full (unmasked) merge
+    epochs inside the scan, the (< merge_every) tail as a plain step after
+    it, exactly like the single-device jit backend.  NO per-access
+    collective in either exchange mode (``StepSpec.mesh_exchange``):
+
+    * ``"chunk"``: :func:`_gather_delta_state` on entry, then every device
+      replays the identical single-device program (``mesh_devices=0``
+      spec) over its replicated [global || delta] replica — step scan +
+      ``merge_halve`` fold, zero collectives — and
+      :func:`_split_delta_state` restores the mesh layout on exit.
+      Bit-identical to the single-device sharded run by construction.
+    * ``"stale"``: the mesh layout is kept throughout — per-access delta
+      writes stay device-local, estimates read the (<= one epoch stale)
+      replicated global halves only, and the per-epoch
+      ``merge_halve_mesh`` all-gather fold is the one collective.
+
+    Every device computes identical replicated verdicts over the
+    replicated cache tables; only its local delta blocks differ."""
     key = (spec, mesh, adaptive)
     if key not in _mesh_cache:
+        if len(_mesh_cache) >= _MESH_CACHE_LIMIT:
+            _mesh_cache.clear()
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         sspec = _mesh_state_specs(spec)
+        chunked = spec.mesh_exchange == "chunk"
+        # chunk mode replays the single-device program — same geometry,
+        # single-device state layout — inside the shard_map body
+        lspec = replace(spec, mesh_devices=0) if chunked else spec
+
+        def enter(state):
+            return _gather_delta_state(spec, state) if chunked else state
+
+        def leave(st, state0):
+            return _split_delta_state(spec, st, state0) if chunked else st
+
+        def fold(params, st):
+            return (merge_halve(lspec, params, st) if chunked
+                    else merge_halve_mesh(spec, params, st))
 
         if not adaptive:
-            def fn(params, state, los, his, nvalid):
-                def body(st, x):
-                    clo, chi, nv = x
-                    st, hits = step_ref(spec, params, st, clo, chi, nv)
-                    merged = merge_halve_mesh(spec, params, st)
-                    full = nv >= jnp.int32(clo.shape[0])
-                    st = {**st, **{k: jnp.where(full, merged[k], st[k])
-                                   for k in ("counters", "doorkeeper",
-                                             "dcounters", "ddoorkeeper",
-                                             "regs")}}
-                    return st, hits
-                return jax.lax.scan(body, state, (los, his, nvalid))
+            def fn(params, state, los, his, tlo, thi):
+                st0 = enter(state)
 
-            _mesh_cache[key] = jax.jit(shard_map(
-                fn, mesh=mesh, in_specs=(P(), sspec, P(), P(), P()),
-                out_specs=(sspec, P()), check_rep=False))
-        else:
-            def fn(params, state, los, his, nvalid, climb):
-                def body(carry, x):
-                    clo, chi, nv = x
-                    st = carry[0]
-                    st, hits = step_ref(spec, params, st, clo, chi, nv)
-                    ehits = st["regs"][R_EHITS]
-                    quota = st["regs"][R_WQUOTA]
-                    # merge rides the climb epochs: fold first, then climb
-                    # + rebalance — same order as the single-device runner
-                    stm = merge_halve_mesh(spec, params, st)
-                    climbed = _climb_step(params, spec, (stm,) + carry[1:],
-                                          ehits, climb)
-                    full = nv >= jnp.int32(clo.shape[0])
-                    carry = jax.tree_util.tree_map(
-                        lambda a, b: jnp.where(full, a, b), climbed,
-                        (st,) + carry[1:])
-                    return carry, (hits, ehits, quota)
-
-                init = (state, jnp.int32(-1), jnp.int32(1), climb[0],
-                        jnp.int32(-1), jnp.int32(0), jnp.int32(0))
-                (st, *_), (hits, ehits, quotas) = jax.lax.scan(
-                    body, init, (los, his, nvalid))
-                return st, hits, ehits, quotas
+                def body(s, x):
+                    clo, chi = x
+                    s, hits = step_ref(lspec, params, s, clo, chi)
+                    return fold(params, s), hits
+                st, hits = jax.lax.scan(body, st0, (los, his))
+                st, tail = step_ref(lspec, params, st, tlo, thi)
+                return leave(st, state), jnp.concatenate(
+                    [hits.reshape(-1), tail])
 
             _mesh_cache[key] = jax.jit(shard_map(
                 fn, mesh=mesh, in_specs=(P(), sspec, P(), P(), P(), P()),
+                out_specs=(sspec, P()), check_rep=False))
+        else:
+            def fn(params, state, los, his, tlo, thi, climb):
+                st0 = enter(state)
+
+                def body(carry, x):
+                    clo, chi = x
+                    s = carry[0]
+                    s, hits = step_ref(lspec, params, s, clo, chi)
+                    ehits = s["regs"][R_EHITS]
+                    quota = s["regs"][R_WQUOTA]
+                    # merge rides the climb epochs: fold first, then climb
+                    # + rebalance — same order as the single-device runner
+                    sm = fold(params, s)
+                    carry = _climb_step(params, lspec, (sm,) + carry[1:],
+                                        ehits, climb)
+                    return carry, (hits, ehits, quota)
+
+                init = (st0, jnp.int32(-1), jnp.int32(1), climb[0],
+                        jnp.int32(-1), jnp.int32(0), jnp.int32(0))
+                (st, *_), (hits, ehits, quotas) = jax.lax.scan(
+                    body, init, (los, his))
+                st, tail = step_ref(lspec, params, st, tlo, thi)
+                return (leave(st, state),
+                        jnp.concatenate([hits.reshape(-1), tail]),
+                        ehits, quotas)
+
+            _mesh_cache[key] = jax.jit(shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(), sspec, P(), P(), P(), P(), P()),
                 out_specs=(sspec, P(), P(), P()), check_rep=False))
     return _mesh_cache[key]
 
@@ -424,18 +529,22 @@ def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
     and final state — and both match the host twin, which merges after
     every ``merge_every``-th access and never on a partial tail.
 
-    ``mesh`` selects the multi-device shard_map runner (delta blocks
-    device-local, merge fold = the epoch all-gather); it uses the masked
-    final epoch like the pallas backend, so its hits and final state are
-    bit-identical to both single-device backends.
+    ``mesh`` selects the multi-device shard_map runner — exact
+    ("chunk") or speculative stale-global ("stale") exchange per
+    ``spec.mesh_exchange``, both collective-free on the per-access path;
+    it chunks the trace exactly like the jit backend (whole epochs in the
+    scan, tail outside without a merge), so chunk mode's hits and final
+    state are bit-identical to both single-device backends.
     """
     n = lo.shape[0]
     E = int(merge_every)
     if mesh is not None:
-        los, his, nvalid = _pad_epochs(lo, hi, n, E)
+        ne = n // E
+        nfull = ne * E
         state, hits = _mesh_runner(spec, mesh, False)(
-            params, state, los, his, nvalid)
-        return state, hits.reshape(-1)[:n]
+            params, state, lo[:nfull].reshape(ne, E),
+            hi[:nfull].reshape(ne, E), lo[nfull:], hi[nfull:])
+        return state, hits
     if backend == "pallas":
         los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits = _sharded_runner(spec, backend, interpret)(
@@ -645,19 +754,20 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
     tail into a masked final epoch whose climb is skipped.  Both emit
     identical per-access hit flags, final quota, and trajectory (full
     epochs only).  ``mesh`` selects the multi-device shard_map runner
-    (masked final epoch, like pallas) — the merge_halve_mesh all-gather
-    rides the climb epochs.
+    (whole epochs in the scan, tail outside without a climb, like jit) —
+    the merge fold rides the climb epochs.
     """
     n = lo.shape[0]
     E = int(climb.epoch_len)
     cvec = jnp.asarray(climb.resolve(cfg))
     if mesh is not None:
-        los, his, nvalid = _pad_epochs(lo, hi, n, E)
+        ne = n // E
+        nfull = ne * E
         state, hits, ehits, quotas = _mesh_runner(spec, mesh, True)(
-            params, state, los, his, nvalid, cvec)
-        nfull = n // E
-        traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
-        return state, hits.reshape(-1)[:n], traj
+            params, state, lo[:nfull].reshape(ne, E),
+            hi[:nfull].reshape(ne, E), lo[nfull:], hi[nfull:], cvec)
+        traj = (ehits, quotas) if ne else (None, None)
+        return state, hits, traj
     if backend == "pallas":
         los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits, ehits, quotas = _adaptive_runner(
@@ -764,6 +874,7 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
              "assoc": cfg.assoc, "device": jax.default_backend()}
     if cfg.mesh is not None:
         extra["mesh_devices"] = cfg.mesh_devices
+        extra["mesh_exchange"] = cfg.mesh_exchange
     if cfg.shards > 1:
         extra["shards"] = cfg.shards
         # adaptive+sharded: the fold rides the climb epochs, not merge_epoch
@@ -824,17 +935,26 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
             for C in capacities for wf in window_fracs]
     gridlab = [(C, wf) for C in capacities for wf in window_fracs]
     sharded = any(c.shards > 1 for c in grid)
+    meshed = any(c.mesh is not None for c in grid)
+    if meshed:
+        for c in grid:
+            c.mesh_devices    # eager: reject bad mesh/shards combos up front
     if mode == "auto":
-        # adaptive/sharded grids can't share geometry (quota histories
-        # diverge; merge epochs need the epoch-chunked runner), so auto
-        # resolves to the only valid mode even on accelerators
-        mode = "sequential" if (adaptive or sharded) else (
+        # adaptive/sharded/meshed grids can't share geometry (quota
+        # histories diverge; merge epochs need the epoch-chunked runner;
+        # mesh runs need the shard_map runner), so auto resolves to the
+        # only valid mode even on accelerators
+        mode = "sequential" if (adaptive or sharded or meshed) else (
             "vmap" if jax.default_backend() == "tpu" else "sequential")
     if adaptive:
         if mode == "vmap":
             raise ValueError("adaptive sweeps run per-config compiled "
                              "programs: use mode='sequential'")
         climb = climb or ClimbSpec()
+    if meshed and mode == "vmap":
+        raise ValueError("mesh sweeps run per-config shard_map programs "
+                         "(the vmapped scan would silently run the "
+                         "single-device path): use mode='sequential'")
     if sharded and mode == "vmap":
         raise ValueError("sharded sweeps run per-config epoch-chunked "
                          "programs: use mode='sequential'")
@@ -931,6 +1051,9 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
             extra["final_quota"] = int(regs[g, R_WQUOTA])
         if grid[g].shards > 1:
             extra["shards"] = grid[g].shards
+        if grid[g].mesh is not None:
+            extra["mesh_devices"] = grid[g].mesh_devices
+            extra["mesh_exchange"] = grid[g].mesh_exchange
         out.append(SimResult(
             policy="w-tinylfu(device)" + ("+climb" if adaptive else ""),
             cache_size=C, trace=trace_name,

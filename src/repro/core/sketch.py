@@ -209,11 +209,22 @@ class ShardedFrequencySketch:
 
     Unlike :class:`FrequencySketch`, :meth:`add` never resets on its own —
     aging belongs to :meth:`merge_halve`.
+
+    ``stale_estimates=True`` makes :meth:`estimate` read ONLY the merged
+    global structures (stale by at most one merge epoch), ignoring the
+    un-merged deltas — the host twin of the device mesh runner's
+    speculative ``mesh_exchange="stale"`` admission
+    (``kernels.sketch_step._estimate_pair_stale``), whose per-access path
+    is collective-free because estimates never touch another device's
+    delta.  :meth:`add` still writes the deltas and reads global+delta for
+    the conservative-update minimum, exactly like the device's
+    ``_sketch_add_mesh``.
     """
 
     _MEMO_LIMIT = 2_000_000               # probe memo safety valve
 
-    def __init__(self, cfg: SketchConfig, shards: int):
+    def __init__(self, cfg: SketchConfig, shards: int,
+                 stale_estimates: bool = False):
         assert shards >= 2 and shards & (shards - 1) == 0, \
             f"shards {shards} must be a power of two >= 2"
         assert cfg.width % shards == 0, \
@@ -223,6 +234,7 @@ class ShardedFrequencySketch:
         assert cfg.conservative, "sharded sketch is conservative-update only"
         self.cfg = cfg
         self.shards = shards
+        self.stale_estimates = stale_estimates
         self.width_shard = cfg.width // shards
         self.dk_bits_shard = cfg.doorkeeper_bits // shards
         n_probes = cfg.rows * cfg.probes_per_row
@@ -302,6 +314,13 @@ class ShardedFrequencySketch:
 
     def estimate(self, key: int) -> int:
         g, d = self.gtable, self.dtable
+        if self.stale_estimates:           # global-only: <= one epoch stale
+            est = min(g[i] for i in self._probes(key))
+            if self.gdk is not None:
+                gdk = self.gdk
+                if all(gdk[i] for i in self._dk_probes(key)):
+                    est += 1
+            return est
         est = min(g[i] + d[i] for i in self._probes(key))
         if self.gdk is not None:
             gdk, ddk = self.gdk, self.ddk
@@ -379,7 +398,8 @@ class ExactHistogram:
 def default_sketch(cache_size: int, sample_factor: int = 8,
                    counters_per_item: float = 2.0, rows: int = 4,
                    doorkeeper: bool = True, dk_bits_per_item: float = 4.0,
-                   seed: int = 0, shards: int = 1):
+                   seed: int = 0, shards: int = 1,
+                   stale_estimates: bool = False):
     """Sizing rule used throughout the benchmarks.
 
     Defaults land at ~1.5 bytes of metadata per sample element (4-bit main
@@ -390,6 +410,8 @@ def default_sketch(cache_size: int, sample_factor: int = 8,
     ``shards > 1`` returns the sharded twin (:class:`ShardedFrequencySketch`,
     same total footprint, shard-partitioned): the owning policy must then
     drive :meth:`~ShardedFrequencySketch.merge_halve` every merge epoch.
+    ``stale_estimates=True`` (sharded only) selects the global-only reads
+    of the speculative stale-global admission mode.
     """
     sample = sample_factor * cache_size
     cap = max(1, sample_factor - (1 if doorkeeper else 0))
@@ -407,5 +429,9 @@ def default_sketch(cache_size: int, sample_factor: int = 8,
         seed=seed,
     )
     if shards > 1:
-        return ShardedFrequencySketch(cfg, shards)
+        return ShardedFrequencySketch(cfg, shards,
+                                      stale_estimates=stale_estimates)
+    if stale_estimates:
+        raise ValueError("stale_estimates requires shards > 1 (an unsharded "
+                         "sketch has no delta to be stale against)")
     return FrequencySketch(cfg)

@@ -26,6 +26,12 @@ merge_halve fold runs — mirroring the device engine's ``StepSpec.shards``
 mode, whose per-access hit sequence it reproduces bit-for-bit under
 collision-free sketches (reset timing included: §3.3 aging is deferred to
 the merge boundaries on both sides).
+
+``stale_admission=True`` (sharded only) makes admission estimates read the
+merged global sketch ONLY — stale by at most one merge epoch — the host
+twin of the device mesh runner's speculative ``mesh_exchange="stale"``
+mode, whose per-access path is collective-free.  Under collision-free
+sketches its hit sequence matches the stale-mode mesh run bit-for-bit.
 """
 from __future__ import annotations
 
@@ -47,7 +53,8 @@ class WTinyLFU(ReplacementPolicy):
                  sample_factor: int = 8, protected_frac: float = 0.8,
                  seed: int = 0, counters_per_item: float = 1.0,
                  doorkeeper: bool = True, assoc: int | None = None,
-                 shards: int = 1, merge_every: int = 0):
+                 shards: int = 1, merge_every: int = 0,
+                 stale_admission: bool = False):
         super().__init__(capacity)
         self.window_cap = max(1, int(round(capacity * window_frac)))
         self.main_cap = max(1, capacity - self.window_cap)
@@ -79,7 +86,8 @@ class WTinyLFU(ReplacementPolicy):
             self._t = 0                    # device-matching LRU stamp
         sketch = default_sketch(capacity, sample_factor=sample_factor,
                                 seed=seed, counters_per_item=counters_per_item,
-                                doorkeeper=doorkeeper, shards=shards)
+                                doorkeeper=doorkeeper, shards=shards,
+                                stale_estimates=stale_admission)
         self.admission = TinyLFUAdmission(sketch)
 
     def __contains__(self, key):
@@ -184,7 +192,8 @@ class AdaptiveWTinyLFU(ReplacementPolicy):
                  doorkeeper: bool = True, window_max_frac: float = 0.5,
                  epoch_len: int = 4096, delta0: int = 0, wmin: int = 1,
                  wmax: int = 0, tol: int = 0, restart: int = 0,
-                 warm_epochs: int = 3, shards: int = 1):
+                 warm_epochs: int = 3, shards: int = 1,
+                 stale_admission: bool = False):
         super().__init__(capacity)
         self.shards = shards          # sharded sketch: merge rides the epochs
         self.window_cap0 = max(1, int(round(capacity * window_frac)))
@@ -209,7 +218,8 @@ class AdaptiveWTinyLFU(ReplacementPolicy):
         self.quota_trajectory: list[int] = []
         sketch = default_sketch(capacity, sample_factor=sample_factor,
                                 seed=seed, counters_per_item=counters_per_item,
-                                doorkeeper=doorkeeper, shards=shards)
+                                doorkeeper=doorkeeper, shards=shards,
+                                stale_estimates=stale_admission)
         self.admission = TinyLFUAdmission(sketch)
 
     def __contains__(self, key):

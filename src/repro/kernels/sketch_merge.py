@@ -85,15 +85,19 @@ def merge_halve_mesh(spec: StepSpec, params: jnp.ndarray,
     """Multi-device :func:`merge_halve`: the once-per-epoch all-gather.
 
     Runs inside the shard_map body of the mesh runner
-    (``core.device_simulate._run_sharded`` with a mesh): each device
-    all-gathers the other devices' shard-major delta blocks
-    (``dcounters``/``ddoorkeeper``, the ONLY sharded state), reorders them
-    into the single-device delta-half layout, and then applies the exact
-    single-device fold — saturating merge into the replicated global
-    halves, deferred halvings, doorkeeper OR/clear — so every device ends
-    the epoch holding an identical refreshed global replica and zeroed
-    local deltas.  O(width) exchanged once per epoch; the per-access path
-    stays free of state exchange.
+    (``core.device_simulate._mesh_runner`` with
+    ``mesh_exchange="stale"`` — the ONLY collective of that mode, and of
+    the whole mesh run): each device all-gathers the other devices'
+    shard-major delta blocks (``dcounters``/``ddoorkeeper``, the ONLY
+    sharded state), reorders them into the single-device delta-half
+    layout, and then applies the exact single-device fold — saturating
+    merge into the replicated global halves, deferred halvings, doorkeeper
+    OR/clear — so every device ends the epoch holding an identical
+    refreshed global replica and zeroed local deltas.  O(width) exchanged
+    once per epoch; the per-access path exchanges nothing (stale-global
+    estimates reconcile here).  The exact ``mesh_exchange="chunk"`` mode
+    does not use this fold at all — it replays the single-device
+    :func:`merge_halve` on its replicated [global || delta] replica.
     """
     assert spec.mesh_devices, "merge_halve_mesh requires StepSpec.mesh_devices"
     cd = jax.lax.all_gather(state["dcounters"], MESH_AXIS,

@@ -224,13 +224,26 @@ class StepSpec:
         (``distributed.mesh.make_shard_mesh``), the sketch delta halves
         live as shard-major arrays partitioned along the mesh axis
         (``dcounters``/``ddoorkeeper`` state keys — per-access writes are
-        device-local), the global halves stay replicated, and the one
-        per-access cross-device exchange is the tiny admission-estimate
-        ``psum`` (the shard owning a candidate/victim contributes its
-        delta-composed estimate).  Requires ``shards % mesh_devices == 0``
-        (block placement: device ``d`` owns shards
-        ``[d*S/D, (d+1)*S/D)``, matching
+        device-local), the global halves stay replicated, and the
+        per-access path exchanges NOTHING: all cross-device traffic is
+        per-epoch-chunk (``mesh_exchange``).  Requires
+        ``shards % mesh_devices == 0`` (block placement: device ``d``
+        owns shards ``[d*S/D, (d+1)*S/D)``, matching
         ``distributed.mesh.shard_placement``).  0 = single-device layout.
+    ``mesh_exchange`` (default "chunk")
+        Cross-device exchange cadence of the mesh run (inert at
+        ``mesh_devices=0``).  ``"chunk"`` — exact chunked exchange: the
+        runner all-gathers the shard deltas ONCE per run, every device
+        replays each merge epoch as the literal (replicated) single-device
+        sharded program, and re-splits its local delta block at the end;
+        bit-identical to the single-device sharded run.  ``"stale"`` —
+        speculative stale-global admission: per-access estimates read only
+        the replicated global halves (:func:`_estimate_pair_stale` — stale
+        by at most one merge epoch, zero per-access collectives) and
+        reconcile at the once-per-epoch
+        :func:`repro.kernels.sketch_merge.merge_halve_mesh` all-gather;
+        hit ratios land in the goldens-±0.01 tier (host twin:
+        ``core.sketch.ShardedFrequencySketch(stale_estimates=True)``).
     """
     width: int                    # sketch counters per row (pow2, mult of 8)
     rows: int = 4
@@ -243,8 +256,13 @@ class StepSpec:
     adaptive: bool = False        # runtime window quota (regs[R_WQUOTA])
     shards: int = 1               # sketch shards (pow2); >1 = delta/global
     mesh_devices: int = 0         # shard_map devices; 0 = single-device
+    mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
 
     def __post_init__(self):
+        assert self.mesh_exchange in ("chunk", "stale"), (
+            f"mesh_exchange {self.mesh_exchange!r} must be 'chunk' (exact "
+            "chunked exchange) or 'stale' (speculative stale-global "
+            "admission)")
         if self.mesh_devices:
             assert self.shards > 1, "mesh execution requires shards > 1"
             assert self.shards % self.mesh_devices == 0, (
@@ -819,53 +837,45 @@ def _sketch_add_mesh(spec: StepSpec, params, counters, dk, size, kidx, kdkb):
             size + 1)
 
 
-def _estimate_pair_mesh(spec: StepSpec, counters, dk, idx2, dkb2):
-    """Mesh twin of the sharded ``_estimate_pair`` branch — the ONE
-    per-access cross-device exchange.
+def _estimate_pair_stale(spec: StepSpec, counters, dk, idx2, dkb2):
+    """Mesh twin of the sharded ``_estimate_pair`` branch — speculative
+    stale-global admission (``mesh_exchange="stale"``), ZERO cross-device
+    exchange.
 
-    Each estimated entry (candidate, victim) belongs to exactly one shard,
-    whose owning device composes global + local delta (and the doorkeeper
-    bit) into the full estimate; everyone else contributes 0 and a
-    ``psum`` over :data:`MESH_AXIS` hands every device the two exact int32
-    estimates, so the (replicated) admission verdict — and with it the
-    whole cache-table evolution — stays bit-identical to the single-device
-    sharded run.
+    Estimates read ONLY the replicated global halves: every device computes
+    the identical (replicated) verdict locally, so the cache tables never
+    diverge and the per-access path stays collective-free.  The local delta
+    — even on the device that owns the entry's shard — is deliberately
+    ignored: composing it would make the owner's verdict differ from the
+    other devices' and fork the replicated tables.  The estimate is
+    therefore stale by at most one merge epoch; the once-per-epoch
+    :func:`repro.kernels.sketch_merge.merge_halve_mesh` all-gather
+    reconciles it, bounding the hit-ratio deviation to the goldens-±0.01
+    tier (tests/test_distributed.py pins this, next to the bit-exact host
+    twin ``core.sketch.ShardedFrequencySketch(stale_estimates=True)``).
+
+    This replaced the original per-access 2-int ``psum`` (one collective
+    per access — measured 62.8x the single-device sharded cost on the
+    forced-2-device bench); the exact path is now the "chunk" mode, which
+    never calls the mesh estimator at all.
     """
-    cg, cd = counters
-    dkg, dd = dk
-    L = spec.local_shards
-    base = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32) * L
-    ks2 = idx2[:, 0] // spec.width_shard         # (2,) owning shards
-    own2 = (ks2 >= base) & (ks2 < base + L)
-    lks2 = jnp.clip(ks2 - base, 0, L - 1)
-    cdf = cd.reshape(-1)
-    ddf = dd.reshape(-1)
-
+    cg, _cd = counters
+    dkg, _dd = dk
     flat2 = _row_offsets(spec)[None, :] + _word_of(spec, idx2)
     gw = _ds_gather(cg, flat2.reshape(-1)).reshape(2, spec.rows)
-    h2 = idx2 - ks2[:, None] * spec.width_shard
-    dflat2 = ((lks2[:, None] * spec.rows
-               + jnp.arange(spec.rows, dtype=jnp.int32)[None, :])
-              * spec.wps_shard + _word_of(spec, h2))
-    dw = _ds_gather(cdf, dflat2.reshape(-1)).reshape(2, spec.rows)
-    vals = (_counter_vals(spec, gw, idx2)
-            + jnp.where(own2[:, None], _counter_vals(spec, dw, idx2), 0))
+    vals = _counter_vals(spec, gw, idx2)
     est = vals[:, 0]
     for r in range(1, spec.rows):
         est = jnp.minimum(est, vals[:, r])
     if spec.dk_bits:
         bb = (dkb2 >> 5).reshape(-1)
         gbits = _ds_gather(dkg, bb).reshape(2, spec.dkp)
-        ldw2 = (lks2[:, None] * spec.dkw_shard
-                + ((dkb2 - ks2[:, None] * spec.dk_bits_shard) >> 5))
-        dbits = _ds_gather(ddf, ldw2.reshape(-1)).reshape(2, spec.dkp)
-        w2 = gbits | jnp.where(own2[:, None], dbits, 0)
-        bits = (w2 >> (dkb2 & 31)) & 1
+        bits = (gbits >> (dkb2 & 31)) & 1
         ok = bits[:, 0]
         for p in range(1, bits.shape[1]):
             ok = ok & bits[:, p]
         est = est + ok
-    return jax.lax.psum(jnp.where(own2, est, 0), MESH_AXIS)
+    return est
 
 
 def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
@@ -886,11 +896,13 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     "XLA-CPU cost-model cliffs"); below that the fused gathers are cheaper
     and every pre-cliff program stays byte-identical to the PR 4 one.
 
-    Mesh mode dispatches to :func:`_estimate_pair_mesh` — the one
-    per-access cross-device exchange of the multi-device sharded run.
+    Mesh mode dispatches to :func:`_estimate_pair_stale` — stale-global
+    admission, the only per-access estimator that ever runs inside a
+    shard_map body (``mesh_exchange="chunk"`` replays the single-device
+    program with ``mesh_devices=0``, so it takes the sharded branch here).
     """
     if spec.mesh_devices:
-        return _estimate_pair_mesh(spec, counters, dk, idx2, dkb2)
+        return _estimate_pair_stale(spec, counters, dk, idx2, dkb2)
     flat2 = _row_offsets(spec)[None, :] + _word_of(spec, idx2)
     ff = flat2.reshape(-1)
     k = ff.shape[0]

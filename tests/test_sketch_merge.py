@@ -199,6 +199,42 @@ def test_sharded_sketch_merge_halve_matches_frequency_sketch_reset():
         assert sharded.estimate(int(k)) == single.estimate(int(k))
 
 
+def test_stale_estimates_read_global_only():
+    """``stale_estimates=True`` (the host twin of the mesh runner's
+    speculative ``mesh_exchange="stale"`` admission): estimate() reads ONLY
+    the merged global structures — zero before the first merge, converging
+    to the fresh estimate at every merge boundary — while add() keeps the
+    exact global+delta conservative update, so the sketch STATE evolves
+    identically to the fresh-estimate twin."""
+    cfg = SketchConfig(sample_size=10**9, counters=4 * (1 << 16), rows=4,
+                       cap=15, doorkeeper_bits=1 << 14)
+    fresh = ShardedFrequencySketch(cfg, shards=4)
+    stale = ShardedFrequencySketch(cfg, shards=4, stale_estimates=True)
+    rng = np.random.default_rng(21)
+    keys = rng.integers(0, 300, size=4000)
+    for k in keys:
+        fresh.add(int(k))
+        stale.add(int(k))
+    # pre-merge: the un-merged deltas are invisible to the stale reader
+    assert all(stale.estimate(int(k)) == 0 for k in np.unique(keys))
+    assert any(fresh.estimate(int(k)) > 0 for k in np.unique(keys))
+    # ... but the tables themselves are identical (adds are exact)
+    assert stale.gtable == fresh.gtable and stale.dtable == fresh.dtable
+    assert bytes(stale.gdk) == bytes(fresh.gdk)
+    assert bytes(stale.ddk) == bytes(fresh.ddk)
+    fresh.merge_halve()
+    stale.merge_halve()
+    # post-merge: deltas folded in, the two readers agree again
+    for k in np.unique(keys):
+        assert stale.estimate(int(k)) == fresh.estimate(int(k))
+    # unsharded sketches have no delta to be stale against
+    from repro.core.sketch import default_sketch
+    with pytest.raises(ValueError, match="stale_estimates"):
+        default_sketch(100, stale_estimates=True)
+    assert default_sketch(100, shards=2,
+                          stale_estimates=True).stale_estimates
+
+
 @pytest.mark.parametrize("assoc", [None, 8])
 def test_sharded_no_aging_matches_unsharded_bitwise(assoc):
     """Device differential: with aging disabled (sample=0) the merge fold
