@@ -28,9 +28,13 @@ def _sketch_admission(sample, bytes_per_elem, dk_frac=0.33, seed=0):
     return TinyLFUAdmission(FrequencySketch(cfg))
 
 
-def run(quick: bool = False):
-    C = 1000
-    length = 250_000 if quick else 1_000_000
+def run(quick: bool = False, tiny: bool = False):
+    """``tiny=True`` is the CI smoke configuration (ISSUE 7): a 30k trace
+    over a 200-entry cache with one byte budget — seconds instead of
+    minutes, enough to prove the figure still runs end to end and orders
+    the error tiers (float-exact >= int-exact ~ best sketch)."""
+    C = 200 if tiny else 1000
+    length = 30_000 if tiny else (250_000 if quick else 1_000_000)
     tr = zipf_trace(length, n_items=1_000_000, alpha=0.9, seed=61)
     warm = length // 5
     rows = []
@@ -43,7 +47,7 @@ def run(quick: bool = False):
                      "accesses": r.accesses, "wall_s": r.wall_s})
         print(f"  {name:<34s} hit={r.hit_ratio:.4f}", flush=True)
 
-    for sample in ([9 * C] if quick else [9 * C, 17 * C]):
+    for sample in ([9 * C] if (quick or tiny) else [9 * C, 17 * C]):
         # float-exact = sampling error only
         measure(f"exact-float(W={sample})",
                 lambda s=sample: _ExactAdmission(s, integer_division=False),
@@ -53,8 +57,9 @@ def run(quick: bool = False):
                 lambda s=sample: _ExactAdmission(s, integer_division=True),
                 sample)
         # sketch adds approximation error, vs byte budget
-        budgets = [0.5, 1.0, 1.5] if quick else [0.25, 0.5, 0.75, 1.0,
-                                                 1.25, 1.5, 2.0]
+        budgets = ([1.0] if tiny
+                   else [0.5, 1.0, 1.5] if quick
+                   else [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0])
         for b in budgets:
             measure(f"sketch(W={sample},B={b})",
                     lambda s=sample, bb=b: _sketch_admission(s, bb), sample)
@@ -63,4 +68,5 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick=True, tiny="--tiny" in sys.argv)

@@ -36,6 +36,11 @@ broken:
   62.8x) scales the overhead with the epoch length, far past any machine
   noise — so a miss WARNS at > 3 and only fails when corroborated by
   ``> 10`` (or ``--strict``).  Missing in pre-ISSUE-6 snapshots.
+* ``checkpoint_overhead_vs_plain`` (ISSUE 7) is RECORDED in the gate-OK
+  line but never gated: the epoch-boundary checkpoint cost is dominated by
+  CI-runner disk speed, which is not a property of this code.  The
+  acceptance bar (<= 1.1x at the auto cadence) is checked by eye on the
+  printed snapshot.
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -194,7 +199,8 @@ def main(argv=None) -> int:
                                        "sharded_overhead_vs_unsharded",
                                        "mesh_overhead_vs_sharded",
                                        "mesh_stale_overhead_vs_sharded",
-                                       "mesh_parity_ok")}),
+                                       "mesh_parity_ok",
+                                       "checkpoint_overhead_vs_plain")}),
             flush=True)
     return 1 if failures else 0
 

@@ -80,6 +80,18 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_meta(directory: str, step: int) -> dict:
+    """The ``extra_meta`` dict a checkpoint was saved with (empty if none).
+
+    Readable without touching the leaf blobs — resume paths use it to
+    learn the trace cursor and to verify the saved configuration
+    fingerprint BEFORE building restore templates."""
+    ckpt = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest.get("extra", {})
+
+
 def restore_checkpoint(directory: str, step: int, template: Any,
                        shardings: Any = None) -> Any:
     """Restore into the structure of ``template`` (a pytree of arrays or
@@ -139,7 +151,12 @@ class AsyncCheckpointer:
 
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None):
         self.wait()
-        host_tree = jax.tree_util.tree_map(np.asarray, tree)   # snapshot now
+        # snapshot NOW: jax arrays are immutable (a host view is a stable
+        # snapshot), but mutable numpy leaves must be copied or the caller
+        # could race the background writer
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.array(x) if isinstance(x, np.ndarray)
+            else np.asarray(x), tree)
 
         def _write():
             try:

@@ -101,6 +101,18 @@ class DeviceWTinyLFU:
       ``WTinyLFU(stale_admission=True)``.
 
     Requires ``shards % n_devices == 0`` and ``backend="jit"``.
+
+    ``integrity=True`` (requires ``shards > 1``) arms the self-healing
+    integrity fold: per-shard checksums over the global sketch halves are
+    verified and refreshed at every merge boundary, and a mismatched
+    (corrupted) shard is quarantined — its slices zeroed, its counts
+    re-learned by the §3.3 aging within a few sample periods
+    (kernels/sketch_merge.py).
+
+    ``run()`` is the general entry point — it adds epoch-boundary
+    checkpointing (``checkpoint_dir=``/``checkpoint_every=``) on top of
+    what ``simulate_trace`` does; :func:`resume_trace` restores the latest
+    checkpoint and continues bit-identically.
     """
     capacity: int
     window_frac: float = 0.01
@@ -118,6 +130,46 @@ class DeviceWTinyLFU:
     merge_every: int = 0          # sharded merge cadence; 0 = auto
     mesh: object = None           # ("shard",) mesh; None = single device
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
+    integrity: bool = False       # checksum + shard-quarantine merge fold
+
+    def __post_init__(self):
+        # eager validation (ISSUE 7): bad values used to surface as XLA
+        # shape errors (or assertion tracebacks) from deep inside the
+        # compile path — fail at construction with actionable messages
+        # instead.  simulate_sweep builds one DeviceWTinyLFU per grid
+        # point, so sweeps inherit every check.
+        if self.capacity < 1:
+            raise ValueError(f"capacity {self.capacity} must be >= 1")
+        if not 0.0 < self.window_frac < 1.0:
+            raise ValueError(f"window_frac {self.window_frac} must be in "
+                             "(0, 1) — it is the window's share of capacity")
+        if not 0.0 < self.protected_frac < 1.0:
+            raise ValueError(f"protected_frac {self.protected_frac} must be "
+                             "in (0, 1)")
+        if self.sample_factor < 1:
+            raise ValueError(f"sample_factor {self.sample_factor} must be "
+                             ">= 1 (W = sample_factor * capacity)")
+        if self.counter_bits not in (4, 8):
+            raise ValueError(f"counter_bits {self.counter_bits} must be 4 "
+                             "(paper §3.4.1 nibbles) or 8 (byte counters)")
+        if self.rows < 1:
+            raise ValueError(f"rows {self.rows} must be >= 1")
+        if self.assoc is not None and self.assoc < 1:
+            raise ValueError(f"assoc {self.assoc} must be >= 1 ways (or "
+                             "None for the flat exact tables)")
+        if self.shards < 1 or (self.shards & (self.shards - 1)):
+            raise ValueError(f"shards {self.shards} must be a power of two "
+                             "(shard membership is a masked hash)")
+        if self.merge_every < 0:
+            raise ValueError(f"merge_every {self.merge_every} must be >= 0 "
+                             "(0 = auto min(4096, sample_size))")
+        if self.mesh_exchange not in ("chunk", "stale"):
+            raise ValueError(f"mesh_exchange {self.mesh_exchange!r} must be "
+                             "'chunk' or 'stale'")
+        if self.integrity and self.shards <= 1:
+            raise ValueError("integrity=True requires shards > 1: the "
+                             "checksums cover the per-shard global sketch "
+                             "halves, which only exist in sharded mode")
 
     @property
     def window_cap(self) -> int:
@@ -213,7 +265,7 @@ class DeviceWTinyLFU:
             shards=self.shards, mesh_devices=self.mesh_devices,
             # normalized so single-device specs share one compile cache key
             mesh_exchange=self.mesh_exchange if self.mesh is not None
-            else "chunk")
+            else "chunk", integrity=self.integrity)
 
     @property
     def mesh_devices(self) -> int:
@@ -243,6 +295,46 @@ class DeviceWTinyLFU:
         return make_step_params(self.window_cap, self.main_cap, self.prot_cap,
                                 self.sample_size, self.cap, warmup,
                                 counter_bits=self.counter_bits)
+
+    def run(self, trace, *, warmup: int = 0, backend: str = "jit",
+            chunk: int = 512, interpret: bool | None = None,
+            trace_name: str = "?", climb: "ClimbSpec | None" = None,
+            checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+            return_state: bool = False, on_checkpoint=None,
+            fault_hook=None):
+        """Simulate ``trace`` with optional epoch-boundary checkpointing.
+
+        Without ``checkpoint_dir`` this is ``simulate_trace`` for this
+        configuration (one compiled program over the whole trace).  With
+        it, the trace is segmented at merge-epoch boundaries — every chunk
+        boundary is already a clean state handoff, so segmented execution
+        is bit-identical to the single-program run — and the full engine
+        state tree (sketch halves, cache tables, climb registers, hit
+        prefix, trace cursor) is snapshotted via
+        ``checkpoint.store.AsyncCheckpointer`` after each segment.
+        :func:`resume_trace` restores the latest complete checkpoint and
+        continues the run, reproducing the uninterrupted hit sequence and
+        final sketch words exactly.
+
+        ``checkpoint_every`` (accesses) must be a positive multiple of the
+        run's epoch — ``climb.epoch_len`` (adaptive), ``merge_epoch``
+        (sharded), anything (unsharded static) — 0 auto-sizes to roughly
+        32k accesses rounded to whole epochs.  Checkpointing requires
+        ``backend="jit"`` (the segmented scan is the jit scan).
+
+        ``on_checkpoint(cursor)`` fires after each snapshot is queued (the
+        fault-injection harness prints its kill markers from it);
+        ``fault_hook(cursor, state) -> state | None`` runs between
+        segments on the canonical single-device state layout and may
+        return a mutated state — the injection point for corruption
+        experiments (``core.faults``).
+        """
+        return _run_checkpointed(
+            self, trace, warmup=warmup, backend=backend, chunk=chunk,
+            interpret=interpret, trace_name=trace_name, climb=climb,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            return_state=return_state, on_checkpoint=on_checkpoint,
+            fault_hook=fault_hook)
 
 
 def _trace_lanes(trace: np.ndarray):
@@ -331,6 +423,27 @@ def _from_mesh_state(spec: StepSpec, state: dict) -> dict:
     ddk = (state["ddoorkeeper"].reshape(spec.dk_words) if spec.dk_bits
            else jnp.zeros_like(state["doorkeeper"]))
     out["doorkeeper"] = jnp.concatenate([state["doorkeeper"], ddk])
+    return out
+
+
+def _to_mesh_state(spec: StepSpec, state: dict) -> dict:
+    """Inverse of :func:`_from_mesh_state`: the canonical single-device
+    [global || delta] layout -> the mesh (shard-major delta) layout.  This
+    is the elastic-restore path — checkpoints always store the canonical
+    layout, so a snapshot taken on ANY mesh size (including a plain
+    single-device run) re-shards onto any other mesh whose size divides
+    ``spec.shards``."""
+    H, HD = spec.counter_words, spec.dk_words
+    out = {k: v for k, v in state.items()
+           if k not in ("counters", "doorkeeper")}
+    out["counters"] = state["counters"][:H]
+    out["doorkeeper"] = state["doorkeeper"][:HD]
+    out["dcounters"] = state["counters"][H:].reshape(
+        spec.rows, spec.shards, spec.wps_shard).transpose(1, 0, 2)
+    out["ddoorkeeper"] = (
+        state["doorkeeper"][HD:].reshape(spec.shards, spec.dkw_shard)
+        if spec.dk_bits
+        else jnp.zeros((spec.shards, spec.dkw_shard), jnp.int32))
     return out
 
 
@@ -441,7 +554,7 @@ def _mesh_runner(spec: StepSpec, mesh, adaptive: bool):
                 fn, mesh=mesh, in_specs=(P(), sspec, P(), P(), P(), P()),
                 out_specs=(sspec, P()), check_rep=False))
         else:
-            def fn(params, state, los, his, tlo, thi, climb):
+            def fn(params, state, los, his, tlo, thi, climb, carry0):
                 st0 = enter(state)
 
                 def body(carry, x):
@@ -457,19 +570,19 @@ def _mesh_runner(spec: StepSpec, mesh, adaptive: bool):
                                         ehits, climb)
                     return carry, (hits, ehits, quota)
 
-                init = (st0, jnp.int32(-1), jnp.int32(1), climb[0],
-                        jnp.int32(-1), jnp.int32(0), jnp.int32(0))
-                (st, *_), (hits, ehits, quotas) = jax.lax.scan(
+                init = (st0, carry0[0], carry0[1], carry0[2],
+                        carry0[3], carry0[4], carry0[5])
+                (st, *regs), (hits, ehits, quotas) = jax.lax.scan(
                     body, init, (los, his))
                 st, tail = step_ref(lspec, params, st, tlo, thi)
                 return (leave(st, state),
                         jnp.concatenate([hits.reshape(-1), tail]),
-                        ehits, quotas)
+                        ehits, quotas, jnp.stack(regs))
 
             _mesh_cache[key] = jax.jit(shard_map(
                 fn, mesh=mesh,
-                in_specs=(P(), sspec, P(), P(), P(), P(), P()),
-                out_specs=(sspec, P(), P(), P()), check_rep=False))
+                in_specs=(P(), sspec, P(), P(), P(), P(), P(), P()),
+                out_specs=(sspec, P(), P(), P(), P()), check_rep=False))
     return _mesh_cache[key]
 
 
@@ -510,8 +623,10 @@ def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
                 # work and sinks the flatness arm (measured 4x at C=65536)
                 merged = merge_halve(spec, params, st)
                 full = nv >= jnp.int32(clo.shape[0])
+                gated = ("counters", "doorkeeper", "regs") + \
+                    (("csum",) if spec.integrity else ())
                 st = {**st, **{k: jnp.where(full, merged[k], st[k])
-                               for k in ("counters", "doorkeeper", "regs")}}
+                               for k in gated}}
                 return st, hits
             return jax.lax.scan(body, state, (los, his, nvalid))
         _sharded_cache[key] = run
@@ -707,7 +822,7 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
     key = (spec, backend, interpret)
     if key not in _adaptive_cache:
         @jax.jit
-        def run(params, state, los, his, nvalid, climb):
+        def run(params, state, los, his, nvalid, climb, carry0):
             def body(carry, x):
                 clo, chi, nv = x
                 st = carry[0]
@@ -735,19 +850,31 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
                     (st,) + carry[1:])
                 return carry, (hits, ehits, quota)
 
-            init = (state, jnp.int32(-1), jnp.int32(1), climb[0],
-                    jnp.int32(-1), jnp.int32(0), jnp.int32(0))
-            (st, *_), (hits, ehits, quotas) = jax.lax.scan(
+            # the climber's scalar registers enter/leave as a (6,) int32
+            # vector [prev, dirn, delta, ewma, trend, k] so a checkpointed
+            # run can hand them across segment boundaries bit-exactly
+            init = (state, carry0[0], carry0[1], carry0[2],
+                    carry0[3], carry0[4], carry0[5])
+            (st, *regs), (hits, ehits, quotas) = jax.lax.scan(
                 body, init, (los, his, nvalid))
-            return st, hits, ehits, quotas
+            return st, hits, ehits, quotas, jnp.stack(regs)
         _adaptive_cache[key] = run
     return _adaptive_cache[key]
 
 
+def _climb_carry0(cvec) -> jnp.ndarray:
+    """Fresh-run climber registers: [prev=-1, dirn=1, delta=delta0,
+    ewma=-1, trend=0, k=0] — the pre-ISSUE-7 scan init, as a vector."""
+    return jnp.stack([jnp.int32(-1), jnp.int32(1),
+                      jnp.asarray(cvec[0], jnp.int32), jnp.int32(-1),
+                      jnp.int32(0), jnp.int32(0)])
+
+
 def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
                   lo, hi, climb: ClimbSpec, backend: str, interpret: bool,
-                  mesh=None):
-    """Epoch-chunked adaptive simulation; returns (state, hits, trajectory).
+                  mesh=None, carry=None):
+    """Epoch-chunked adaptive simulation; returns (state, hits, trajectory,
+    carry) where ``carry`` is the (6,) int32 climber-register vector.
 
     The jit backend scans whole epochs and runs the (< epoch_len) tail as
     one extra dispatch without a final climb; the pallas backend folds the
@@ -756,35 +883,43 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
     epochs only).  ``mesh`` selects the multi-device shard_map runner
     (whole epochs in the scan, tail outside without a climb, like jit) —
     the merge fold rides the climb epochs.
+
+    ``carry=None`` starts a fresh climb; a checkpointed run passes the
+    previous segment's carry so that splitting the trace at epoch
+    boundaries reproduces the single-program run bit-for-bit.
     """
     n = lo.shape[0]
     E = int(climb.epoch_len)
     cvec = jnp.asarray(climb.resolve(cfg))
+    if carry is None:
+        carry = _climb_carry0(cvec)
     if mesh is not None:
         ne = n // E
         nfull = ne * E
-        state, hits, ehits, quotas = _mesh_runner(spec, mesh, True)(
+        state, hits, ehits, quotas, carry = _mesh_runner(spec, mesh, True)(
             params, state, lo[:nfull].reshape(ne, E),
-            hi[:nfull].reshape(ne, E), lo[nfull:], hi[nfull:], cvec)
+            hi[:nfull].reshape(ne, E), lo[nfull:], hi[nfull:], cvec, carry)
         traj = (ehits, quotas) if ne else (None, None)
-        return state, hits, traj
+        return state, hits, traj, carry
     if backend == "pallas":
         los, his, nvalid = _pad_epochs(lo, hi, n, E)
-        state, hits, ehits, quotas = _adaptive_runner(
-            spec, backend, interpret)(params, state, los, his, nvalid, cvec)
+        state, hits, ehits, quotas, carry = _adaptive_runner(
+            spec, backend, interpret)(params, state, los, his, nvalid, cvec,
+                                      carry)
         nfull = n // E                   # drop the partial tail's row so the
         traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
-        return state, hits.reshape(-1)[:n], traj  # trajectory matches jit
+        return state, hits.reshape(-1)[:n], traj, carry  # traj matches jit
     ne = n // E
     nfull = ne * E
     hits_parts = []
     ehits = quotas = None
     if ne:
-        state, hits, ehits, quotas = _adaptive_runner(
+        state, hits, ehits, quotas, carry = _adaptive_runner(
             spec, backend, interpret)(params, state,
                                       lo[:nfull].reshape(ne, E),
                                       hi[:nfull].reshape(ne, E),
-                                      jnp.full((ne,), E, jnp.int32), cvec)
+                                      jnp.full((ne,), E, jnp.int32), cvec,
+                                      carry)
         hits_parts.append(hits.reshape(-1))
     if n - nfull:
         state, tail = _jit_step(spec, params, state, lo[nfull:], hi[nfull:])
@@ -793,7 +928,7 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
         hits_parts.append(jnp.zeros((0,), jnp.int32))
     hits = jnp.concatenate(hits_parts) if len(hits_parts) > 1 else \
         hits_parts[0]
-    return state, hits, (ehits, quotas)
+    return state, hits, (ehits, quotas), carry
 
 
 def simulate_trace(trace: np.ndarray, capacity: int, *,
@@ -842,7 +977,7 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     if adaptive:
         if backend not in ("jit", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
-        state, hits, (ehits, quotas) = _run_adaptive(
+        state, hits, (ehits, quotas), _ = _run_adaptive(
             cfg, spec, params, state, lo, hi, climb, backend, interpret,
             mesh=cfg.mesh)
         if ehits is not None:
@@ -893,6 +1028,290 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     if return_state:
         return res, state, hits
     return res
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant execution: epoch-boundary checkpoint / resume (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def _ckpt_epoch(cfg: "DeviceWTinyLFU", climb: ClimbSpec) -> int:
+    """The run's state-handoff granularity in accesses.
+
+    Adaptive runs climb (and, sharded, merge) every ``climb.epoch_len``;
+    sharded static runs merge every ``merge_epoch``; a plain scan has no
+    boundary constraint at all — any split is a clean handoff — so its
+    epoch only sets the auto checkpoint cadence."""
+    if cfg.adaptive:
+        return int(climb.epoch_len)
+    if cfg.shards > 1:
+        return int(cfg.merge_epoch)
+    return max(1, min(4096, cfg.sample_size))
+
+
+def _resolve_every(cfg: "DeviceWTinyLFU", climb: ClimbSpec,
+                   checkpoint_every: int) -> int:
+    """Validated checkpoint cadence in accesses (0 = auto ~32k, rounded to
+    whole epochs).  Epoch-chunked runs (adaptive / sharded) may only hand
+    state off at epoch boundaries, so their cadence must be a multiple of
+    the epoch — anything else could not reproduce the uninterrupted run."""
+    E = _ckpt_epoch(cfg, climb)
+    if checkpoint_every == 0:
+        return E * max(1, 32768 // E)
+    ce = int(checkpoint_every)
+    chunked = cfg.adaptive or cfg.shards > 1
+    if ce < 1 or (chunked and ce % E):
+        kind = ("climb.epoch_len" if cfg.adaptive else
+                "the resolved merge_epoch")
+        raise ValueError(
+            f"checkpoint_every {checkpoint_every} must be a positive "
+            f"multiple of the run's epoch ({kind} = {E}): the engine "
+            "hands state off only at epoch boundaries, so any other "
+            "cadence cannot resume bit-identically")
+    return ce
+
+
+def _config_meta(cfg: "DeviceWTinyLFU", climb: ClimbSpec, warmup: int,
+                 n: int) -> dict:
+    """JSON-safe fingerprint of the logical run configuration, stored in
+    every checkpoint's manifest and verified by :func:`resume_trace`.
+
+    The mesh itself is deliberately ABSENT: placement is not part of the
+    logical configuration, which is exactly what makes elastic restore
+    (checkpoint on 2 devices, resume on 1, or vice versa) legal."""
+    meta = {f: getattr(cfg, f) for f in (
+        "capacity", "window_frac", "sample_factor", "protected_frac",
+        "counters_per_item", "rows", "doorkeeper", "dk_bits_per_item",
+        "assoc", "counter_bits", "adaptive", "window_max_frac", "shards",
+        "merge_every", "integrity")}
+    meta["mesh_exchange"] = (cfg.mesh_exchange if cfg.mesh is not None
+                            else "chunk")
+    if cfg.adaptive:
+        meta["climb"] = [int(x) for x in climb.resolve(cfg)]
+    meta["warmup"] = int(warmup)
+    meta["trace_len"] = int(n)
+    return meta
+
+
+def _segment(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state, lo, hi,
+             climb: ClimbSpec, carry, backend: str, chunk: int,
+             interpret: bool):
+    """One contiguous trace slice through the right runner; returns
+    (state, hits, (ehits, quotas), carry)."""
+    if cfg.adaptive:
+        return _run_adaptive(cfg, spec, params, state, lo, hi, climb,
+                             backend, interpret, mesh=cfg.mesh, carry=carry)
+    if cfg.shards > 1:
+        state, hits = _run_sharded(spec, params, state, lo, hi,
+                                   cfg.merge_epoch, backend, interpret,
+                                   mesh=cfg.mesh)
+    elif backend == "jit":
+        state, hits = _run_jit(spec, params, state, lo, hi)
+    else:
+        state, hits = _run_pallas(spec, params, state, lo, hi, chunk,
+                                  interpret)
+    return state, hits, (None, None), carry
+
+
+def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
+                      backend="jit", chunk=512, interpret=None,
+                      trace_name="?", climb=None, checkpoint_dir=None,
+                      checkpoint_every=0, return_state=False,
+                      on_checkpoint=None, fault_hook=None,
+                      _start=0, _state=None, _carry=None,
+                      _hits_prefix=None, _traj_prefix=None):
+    """Segmented engine driver behind :meth:`DeviceWTinyLFU.run` and
+    :func:`resume_trace` (the leading-underscore kwargs are the resume
+    handoff).  Every segment boundary is an epoch boundary, i.e. a clean
+    state handoff, so the concatenated segments reproduce the
+    single-program run bit-for-bit — hit sequence, climb trajectory, and
+    final sketch words."""
+    from repro.checkpoint.store import AsyncCheckpointer
+    climb = climb or ClimbSpec()
+    spec = cfg.spec()
+    params = cfg.params(warmup=warmup)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend not in ("jit", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if cfg.mesh is not None and backend != "jit":
+        raise ValueError("mesh execution runs the jit scan under shard_map: "
+                         "use backend='jit'")
+    segmenting = checkpoint_dir is not None or fault_hook is not None
+    if segmenting and backend != "jit":
+        raise ValueError("checkpointing / fault injection segment the jit "
+                         "scan: use backend='jit'")
+    every = (_resolve_every(cfg, climb, checkpoint_every) if segmenting
+             else None)
+    lo, hi = _trace_lanes(trace)
+    n = lo.shape[0]
+    state = (_state if _state is not None
+             else init_step_state(spec, cfg.window_cap, cfg.main_cap))
+    carry = _carry
+    ck = (AsyncCheckpointer(checkpoint_dir) if checkpoint_dir is not None
+          else None)
+    meta = _config_meta(cfg, climb, warmup, n)
+
+    t0 = time.perf_counter()
+    hits_parts = ([] if _hits_prefix is None
+                  else [jnp.asarray(_hits_prefix)])
+    ehits_parts, quota_parts = [], []
+    if _traj_prefix is not None:
+        ehits_parts.append(jnp.asarray(_traj_prefix[0]))
+        quota_parts.append(jnp.asarray(_traj_prefix[1]))
+
+    i = _start
+    while True:
+        j = n if every is None else min(n, i + every)
+        if j > i:
+            state, hits, (eh, qu), carry = _segment(
+                cfg, spec, params, state, lo[i:j], hi[i:j], climb, carry,
+                backend, chunk, interpret)
+            hits_parts.append(hits)
+            if eh is not None:
+                ehits_parts.append(eh)
+                quota_parts.append(qu)
+        i = j
+        if ck is not None:
+            canon = (_from_mesh_state(spec, state) if cfg.mesh is not None
+                     else state)
+            tree = {"state": canon,
+                    "carry": (carry if carry is not None
+                              else jnp.zeros((6,), jnp.int32)),
+                    "hits": (jnp.concatenate(hits_parts) if hits_parts
+                             else jnp.zeros((0,), jnp.int32))}
+            if cfg.adaptive:
+                z = jnp.zeros((0,), jnp.int32)
+                tree["ehits"] = (jnp.concatenate(ehits_parts)
+                                 if ehits_parts else z)
+                tree["quotas"] = (jnp.concatenate(quota_parts)
+                                  if quota_parts else z)
+            ck.save(int(i), tree, extra_meta={**meta, "cursor": int(i)})
+            if on_checkpoint is not None:
+                on_checkpoint(int(i))
+        if i >= n:
+            break
+        if fault_hook is not None:
+            # faults inject at the clean boundary, on the canonical layout
+            # — the checkpoint just written holds the PRE-fault state
+            canon = (_from_mesh_state(spec, state) if cfg.mesh is not None
+                     else state)
+            mutated = fault_hook(int(i), canon)
+            if mutated is not None:
+                state = (_to_mesh_state(spec, mutated)
+                         if cfg.mesh is not None else mutated)
+    if ck is not None:
+        ck.wait()
+
+    if cfg.mesh is not None:
+        state = _from_mesh_state(spec, state)
+    hits = (jnp.concatenate(hits_parts) if len(hits_parts) != 1
+            else hits_parts[0]) if hits_parts else jnp.zeros((0,), jnp.int32)
+    regs = np.asarray(state["regs"])
+    wall = time.perf_counter() - t0
+
+    counted = n - warmup
+    extra = {"backend": backend, "window_frac": cfg.window_frac,
+             "assoc": cfg.assoc, "device": jax.default_backend()}
+    if cfg.mesh is not None:
+        extra["mesh_devices"] = cfg.mesh_devices
+        extra["mesh_exchange"] = cfg.mesh_exchange
+    if cfg.shards > 1:
+        extra["shards"] = cfg.shards
+        extra["merge_every"] = (climb.epoch_len if cfg.adaptive
+                                else cfg.merge_epoch)
+    if cfg.adaptive:
+        extra["adaptive"] = True
+        extra["final_quota"] = int(regs[R_WQUOTA])
+        if ehits_parts:
+            ehits = np.asarray(jnp.concatenate(ehits_parts))
+            quotas = np.asarray(jnp.concatenate(quota_parts))
+            extra["trajectory"] = {"epoch_len": climb.epoch_len,
+                                   "epoch_hits": ehits.tolist(),
+                                   "quota": quotas.tolist()}
+    if checkpoint_dir is not None:
+        extra["checkpoint_every"] = every
+    if _start:
+        extra["resumed_at"] = int(_start)
+    res = SimResult(policy="w-tinylfu(device)" + ("+climb" if cfg.adaptive
+                                                  else ""),
+                    cache_size=cfg.capacity, trace=trace_name,
+                    accesses=counted, hits=int(regs[R_HITS]),
+                    hit_ratio=int(regs[R_HITS]) / max(1, counted),
+                    wall_s=wall, extra=extra)
+    if return_state:
+        return res, state, hits
+    return res
+
+
+def resume_trace(trace, cfg: DeviceWTinyLFU, *, checkpoint_dir: str,
+                 warmup: int = 0, backend: str = "jit", chunk: int = 512,
+                 interpret: bool | None = None, trace_name: str = "?",
+                 climb: ClimbSpec | None = None, checkpoint_every: int = 0,
+                 return_state: bool = False, on_checkpoint=None,
+                 fault_hook=None):
+    """Restore the latest complete checkpoint in ``checkpoint_dir`` and
+    finish the run; bit-identical to the uninterrupted
+    ``cfg.run(trace, checkpoint_dir=...)`` (hit sequence, trajectory, final
+    sketch words).
+
+    Checkpoints store the CANONICAL single-device state layout, so restore
+    is elastic: a snapshot written by a 2-device mesh run resumes on a
+    single device (or any mesh whose size divides ``cfg.shards``) — the
+    delta blocks re-shard through ``checkpoint.store.restore_checkpoint``
+    + ``distributed.mesh.mesh_state_shardings``.  With no checkpoint yet
+    (killed before the first snapshot), the resume IS a fresh run.  A
+    checkpoint written under a different logical configuration (any
+    ``DeviceWTinyLFU`` field, climb vector, warmup, or trace length) is
+    rejected with ``ValueError`` rather than silently continued.
+    """
+    from repro.checkpoint.store import (latest_step, load_meta,
+                                        restore_checkpoint)
+    climb = climb or ClimbSpec()
+    common = dict(warmup=warmup, backend=backend, chunk=chunk,
+                  interpret=interpret, trace_name=trace_name, climb=climb,
+                  checkpoint_dir=checkpoint_dir,
+                  checkpoint_every=checkpoint_every,
+                  return_state=return_state, on_checkpoint=on_checkpoint,
+                  fault_hook=fault_hook)
+    step = latest_step(checkpoint_dir)
+    if step is None:
+        out = _run_checkpointed(cfg, trace, **common)
+        (out[0] if return_state else out).extra["resumed_at"] = 0
+        return out
+    meta = dict(load_meta(checkpoint_dir, step))
+    cursor = int(meta.pop("cursor", step))
+    expect = _config_meta(cfg, climb, warmup, len(trace))
+    if meta != expect:
+        diffs = sorted(k for k in set(meta) | set(expect)
+                       if meta.get(k) != expect.get(k))
+        raise ValueError(
+            f"checkpoint {checkpoint_dir!r} step {step} was saved under a "
+            f"different configuration (differing fields: {diffs}) — resume "
+            "with the original DeviceWTinyLFU / climb / warmup / trace")
+    spec = cfg.spec()
+    cspec = replace(spec, mesh_devices=0) if cfg.mesh is not None else spec
+    template = {"state": init_step_state(cspec, cfg.window_cap,
+                                         cfg.main_cap),
+                "carry": jnp.zeros((6,), jnp.int32),
+                "hits": jnp.zeros((cursor,), jnp.int32)}
+    if cfg.adaptive:
+        ne = cursor // int(climb.epoch_len)
+        template["ehits"] = jnp.zeros((ne,), jnp.int32)
+        template["quotas"] = jnp.zeros((ne,), jnp.int32)
+    tree = restore_checkpoint(checkpoint_dir, step, template)
+    state = tree["state"]
+    if cfg.mesh is not None:
+        from repro.distributed.mesh import mesh_state_shardings
+        state = _to_mesh_state(spec, state)
+        sh = mesh_state_shardings(cfg.mesh, state.keys())
+        state = {k: jax.device_put(v, sh[k]) for k, v in state.items()}
+    return _run_checkpointed(
+        cfg, trace, _start=cursor, _state=state,
+        _carry=(tree["carry"] if cfg.adaptive else None),
+        _hits_prefix=tree["hits"],
+        _traj_prefix=((tree["ehits"], tree["quotas"]) if cfg.adaptive
+                      else None),
+        **common)
 
 
 # ---------------------------------------------------------------------------
@@ -1021,9 +1440,9 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
             spec = c.spec()
             st = init_step_state(spec, c.window_cap, c.main_cap)
             if adaptive:
-                st, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
-                                         st, l, h, climb, "jit", False,
-                                         mesh=c.mesh)
+                st, _, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
+                                            st, l, h, climb, "jit", False,
+                                            mesh=c.mesh)
                 outs.append(st["regs"])
             elif c.shards > 1:
                 st, _ = _run_sharded(spec, c.params(warmup=warmup), st,

@@ -1,0 +1,120 @@
+"""Fault-injection harness for the device engine (ISSUE 7).
+
+Three fault families, matched to the recovery mechanisms they exercise:
+
+* **process death** — :func:`run_to_kill` launches a checkpointing run as a
+  subprocess and SIGKILLs it after it reports k checkpoints; the test then
+  calls ``core.device_simulate.resume_trace`` in-parent and pins the resumed
+  run bit-identical to an uninterrupted one.  Checkpoints are written
+  atomically (``checkpoint.store``: tmp + fsync + rename), so a kill at any
+  instant leaves at most a torn ``.tmp`` that ``latest_step`` ignores.
+* **lost delta** — :func:`drop_shard_delta` zeroes one shard's delta slices,
+  modelling a device that missed an epoch's exchange in
+  ``mesh_exchange="stale"`` mode.  CM-sketch counts are a sampled estimate;
+  dropping one shard-epoch of increments degrades the estimate, it does not
+  corrupt it, so hit ratio stays within goldens tolerance.
+* **corrupted words** — :func:`flip_words` XOR-flips bits in a state buffer.
+  Flips in the global sketch halves are caught by the per-shard checksums
+  (``StepSpec.integrity``) and the shard is quarantined at the next merge
+  boundary; flips in cache-table words exercise crash-free degradation.
+
+All mutators are pure: they take the CANONICAL (single-device) state layout
+that ``DeviceWTinyLFU.run(..., fault_hook=...)`` passes and return a new
+dict, leaving the input untouched.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.kernels.sketch_step import StepSpec
+
+
+def run_to_kill(script: str, *, marker: str = "CKPT", kills: int = 2,
+                timeout: float = 600.0, env: Optional[dict] = None,
+                python: Optional[str] = None):
+    """Run ``script`` (python source) as a subprocess and SIGKILL it after
+    it has printed ``marker`` ``kills`` times on stdout.
+
+    The script is expected to print one marker line per completed
+    checkpoint (``on_checkpoint=lambda c: print("CKPT", c, flush=True)``),
+    so the kill lands mid-run with at least one durable checkpoint behind
+    it.  Returns ``(markers_seen, returncode)``; a SIGKILLed child reports
+    ``-signal.SIGKILL``.  If the script finishes before ``kills`` markers
+    appear the (successful) return code is surfaced so the test can fail
+    with the real exit status instead of hanging.
+    """
+    proc = subprocess.Popen(
+        [python or sys.executable, "-c", script],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env={**os.environ, **(env or {})})
+    seen = 0
+    deadline = time.monotonic() + timeout
+    try:
+        for line in proc.stdout:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"run_to_kill: no {kills} markers within "
+                                   f"{timeout}s; output so far: {line!r}")
+            if line.startswith(marker):
+                seen += 1
+                if seen >= kills:
+                    proc.kill()
+                    break
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    return seen, proc.returncode
+
+
+def flip_words(state: dict, key: str, flips) -> dict:
+    """XOR single bits into ``state[key]`` (canonical layout).
+
+    ``flips``: iterable of ``(flat_index, bit)`` pairs, bit in [0, 32).
+    Returns a new state dict (numpy copy for the mutated buffer).
+    """
+    arr = np.array(state[key], copy=True)
+    flat = arr.reshape(-1)
+    view = flat.view(np.uint32)
+    for idx, bit in flips:
+        view[idx] ^= np.uint32(1) << np.uint32(bit)
+    return {**state, key: arr}
+
+
+def drop_shard_delta(spec: StepSpec, state: dict, shard: int,
+                     half: str = "delta") -> dict:
+    """Zero shard ``shard``'s counter- and doorkeeper slices in a
+    canonical-layout sharded state.
+
+    ``half="delta"`` models one device's epoch of increments lost before
+    the merge fold (meaningful only on MID-epoch state — at boundaries the
+    fold has just cleared the deltas).  ``half="global"`` models the
+    strictly-worse loss of the shard's whole accumulated estimate — a
+    device that missed every past exchange — which is what the
+    boundary-time ``fault_hook`` injects for the stale-exchange drills.
+    ``half="both"`` combines them.
+    """
+    assert spec.shards > 1 and 0 <= shard < spec.shards
+    assert half in ("delta", "global", "both")
+    H, wps = spec.counter_words, spec.wps_shard
+    halves = (0, 1) if half == "both" else ((1,) if half == "delta" else (0,))
+    c = np.array(state["counters"], copy=True)
+    for h in halves:
+        c[h * H:(h + 1) * H].reshape(
+            spec.rows, spec.shards, wps)[:, shard, :] = 0
+    out = {**state, "counters": c}
+    if spec.dk_bits:
+        HD = spec.dk_words
+        dk = np.array(state["doorkeeper"], copy=True)
+        for h in halves:
+            dk[h * HD:(h + 1) * HD].reshape(
+                spec.shards, spec.dkw_shard)[shard, :] = 0
+        out["doorkeeper"] = dk
+    return out

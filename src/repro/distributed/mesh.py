@@ -70,14 +70,48 @@ def shard_placement(n_shards: int, devices=None) -> list:
     return [devices[s // per] for s in range(n_shards)]
 
 
-def make_shard_mesh(n_shards: int, devices=None):
+def make_shard_mesh(n_shards: int, devices=None, require: int = 0):
     """1-D ``("shard",)`` mesh for the multi-device sharded-sketch run
     (``core.device_simulate.simulate_trace(..., shards=S, mesh=...)``): the
     delta arrays are partitioned along axis 0 (``NamedSharding``/
     ``shard_map``), so the mesh takes the largest divisor of ``n_shards``
     that the available devices can host — device ``d`` then owns the
     contiguous shard block ``[d*S/D, (d+1)*S/D)``, consistent with
-    :func:`shard_placement`."""
+    :func:`shard_placement`.
+
+    ``require=D`` demands a mesh of exactly D devices and raises an eager
+    ``ValueError`` when the machine cannot host it — instead of silently
+    shrinking to what fits (the default, which is right for portable
+    scripts but wrong for placement tests and fault drills that NEED the
+    multi-device layout)."""
     devices = list(jax.devices()) if devices is None else list(devices)
+    if require:
+        if require > len(devices):
+            raise ValueError(
+                f"make_shard_mesh(require={require}) but only "
+                f"{len(devices)} device(s) are available — set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{require} (before importing jax) or run on hardware "
+                "with enough devices")
+        if n_shards % require:
+            raise ValueError(
+                f"make_shard_mesh(require={require}): {n_shards} shards "
+                "do not split evenly (block placement needs "
+                "shards % devices == 0)")
+        return jax.make_mesh((require,), ("shard",),
+                             devices=devices[:require])
     n = _shard_mesh_size(max(1, n_shards), len(devices))
     return jax.make_mesh((n,), ("shard",), devices=devices[:n])
+
+
+def mesh_state_shardings(mesh, state_keys) -> dict:
+    """NamedShardings that place a mesh-layout engine state pytree
+    (``core.device_simulate`` keys) onto ``mesh``: the shard-major delta
+    arrays split along ``("shard",)`` axis 0, everything else replicated.
+    The elastic-restore path (``core.device_simulate.resume_trace``) uses
+    this to ``jax.device_put`` a checkpoint restored from a DIFFERENT mesh
+    size onto the current one."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {k: NamedSharding(
+        mesh, P("shard") if k in ("dcounters", "ddoorkeeper") else P())
+        for k in state_keys}

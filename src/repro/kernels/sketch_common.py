@@ -180,6 +180,24 @@ def merge_words(a: jnp.ndarray, b: jnp.ndarray,
     return even | (odd << counter_bits)
 
 
+def checksum_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Position-weighted wrap-sum checksum of an int32 buffer.
+
+    ``sum(x[i] * w[i]) mod 2^32`` with ``w[i] = (i * 2654435761) | 1`` —
+    every weight is odd, so for any position ``2^b * w[i] != 0 (mod 2^32)``
+    for ``b < 32``: flipping any single bit of any word changes the
+    checksum.  Position-dependent weights additionally catch swapped words
+    (a plain sum would not).  Reduces over the LAST axis, so a
+    ``(shards, n)`` view yields per-shard checksums in one call.  Pure VPU
+    arithmetic: usable inside compiled folds (kernels/sketch_merge) at a
+    cost far below the merge itself.
+    """
+    n = words.shape[-1]
+    w = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)) \
+        | jnp.uint32(1)
+    return jnp.sum(words.astype(jnp.uint32) * w, axis=-1).astype(jnp.int32)
+
+
 def bit_get(words: jnp.ndarray, bit: jnp.ndarray) -> jnp.ndarray:
     """Read bit ``bit`` from a packed int32 bitset (flat indexing)."""
     word = words.reshape(-1)[bit >> 5]

@@ -38,8 +38,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .sketch_common import halve_words, merge_words
+from .sketch_common import checksum_words, halve_words, merge_words
 from .sketch_step import StepSpec, MESH_AXIS, P_SAMPLE, R_SIZE
+
+
+def shard_checksums(spec: StepSpec, counters_global: jnp.ndarray,
+                    dk_global: jnp.ndarray) -> jnp.ndarray:
+    """(shards,) int32 checksums over each shard's global sketch slices.
+
+    The global halves are read-only between merge boundaries (per-access
+    writes land only in the delta halves), so a checksum computed at one
+    fold is verifiable at the next: any bit flipped in a shard's global
+    counter slice or doorkeeper slice in between changes its checksum
+    (:func:`repro.kernels.sketch_common.checksum_words` uses odd positional
+    weights).  Shard s owns words ``r*words_per_row + s*wps_shard + w`` of
+    the counter image and words ``[s*dkw_shard, (s+1)*dkw_shard)`` of the
+    doorkeeper; both slices concatenate into one per-shard lane so a single
+    vectorized checksum covers them.
+    """
+    S = spec.shards
+    c = counters_global.reshape(spec.rows, S, spec.wps_shard)
+    per_shard = c.transpose(1, 0, 2).reshape(S, -1)
+    if spec.dk_bits:
+        d = dk_global.reshape(S, spec.dkw_shard)
+        per_shard = jnp.concatenate([per_shard, d], axis=-1)
+    return checksum_words(per_shard)
 
 
 def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
@@ -55,9 +78,29 @@ def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
     """
     assert spec.shards > 1, "merge_halve requires StepSpec.shards > 1"
     H, HD = spec.counter_words, spec.dk_words
-    g = merge_words(state["counters"][:H], state["counters"][H:],
-                    spec.counter_bits)
-    dk = state["doorkeeper"][:HD] | state["doorkeeper"][HD:]
+    gc, dc = state["counters"][:H], state["counters"][H:]
+    gdk, ddk = state["doorkeeper"][:HD], state["doorkeeper"][HD:]
+
+    if spec.integrity:
+        # verify-then-quarantine (ISSUE 7): the stored per-shard checksums
+        # were computed over these global halves at the previous fold, and
+        # nothing legal wrote them since.  A mismatched shard is corrupt —
+        # zero BOTH its global and delta slices (the delta cannot be
+        # checksummed: it mutates every access, so it gets no benefit of
+        # the doubt) and let the §3.3 aging re-learn its counts.
+        S, wps = spec.shards, spec.wps_shard
+        ok = shard_checksums(spec, gc, gdk) == state["csum"][:S]
+        okc = ok[None, :, None]
+        gc = jnp.where(okc, gc.reshape(spec.rows, S, wps), 0).reshape(H)
+        dc = jnp.where(okc, dc.reshape(spec.rows, S, wps), 0).reshape(H)
+        if spec.dk_bits:
+            okd = ok[:, None]
+            dkw = spec.dkw_shard
+            gdk = jnp.where(okd, gdk.reshape(S, dkw), 0).reshape(HD)
+            ddk = jnp.where(okd, ddk.reshape(S, dkw), 0).reshape(HD)
+
+    g = merge_words(gc, dc, spec.counter_bits)
+    dk = gdk | ddk
 
     size = state["regs"][R_SIZE]
     W = params[P_SAMPLE]
@@ -74,10 +117,18 @@ def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
     dk = jnp.where(k > 0, jnp.zeros_like(dk), dk)
 
     regs = state["regs"].at[R_SIZE].set(size)
-    return {**state,
-            "counters": jnp.concatenate([g, jnp.zeros_like(g)]),
-            "doorkeeper": jnp.concatenate([dk, jnp.zeros_like(dk)]),
-            "regs": regs}
+    out = {**state,
+           "counters": jnp.concatenate([g, jnp.zeros_like(g)]),
+           "doorkeeper": jnp.concatenate([dk, jnp.zeros_like(dk)]),
+           "regs": regs}
+    if spec.integrity:
+        # refresh the checksums over the NEW global halves (they stay
+        # read-only until the next fold) and count quarantined shards
+        csum = state["csum"].at[:spec.shards].set(
+            shard_checksums(spec, g, dk))
+        out["csum"] = csum.at[spec.shards].add(
+            jnp.sum((~ok).astype(jnp.int32)))
+    return out
 
 
 def merge_halve_mesh(spec: StepSpec, params: jnp.ndarray,

@@ -244,6 +244,18 @@ class StepSpec:
         :func:`repro.kernels.sketch_merge.merge_halve_mesh` all-gather;
         hit ratios land in the goldens-±0.01 tier (host twin:
         ``core.sketch.ShardedFrequencySketch(stale_estimates=True)``).
+    ``integrity`` (default False)
+        Self-healing sketch integrity (requires ``shards > 1``).  Adds a
+        ``"csum"`` state vector of ``shards + 1`` int32 words: per-shard
+        :func:`repro.kernels.sketch_common.checksum_words` checksums over
+        the global sketch halves (which are read-only between merge
+        boundaries — per-access writes land only in the delta halves),
+        plus a cumulative quarantined-shard counter in the last word.  The
+        epoch-boundary :func:`repro.kernels.sketch_merge.merge_halve` fold
+        verifies each shard's checksum before merging; a mismatched shard
+        is QUARANTINED — its global and delta slices are zeroed — and the
+        paper's §3.3 aging re-learns its counts within a few sample
+        periods.  False compiles the identical program.
     """
     width: int                    # sketch counters per row (pow2, mult of 8)
     rows: int = 4
@@ -257,8 +269,13 @@ class StepSpec:
     shards: int = 1               # sketch shards (pow2); >1 = delta/global
     mesh_devices: int = 0         # shard_map devices; 0 = single-device
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
+    integrity: bool = False       # per-shard checksums + quarantine fold
 
     def __post_init__(self):
+        if self.integrity:
+            assert self.shards > 1, (
+                "integrity checksums cover the per-shard global sketch "
+                "halves, which only exist at shards > 1")
         assert self.mesh_exchange in ("chunk", "stale"), (
             f"mesh_exchange {self.mesh_exchange!r} must be 'chunk' (exact "
             "chunked exchange) or 'stale' (speculative stale-global "
@@ -377,10 +394,13 @@ def _state_keys(spec: StepSpec) -> tuple[str, ...]:
     mesh = ("dcounters", "ddoorkeeper") if spec.mesh_devices else ()
     load = (("wsl", "wuw") if spec.adaptive and spec.assoc is not None
             else ())
+    csum = ("csum",) if spec.integrity else ()
     if spec.assoc is None:
         return ("counters", "doorkeeper", *mesh, "wlo", "whi", "wmeta",
-                "widx", "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb", "regs")
-    return ("counters", "doorkeeper", *mesh, "wtab", "mtab", *load, "regs")
+                "widx", "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb",
+                *csum, "regs")
+    return ("counters", "doorkeeper", *mesh, "wtab", "mtab", *load,
+            *csum, "regs")
 
 
 def init_step_state(spec: StepSpec, window_cap: int | None = None,
@@ -433,6 +453,11 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
                                     jnp.int32),
             "regs": regs,
         }
+    if spec.integrity:
+        # [0:S] per-shard checksums of the global sketch halves, [S] the
+        # cumulative quarantined-shard count.  Zeros are the correct seed:
+        # checksum_words of all-zero buffers is 0.
+        common["csum"] = jnp.zeros((spec.shards + 1,), jnp.int32)
     if spec.adaptive and spec.assoc is not None:
         # load-aware window quota distribution state (ISSUE 5): per-set
         # window access counts this epoch + the current usable-way vector
@@ -1094,7 +1119,10 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                   "dcounters": cd, "ddoorkeeper": dd}
     else:
         sketch = {"counters": counters, "doorkeeper": dk}
-    new_state = {**sketch,
+    # {**state, ...} first: access-invariant keys (e.g. the "csum" integrity
+    # vector, touched only by the epoch-boundary merge fold) ride through the
+    # scan carry unchanged
+    new_state = {**state, **sketch,
                  "wlo": wlo, "whi": whi, "wmeta": wmeta,
                  "widx": widx, "wdkb": wdkb,
                  "mlo": mlo, "mhi": mhi, "mmeta": mmeta,
@@ -1346,7 +1374,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
                   "dcounters": cd, "ddoorkeeper": dd}
     else:
         sketch = {"counters": counters, "doorkeeper": dk}
-    new_state = {**sketch, "wtab": wtab, "mtab": mtab, "regs": regs}
+    new_state = {**state, **sketch, "wtab": wtab, "mtab": mtab, "regs": regs}
     if spec.adaptive:
         new_state["wsl"] = wsl
         new_state["wuw"] = wuw

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    latest_step, prune_old, AsyncCheckpointer)
+                                    latest_step, load_meta, prune_old,
+                                    AsyncCheckpointer)
 from repro.data.pipeline import (ShardSpec, SyntheticShardStore,
                                  CachedShardReader, TokenPipeline)
 
@@ -68,6 +69,69 @@ class TestCheckpoint:
         save_checkpoint(tmpdir, 1, {"x": jnp.zeros(2)})
         with pytest.raises(ValueError):
             restore_checkpoint(tmpdir, 1, {"x": jnp.zeros(3)})
+
+    def test_torn_newer_step_is_invisible(self, tmpdir):
+        """A kill mid-write of a LATER step leaves only its .tmp dir (the
+        rename never happened): latest_step must keep serving the older
+        complete checkpoint, and restore from it must work even with the
+        torn partial sitting beside it (the ISSUE 7 SIGKILL contract)."""
+        t = _tree()
+        save_checkpoint(tmpdir, 3, t)
+        torn = os.path.join(tmpdir, "step_0000000007.tmp")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "manifest.json"), "w") as f:
+            f.write('{"step": 7')              # truncated mid-write
+        assert latest_step(tmpdir) == 3
+        got = restore_checkpoint(tmpdir, 3, jax.eval_shape(lambda: t))
+        np.testing.assert_array_equal(got["a"], t["a"])
+
+    def test_extra_meta_roundtrip(self, tmpdir):
+        meta = {"cursor": 4096, "capacity": 200, "climb": [1, 2, 3],
+                "mesh_exchange": "chunk"}
+        save_checkpoint(tmpdir, 2, _tree(), extra_meta=meta)
+        assert load_meta(tmpdir, 2) == meta
+        # a checkpoint saved without extra_meta reads back an empty dict
+        save_checkpoint(tmpdir, 4, _tree())
+        assert load_meta(tmpdir, 4) == {}
+        # async path carries the meta through the background writer
+        ck = AsyncCheckpointer(tmpdir)
+        ck.save(6, _tree(), extra_meta={"cursor": 6})
+        ck.wait()
+        assert load_meta(tmpdir, 6) == {"cursor": 6}
+
+    def test_async_overlapping_saves_serialize(self, tmpdir):
+        """Back-to-back async saves must serialize (save() joins the
+        pending writer first) and each snapshot must be taken at CALL time:
+        mutating the source array after save() cannot leak into the
+        checkpoint (the write thread works from the host copy)."""
+        ck = AsyncCheckpointer(tmpdir, keep=10)
+        src = np.arange(8, dtype=np.int32)
+        for s in range(1, 6):
+            ck.save(s, {"x": src}, extra_meta={"cursor": s})
+            src += 100                      # mutate AFTER the snapshot
+        ck.wait()
+        assert ck.last_saved == 5
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmpdir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        assert steps == [1, 2, 3, 4, 5]
+        for s in steps:
+            got = restore_checkpoint(tmpdir, s, {"x": np.zeros(8, np.int32)})
+            np.testing.assert_array_equal(
+                np.asarray(got["x"]),
+                np.arange(8, dtype=np.int32) + 100 * (s - 1))
+            assert load_meta(tmpdir, s)["cursor"] == s
+
+    def test_async_error_surfaces_on_wait(self, tmpdir):
+        # a regular file where the checkpoint dir should be: the background
+        # writer fails, wait() re-raises (works even when running as root,
+        # unlike permission-bit tricks)
+        path = os.path.join(tmpdir, "f")
+        with open(path, "w") as fh:
+            fh.write("not a directory")
+        ck = AsyncCheckpointer(path)
+        ck.save(1, {"x": jnp.zeros(2)})
+        with pytest.raises(OSError):
+            ck.wait()
 
 
 class TestDataPipeline:

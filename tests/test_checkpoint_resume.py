@@ -1,0 +1,243 @@
+"""Epoch-boundary checkpoint/resume for the device engine (ISSUE 7).
+
+The contract under test: ``DeviceWTinyLFU.run(..., checkpoint_dir=)``
+snapshots the full engine state at merge-epoch boundaries, and
+``resume_trace`` restores the latest complete checkpoint and continues —
+with the resumed run BIT-IDENTICAL to an uninterrupted one (per-access hit
+sequence, every state buffer, and in adaptive mode the quota trajectory).
+Segmented execution itself must be invisible: a checkpointed run equals the
+single-scan ``simulate_trace`` bitwise.  The multi-device variants (resume
+onto the same mesh, elastic 2->1 restore) run under forced host devices in
+a subprocess, following tests/test_distributed.py.
+"""
+import os
+import re
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.device_simulate import (DeviceWTinyLFU, ClimbSpec,
+                                        simulate_trace, resume_trace)
+from repro.checkpoint.store import latest_step
+from repro.traces import zipf_trace
+
+from test_distributed import _run_forced_device_script
+
+
+def _steps(d):
+    return sorted(int(m.group(1)) for x in os.listdir(d)
+                  if (m := re.match(r"step_(\d+)$", x)))
+
+
+def _prune_to_first(d):
+    """Delete all but the EARLIEST checkpoint, so resume has real work."""
+    steps = _steps(d)
+    assert len(steps) >= 2, f"need an intermediate checkpoint, got {steps}"
+    for s in steps[1:]:
+        shutil.rmtree(os.path.join(d, f"step_{s:010d}"))
+    return steps[0]
+
+
+def _assert_same(res_a, st_a, h_a, res_b, st_b, h_b, adaptive):
+    np.testing.assert_array_equal(np.asarray(h_a), np.asarray(h_b))
+    assert set(st_a) == set(st_b)
+    for k in st_a:
+        np.testing.assert_array_equal(np.asarray(st_a[k]),
+                                      np.asarray(st_b[k]), err_msg=k)
+    assert res_a.hits == res_b.hits
+    assert res_a.hit_ratio == res_b.hit_ratio
+    if adaptive:
+        assert res_a.extra["trajectory"] == res_b.extra["trajectory"]
+        assert res_a.extra["final_quota"] == res_b.extra["final_quota"]
+
+
+CASES = [
+    # (label, cfg-kwargs, adaptive, checkpoint_every)
+    ("flat-static", dict(), False, 9000),
+    ("flat-sharded", dict(shards=4, merge_every=512), False, 512 * 8),
+    ("assoc-static", dict(assoc=8, shards=4, merge_every=512), False,
+     512 * 8),
+    ("flat-adaptive", dict(), True, 1024 * 4),
+    ("assoc-adaptive", dict(assoc=8, shards=4, merge_every=512), True,
+     1024 * 4),
+]
+
+
+@pytest.mark.parametrize("label,kw,adaptive,every",
+                         CASES, ids=[c[0] for c in CASES])
+def test_checkpoint_resume_bitwise(label, kw, adaptive, every, tmp_path):
+    tr = zipf_trace(12_000, n_items=2_000, alpha=0.9, seed=4)
+    climb = ClimbSpec(epoch_len=1024) if adaptive else None
+    res0, st0, h0 = simulate_trace(tr, 300, warmup=1_000, adaptive=adaptive,
+                                   climb=climb, return_state=True, **kw)
+    cfg = DeviceWTinyLFU(300, adaptive=adaptive, **kw)
+    d = str(tmp_path / "ck")
+    # 1. the checkpointing (segmented) run equals the single-scan run
+    res1, st1, h1 = cfg.run(tr, warmup=1_000, climb=climb, checkpoint_dir=d,
+                            checkpoint_every=every, return_state=True)
+    _assert_same(res0, st0, h0, res1, st1, h1, adaptive)
+    assert res1.extra["checkpoint_every"] > 0
+    # 2. resume from an INTERMEDIATE checkpoint (later ones deleted, so the
+    #    restored cursor is mid-trace) — still bit-identical
+    cursor = _prune_to_first(d)
+    assert 0 < cursor < len(tr)
+    res2, st2, h2 = resume_trace(tr, cfg, checkpoint_dir=d, warmup=1_000,
+                                 climb=climb, checkpoint_every=every,
+                                 return_state=True)
+    assert res2.extra["resumed_at"] == cursor
+    _assert_same(res0, st0, h0, res2, st2, h2, adaptive)
+
+
+def test_resume_from_empty_dir_runs_fresh(tmp_path):
+    tr = zipf_trace(4_000, n_items=600, alpha=0.9, seed=9)
+    cfg = DeviceWTinyLFU(150)
+    d = str(tmp_path / "none")
+    res0 = simulate_trace(tr, 150, warmup=500)
+    res1 = resume_trace(tr, cfg, checkpoint_dir=d, warmup=500,
+                        checkpoint_every=3000)
+    assert res1.extra["resumed_at"] == 0
+    assert res1.hits == res0.hits
+    assert latest_step(d) is not None          # and it checkpointed
+
+
+def test_config_fingerprint_mismatch_rejected(tmp_path):
+    tr = zipf_trace(4_000, n_items=600, alpha=0.9, seed=9)
+    d = str(tmp_path / "ck")
+    DeviceWTinyLFU(150).run(tr, warmup=500, checkpoint_dir=d,
+                            checkpoint_every=3000)
+    wrong = DeviceWTinyLFU(200)                # different capacity
+    with pytest.raises(ValueError, match="capacity"):
+        resume_trace(tr, wrong, checkpoint_dir=d, warmup=500)
+    with pytest.raises(ValueError, match="warmup"):
+        resume_trace(tr, DeviceWTinyLFU(150), checkpoint_dir=d, warmup=999)
+
+
+def test_checkpoint_cadence_validation(tmp_path):
+    tr = zipf_trace(2_000, n_items=300, alpha=0.9, seed=1)
+    cfg = DeviceWTinyLFU(100, shards=4, merge_every=512)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        cfg.run(tr, checkpoint_dir=str(tmp_path / "x"), checkpoint_every=100)
+
+
+def test_eager_config_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        DeviceWTinyLFU(100, shards=3)
+    with pytest.raises(ValueError, match="capacity"):
+        DeviceWTinyLFU(0)
+    with pytest.raises(ValueError, match="window_frac"):
+        DeviceWTinyLFU(100, window_frac=1.5)
+    with pytest.raises(ValueError, match="counter_bits"):
+        DeviceWTinyLFU(100, counter_bits=5)
+    with pytest.raises(ValueError, match="merge_every"):
+        DeviceWTinyLFU(100, shards=2, merge_every=-1)
+    with pytest.raises(ValueError, match="integrity"):
+        DeviceWTinyLFU(100, integrity=True)
+
+
+def test_integrity_checksums_are_invisible_when_clean(tmp_path):
+    """With no corruption the integrity machinery must not change a single
+    admission decision: same hits, same sketch words, and the quarantine
+    counter stays zero across the whole run."""
+    tr = zipf_trace(10_000, n_items=1_500, alpha=0.9, seed=6)
+    kw = dict(shards=4, merge_every=512)
+    res0, st0, h0 = simulate_trace(tr, 300, warmup=1_000, return_state=True,
+                                   **kw)
+    res1, st1, h1 = simulate_trace(tr, 300, warmup=1_000, return_state=True,
+                                   integrity=True, **kw)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    for k in st0:
+        np.testing.assert_array_equal(np.asarray(st0[k]),
+                                      np.asarray(st1[k]), err_msg=k)
+    assert int(np.asarray(st1["csum"])[-1]) == 0
+    # and it checkpoints/resumes like any other state key
+    cfg = DeviceWTinyLFU(300, integrity=True, **kw)
+    d = str(tmp_path / "ck")
+    res2, st2, h2 = cfg.run(tr, warmup=1_000, checkpoint_dir=d,
+                            checkpoint_every=512 * 8, return_state=True)
+    _prune_to_first(d)
+    res3, st3, h3 = resume_trace(tr, cfg, checkpoint_dir=d, warmup=1_000,
+                                 checkpoint_every=512 * 8, return_state=True)
+    _assert_same(res2, st2, h2, res3, st3, h3, False)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: resume onto the same 2-device mesh (chunk + stale modes) and
+# ELASTIC restore — a checkpoint written by a 2-device mesh run resumed on a
+# single device.  Checkpoints store the canonical single-device layout, so
+# elastic restore is just the ordinary resume path plus a device_put.
+# ---------------------------------------------------------------------------
+
+MESH_RESUME_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import re, shutil
+import numpy as np
+import jax
+from repro.core.device_simulate import (DeviceWTinyLFU, ClimbSpec,
+                                        simulate_trace, resume_trace)
+from repro.distributed.mesh import make_shard_mesh
+from repro.traces import zipf_trace
+
+assert len(jax.devices()) == 2
+mesh = make_shard_mesh(4, require=2)
+tr = zipf_trace(10_000, n_items=1_500, alpha=0.9, seed=3)
+
+
+def prune_to_first(d):
+    steps = sorted(int(m.group(1)) for x in os.listdir(d)
+                   if (m := re.match(r"step_(\d+)$", x)))
+    assert len(steps) >= 2, steps
+    for s in steps[1:]:
+        shutil.rmtree(os.path.join(d, f"step_{s:010d}"))
+
+
+def same(h0, st0, h3, st3):
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h3))
+    for k in st0:
+        np.testing.assert_array_equal(np.asarray(st0[k]),
+                                      np.asarray(st3[k]), err_msg=k)
+
+
+for exch in ("chunk", "stale"):
+    for adaptive in (False, True):
+        cl = ClimbSpec(epoch_len=1024) if adaptive else None
+        kw = dict(shards=4, merge_every=512, mesh_exchange=exch)
+        res0, st0, h0 = simulate_trace(tr, 300, warmup=1_000, mesh=mesh,
+                                       adaptive=adaptive, climb=cl,
+                                       return_state=True, **kw)
+        cfg = DeviceWTinyLFU(300, mesh=mesh, adaptive=adaptive, **kw)
+        d = f"/tmp/ckpt_mesh_{exch}_{adaptive}"
+        shutil.rmtree(d, ignore_errors=True)
+        every = (1024 if adaptive else 512) * 4
+        res1, st1, h1 = cfg.run(tr, warmup=1_000, climb=cl,
+                                checkpoint_dir=d, checkpoint_every=every,
+                                return_state=True)
+        same(h0, st0, h1, st1)
+        prune_to_first(d)
+        # resume ON the mesh
+        res2, st2, h2 = resume_trace(tr, cfg, checkpoint_dir=d,
+                                     warmup=1_000, climb=cl,
+                                     checkpoint_every=every,
+                                     return_state=True)
+        same(h0, st0, h2, st2)
+        # ELASTIC: the same (pruned-again) checkpoint on ONE device — exact
+        # for chunk mode (its mesh run is bit-identical to single-device)
+        if exch == "chunk":
+            prune_to_first(d)      # the resume re-wrote the later steps
+            cfg1 = DeviceWTinyLFU(300, adaptive=adaptive, shards=4,
+                                  merge_every=512)
+            res3, st3, h3 = resume_trace(tr, cfg1, checkpoint_dir=d,
+                                         warmup=1_000, climb=cl,
+                                         checkpoint_every=every,
+                                         return_state=True)
+            same(h0, st0, h3, st3)
+        shutil.rmtree(d, ignore_errors=True)
+        print(f"OK mesh resume {exch} adaptive={adaptive}")
+print("OK all mesh resume")
+"""
+
+
+def test_mesh_checkpoint_resume_and_elastic_two_devices():
+    out = _run_forced_device_script(MESH_RESUME_SCRIPT)
+    assert "OK all mesh resume" in out

@@ -1,0 +1,250 @@
+"""Fault-injection drills for the device engine (ISSUE 7, core.faults).
+
+Three failure families, each pinned against the recovery mechanism that
+owns it:
+
+* corrupted sketch words — the integrity checksums catch the flip at the
+  next merge boundary, quarantine the shard (zero + count), and the §3.3
+  aging re-learns: the golden hit ratio holds within the ±0.01 tier;
+* lost shard state — the stale-exchange loss model (a device that missed
+  its delta exchanges, injected as the strictly-worse zeroing of the
+  shard's accumulated global slice): graceful degradation, goldens hold;
+* process death — SIGKILL mid-run; resume from the latest durable
+  checkpoint is bit-identical to the uninterrupted run.  The two-device
+  variant runs under FAULT_TIER=1 (CI's fault tier) because it needs two
+  forced host devices and a kill+resume subprocess pair.
+"""
+import os
+import signal
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import faults
+from repro.core.device_simulate import (DeviceWTinyLFU, simulate_trace,
+                                        resume_trace)
+from repro.checkpoint.store import latest_step
+from repro.kernels.sketch_common import keys_to_lanes
+from repro.kernels.sketch_step import (StepSpec, make_step_params,
+                                       init_step_state, step_ref)
+from repro.kernels.sketch_merge import merge_halve
+from repro.traces import zipf_trace
+
+from test_distributed import _run_forced_device_script
+
+
+def test_flip_words_flips_exact_bit():
+    st = {"counters": jnp.arange(16, dtype=jnp.int32)}
+    out = faults.flip_words(st, "counters", [(3, 7), (5, 31)])
+    a, b = np.asarray(st["counters"]), np.asarray(out["counters"])
+    diff = a.view(np.uint32) ^ b.view(np.uint32)
+    assert diff[3] == np.uint32(1) << 7
+    assert diff[5] == np.uint32(1) << 31
+    assert (np.delete(diff, [3, 5]) == 0).all()
+    assert int(a[3]) == 3                       # input untouched
+
+
+def test_drop_shard_delta_mid_epoch_semantics():
+    """On a mid-epoch state (no fold yet: deltas nonzero, globals zero)
+    dropping shard 0's delta zeroes exactly that slice, and the subsequent
+    fold produces a global that differs from the intact fold ONLY in shard
+    0's slices — one device's lost increments never contaminate peers."""
+    spec = StepSpec(width=1 << 10, rows=4, dk_bits=1 << 8, window_slots=2,
+                    main_slots=16, shards=4)
+    params = make_step_params(2, 16, 12, 0, 15, 3)
+    rng = np.random.default_rng(8)
+    keys = rng.integers(0, 500, size=800, dtype=np.uint64)
+    lo, hi = keys_to_lanes(keys)
+    st, _ = step_ref(spec, params, init_step_state(spec, 2, 16),
+                     lo.astype(jnp.int32), hi.astype(jnp.int32))
+    H, HD = spec.counter_words, spec.dk_words
+    c0 = np.asarray(st["counters"])
+    assert np.abs(c0[H:]).sum() > 0             # mid-epoch: deltas live
+    dropped = faults.drop_shard_delta(spec, st, 0)
+    cd = np.asarray(dropped["counters"])
+    d3 = cd[H:].reshape(spec.rows, spec.shards, spec.wps_shard)
+    assert (d3[:, 0, :] == 0).all()
+    np.testing.assert_array_equal(               # other shards + globals
+        d3[:, 1:, :],
+        c0[H:].reshape(spec.rows, spec.shards, spec.wps_shard)[:, 1:, :])
+    np.testing.assert_array_equal(cd[:H], c0[:H])
+    gi = np.asarray(merge_halve(spec, params, st)["counters"])[:H]
+    gd = np.asarray(merge_halve(spec, params, dropped)["counters"])[:H]
+    gi3 = gi.reshape(spec.rows, spec.shards, spec.wps_shard)
+    gd3 = gd.reshape(spec.rows, spec.shards, spec.wps_shard)
+    assert (gd3[:, 0, :] == 0).all()            # shard 0 lost (global was 0)
+    np.testing.assert_array_equal(gd3[:, 1:, :], gi3[:, 1:, :])
+    # doorkeeper mirrors the counters
+    dk = np.asarray(dropped["doorkeeper"])
+    assert (dk[HD:].reshape(spec.shards, spec.dkw_shard)[0] == 0).all()
+
+
+def test_cache_table_flip_degrades_gracefully():
+    """A flipped word in the cache tables (bit-rot in the metadata, not the
+    sketch) may evict at most the entries it garbles: the run completes and
+    the hit ratio moves by at most noise."""
+    tr = zipf_trace(10_000, n_items=1_500, alpha=0.9, seed=6)
+    cfg = DeviceWTinyLFU(300, assoc=8)
+
+    def hook(cursor, state):
+        if cursor == 4096:
+            state = faults.flip_words(state, "wtab", [(1, 4)])
+            state = faults.flip_words(state, "mtab", [(7, 30)])
+            return state
+        return None
+
+    res0 = simulate_trace(tr, 300, warmup=1_000, assoc=8)
+    res1 = cfg.run(tr, warmup=1_000, fault_hook=hook, checkpoint_every=2_048)
+    assert res1.accesses == res0.accesses
+    assert abs(res1.hit_ratio - res0.hit_ratio) < 0.02
+
+
+def test_checksum_quarantine_self_heals_golden():
+    """The tentpole integrity drill on the PR-1 golden: a bit flipped in
+    shard 1's read-only global slice is caught at the next merge boundary,
+    the shard is quarantined (csum count 1), aging re-learns, and both the
+    full-run hit ratio and the post-fault tail stay inside the golden
+    ±0.01 tier."""
+    tr = zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7)
+    kw = dict(shards=2, merge_every=1600)
+    cfg = DeviceWTinyLFU(200, integrity=True, **kw)
+    spec = cfg.spec()
+
+    def hook(cursor, state):
+        if cursor == 12_800:                     # mid-run, one flip
+            return faults.flip_words(state, "counters",
+                                     [(spec.wps_shard, 2)])
+        return None
+
+    res0, _, h0 = simulate_trace(tr, 200, warmup=10_000, return_state=True,
+                                 integrity=True, **kw)
+    res1, st1, h1 = cfg.run(tr, warmup=10_000, fault_hook=hook,
+                            checkpoint_every=3_200, return_state=True)
+    assert int(np.asarray(st1["csum"])[-1]) == 1          # quarantined once
+    assert abs(res1.hit_ratio - 0.3498) < 0.01, res1.hit_ratio
+    tail0 = float(np.asarray(h0)[-20_000:].mean())
+    tail1 = float(np.asarray(h1)[-20_000:].mean())
+    assert abs(tail1 - tail0) < 0.01, (tail0, tail1)      # healed, bounded
+
+
+def test_shard_global_loss_degrades_gracefully_golden():
+    """Stale-exchange loss model: a device whose accumulated global slice
+    vanishes twice mid-run (strictly worse than missing single delta
+    exchanges).  The estimator is a sampled approximation — losing one
+    shard's estimates degrades admission, it must not break it: golden
+    ±0.01 holds with no integrity machinery at all."""
+    tr = zipf_trace(60_000, n_items=50_000, alpha=0.9, seed=7)
+    cfg = DeviceWTinyLFU(200, shards=2, merge_every=1600)
+    spec = cfg.spec()
+
+    def hook(cursor, state):
+        if cursor in (19_200, 38_400):
+            return faults.drop_shard_delta(spec, state, 0, half="global")
+        return None
+
+    res = cfg.run(tr, warmup=10_000, fault_hook=hook, checkpoint_every=3_200)
+    assert abs(res.hit_ratio - 0.3498) < 0.01, res.hit_ratio
+
+
+KILL_SCRIPT = r"""
+import numpy as np
+from repro.core.device_simulate import DeviceWTinyLFU
+from repro.traces import zipf_trace
+
+tr = zipf_trace(30_000, n_items=4_000, alpha=0.9, seed=12)
+cfg = DeviceWTinyLFU(300)
+cfg.run(tr, warmup=2_000, checkpoint_dir=%(dir)r, checkpoint_every=2_400,
+        on_checkpoint=lambda c: print("CKPT", c, flush=True))
+print("DONE", flush=True)
+"""
+
+
+def test_sigkill_resume_bit_identical(tmp_path):
+    """SIGKILL a checkpointing run mid-trace; resume in-process from the
+    latest durable checkpoint — hit sequence and final state bit-identical
+    to the uninterrupted run (atomic saves mean a kill mid-write leaves a
+    torn .tmp that latest_step ignores)."""
+    d = str(tmp_path / "ck")
+    env = {"PYTHONPATH": os.path.join(os.path.dirname(__file__), "..",
+                                      "src"),
+           "JAX_PLATFORMS": "cpu"}
+    seen, rc = faults.run_to_kill(KILL_SCRIPT % {"dir": d}, kills=3,
+                                  env=env)
+    assert seen == 3
+    assert rc == -signal.SIGKILL
+    step = latest_step(d)
+    assert step is not None and 0 < step < 30_000          # died mid-run
+    tr = zipf_trace(30_000, n_items=4_000, alpha=0.9, seed=12)
+    res0, st0, h0 = simulate_trace(tr, 300, warmup=2_000, return_state=True)
+    cfg = DeviceWTinyLFU(300)
+    res1, st1, h1 = resume_trace(tr, cfg, checkpoint_dir=d, warmup=2_000,
+                                 checkpoint_every=2_400, return_state=True)
+    assert res1.extra["resumed_at"] == step
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    for k in st0:
+        np.testing.assert_array_equal(np.asarray(st0[k]),
+                                      np.asarray(st1[k]), err_msg=k)
+
+
+MESH_KILL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+from repro.core.device_simulate import DeviceWTinyLFU
+from repro.distributed.mesh import make_shard_mesh
+from repro.traces import zipf_trace
+
+assert len(jax.devices()) == 2
+tr = zipf_trace(30_000, n_items=4_000, alpha=0.9, seed=12)
+cfg = DeviceWTinyLFU(300, shards=4, merge_every=512,
+                     mesh=make_shard_mesh(4, require=2))
+cfg.run(tr, warmup=2_000, checkpoint_dir=%(dir)r, checkpoint_every=2_048,
+        on_checkpoint=lambda c: print("CKPT", c, flush=True))
+print("DONE", flush=True)
+"""
+
+MESH_RESUME_VERIFY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+import jax
+from repro.core.device_simulate import (DeviceWTinyLFU, simulate_trace,
+                                        resume_trace)
+from repro.distributed.mesh import make_shard_mesh
+from repro.traces import zipf_trace
+
+assert len(jax.devices()) == 2
+tr = zipf_trace(30_000, n_items=4_000, alpha=0.9, seed=12)
+mesh = make_shard_mesh(4, require=2)
+kw = dict(shards=4, merge_every=512)
+res0, st0, h0 = simulate_trace(tr, 300, warmup=2_000, mesh=mesh,
+                               return_state=True, **kw)
+cfg = DeviceWTinyLFU(300, mesh=mesh, **kw)
+res1, st1, h1 = resume_trace(tr, cfg, checkpoint_dir=%(dir)r,
+                             warmup=2_000, checkpoint_every=2_048,
+                             return_state=True)
+assert res1.extra["resumed_at"] > 0
+np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+for k in st0:
+    np.testing.assert_array_equal(np.asarray(st0[k]), np.asarray(st1[k]),
+                                  err_msg=k)
+print("OK mesh kill+resume", res1.extra["resumed_at"])
+"""
+
+
+@pytest.mark.skipif(not os.environ.get("FAULT_TIER"),
+                    reason="fault tier only (FAULT_TIER=1): forced-2-device "
+                           "kill+resume subprocess pair")
+def test_kill_resume_two_devices(tmp_path):
+    d = str(tmp_path / "ck")
+    seen, rc = faults.run_to_kill(
+        MESH_KILL_SCRIPT % {"dir": d}, kills=3,
+        env={"PYTHONPATH": os.path.join(os.path.dirname(__file__), "..",
+                                        "src"),
+             "JAX_PLATFORMS": "cpu"})
+    assert seen == 3
+    assert rc == -signal.SIGKILL
+    assert latest_step(d) is not None
+    out = _run_forced_device_script(MESH_RESUME_VERIFY_SCRIPT % {"dir": d})
+    assert "OK mesh kill+resume" in out

@@ -1,0 +1,170 @@
+"""Property tests for the merge fold and the integrity checksum (ISSUE 7).
+
+Runs under the optional-`hypothesis` shim (tests/_hypothesis_compat.py):
+with the real library installed these fuzz and shrink; in the minimal CI
+image they run the same bodies over fixed seeded examples.
+
+Pinned properties:
+
+* ``merge_words`` equals the unpacked per-field reference
+  ``min(a + b, fmax)`` on arbitrary field patterns — and saturation never
+  leaks into a neighbouring packed lane;
+* the merge is commutative and associative (fold order across shards is
+  arbitrary), witnessed directly on the words and via checksum equality —
+  the admission path may fold shard deltas in any order;
+* ``halve_words`` is the per-field ``>> 1`` at both counter widths;
+* ``checksum_words`` detects every single bit flip and every swap of two
+  unequal words (the two corruptions the quarantine path is built for),
+  and checksumming is layout-stable: the per-shard fold in
+  ``shard_checksums`` equals checksumming each shard's slice directly.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels.sketch_common import (checksum_words, halve_words,
+                                         merge_words)
+from repro.kernels.sketch_merge import shard_checksums
+from repro.kernels.sketch_step import StepSpec
+
+
+def _pack(fields: np.ndarray, bits: int) -> np.ndarray:
+    n = 32 // bits
+    w = np.zeros(fields.shape[0], np.int64)
+    for i in range(n):
+        w |= fields[:, i].astype(np.int64) << (i * bits)
+    return w.astype(np.uint32).view(np.int32)
+
+
+def _unpack(words: np.ndarray, bits: int) -> np.ndarray:
+    n = 32 // bits
+    u = np.asarray(words).view(np.uint32).astype(np.int64)
+    return np.stack([(u >> (i * bits)) & ((1 << bits) - 1)
+                     for i in range(n)], axis=-1)
+
+
+def _fields(rng_seed: int, bits: int, n_words: int) -> np.ndarray:
+    fmax = (1 << bits) - 1
+    rng = np.random.default_rng(rng_seed)
+    return rng.integers(0, fmax + 1, size=(n_words, 32 // bits))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       n=st.integers(1, 64))
+def test_merge_matches_unpacked_reference(seed, bits, n):
+    fmax = (1 << bits) - 1
+    fa, fb = _fields(seed, bits, n), _fields(seed + 1, bits, n)
+    got = _unpack(np.asarray(
+        merge_words(jnp.asarray(_pack(fa, bits)),
+                    jnp.asarray(_pack(fb, bits)), bits)), bits)
+    np.testing.assert_array_equal(got, np.minimum(fa + fb, fmax))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       lane=st.integers(0, 3))
+def test_saturation_never_leaks_across_lanes(seed, bits, lane):
+    """Saturate one lane everywhere; every OTHER lane must read exactly the
+    reference sum — a borrow leak would off-by-one a neighbour."""
+    fmax = (1 << bits) - 1
+    lanes = 32 // bits
+    lane = lane % lanes
+    fa, fb = _fields(seed, bits, 32), _fields(seed + 1, bits, 32)
+    fa[:, lane] = fmax
+    fb[:, lane] = fmax
+    got = _unpack(np.asarray(
+        merge_words(jnp.asarray(_pack(fa, bits)),
+                    jnp.asarray(_pack(fb, bits)), bits)), bits)
+    assert (got[:, lane] == fmax).all()
+    others = [i for i in range(lanes) if i != lane]
+    np.testing.assert_array_equal(
+        got[:, others], np.minimum(fa + fb, fmax)[:, others])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]))
+def test_merge_commutative_associative(seed, bits):
+    """Shard deltas may fold in any order: a+b == b+a and
+    (a+b)+c == a+(b+c), asserted on the words AND via the checksum (equal
+    words <=> equal checksums is how the integrity path observes state)."""
+    a, b, c = (jnp.asarray(_pack(_fields(seed + i, bits, 48), bits))
+               for i in range(3))
+    ab, ba = merge_words(a, b, bits), merge_words(b, a, bits)
+    np.testing.assert_array_equal(np.asarray(ab), np.asarray(ba))
+    lhs = merge_words(ab, c, bits)
+    rhs = merge_words(a, merge_words(b, c, bits), bits)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+    assert int(checksum_words(lhs)) == int(checksum_words(rhs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]),
+       n=st.integers(1, 64))
+def test_halve_is_per_field_shift(seed, bits, n):
+    f = _fields(seed, bits, n)
+    got = _unpack(np.asarray(halve_words(jnp.asarray(_pack(f, bits)), bits)),
+                  bits)
+    np.testing.assert_array_equal(got, f >> 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), idx=st.integers(0, 10**9),
+       bit=st.integers(0, 31))
+def test_checksum_detects_single_bit_flip(seed, idx, bit):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-2**31, 2**31, size=64, dtype=np.int64).astype(np.int32)
+    y = x.copy()
+    i = idx % x.size
+    y.view(np.uint32)[i] ^= np.uint32(1) << np.uint32(bit)
+    assert int(checksum_words(jnp.asarray(x))) != \
+        int(checksum_words(jnp.asarray(y)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), i=st.integers(0, 10**9),
+       j=st.integers(0, 10**9))
+def test_checksum_detects_word_swap(seed, i, j):
+    """Position weighting: transposing two UNEQUAL words changes the sum
+    (a plain wrap-sum would not notice)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-2**31, 2**31, size=64, dtype=np.int64).astype(np.int32)
+    i, j = i % x.size, j % x.size
+    if i == j or x[i] == x[j]:
+        return
+    y = x.copy()
+    y[i], y[j] = x[j], x[i]
+    assert int(checksum_words(jnp.asarray(x))) != \
+        int(checksum_words(jnp.asarray(y)))
+
+
+@pytest.mark.parametrize("dk_bits", [0, 1 << 10])
+def test_shard_checksums_match_direct_slices(dk_bits):
+    """The vectorized per-shard fold equals checksumming each shard's
+    (counter-slice ‖ doorkeeper-slice) lane by hand — and mutating ONE
+    shard's slice changes exactly that shard's checksum."""
+    spec = StepSpec(width=1 << 10, rows=4, dk_bits=dk_bits, window_slots=2,
+                    main_slots=16, shards=4)
+    rng = np.random.default_rng(5)
+    gc = rng.integers(-2**31, 2**31, size=spec.counter_words,
+                      dtype=np.int64).astype(np.int32)
+    gdk = rng.integers(-2**31, 2**31, size=spec.dk_words,
+                       dtype=np.int64).astype(np.int32)
+    got = np.asarray(shard_checksums(spec, jnp.asarray(gc),
+                                     jnp.asarray(gdk)))
+    for s in range(spec.shards):
+        lane = gc.reshape(spec.rows, spec.shards,
+                          spec.wps_shard)[:, s, :].reshape(-1)
+        if spec.dk_bits:
+            lane = np.concatenate(
+                [lane, gdk.reshape(spec.shards, spec.dkw_shard)[s]])
+        assert int(checksum_words(jnp.asarray(lane))) == int(got[s])
+    bad = gc.copy()
+    bad[spec.wps_shard] ^= 1               # row 0, shard 1, word 0
+    got2 = np.asarray(shard_checksums(spec, jnp.asarray(bad),
+                                      jnp.asarray(gdk)))
+    assert got2[1] != got[1]
+    others = [0, 2, 3]
+    np.testing.assert_array_equal(got2[others], got[others])
