@@ -41,6 +41,14 @@ broken:
   CI-runner disk speed, which is not a property of this code.  The
   acceptance bar (<= 1.1x at the auto cadence) is checked by eye on the
   printed snapshot.
+* ``streams_scaling_1_to_64 < 8`` — the ISSUE 8 dispatch-amortization
+  tripwire: the B=64 lane-batched step must aggregate >= 8x the
+  single-stream acc/s on the frozen small-tenant geometry.  A real
+  regression (a scatter back in the lane program, a fusion-breaking
+  gather, per-lane dispatch re-serialized) collapses the ratio toward
+  ~1x; shared-runner noise moves it by tens of percent, not 3x — so a
+  miss WARNS below 8 and only fails when corroborated by ``< 3`` (or
+  ``--strict``).  Missing in pre-ISSUE-8 snapshots.
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -141,6 +149,22 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
             print(f"WARNING: {msg} — under the 10x corroboration bar; "
                   "attributing to machine noise", flush=True)
 
+    # multi-stream lane batching (ISSUE 8): aggregate-throughput scaling at
+    # B=64 vs single-stream on the frozen small-tenant geometry.  The lane
+    # program is scatter-free fused selects by construction; losing that
+    # (or re-serializing lane dispatch) collapses the ratio toward ~1x,
+    # far below what machine noise can do to a within-process ratio.
+    st_scale = fresh.get("streams_scaling_1_to_64")
+    if st_scale is not None and st_scale < 8.0:
+        msg = (f"streams B=64 aggregate scaling {st_scale}x < 8x over "
+               "single-stream")
+        if strict or st_scale < 3.0:
+            failures.append(
+                "lane batching no longer amortizes dispatch: " + msg)
+        else:
+            print(f"WARNING: {msg} — above the 3x corroboration floor; "
+                  "attributing to machine noise", flush=True)
+
     if baseline:
         same_machine = (baseline.get("machine") and
                         baseline.get("machine") == fresh.get("machine") and
@@ -200,7 +224,9 @@ def main(argv=None) -> int:
                                        "mesh_overhead_vs_sharded",
                                        "mesh_stale_overhead_vs_sharded",
                                        "mesh_parity_ok",
-                                       "checkpoint_overhead_vs_plain")}),
+                                       "checkpoint_overhead_vs_plain",
+                                       "streams_acc_per_s_total",
+                                       "streams_scaling_1_to_64")}),
             flush=True)
     return 1 if failures else 0
 

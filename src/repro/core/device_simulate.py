@@ -131,6 +131,7 @@ class DeviceWTinyLFU:
     mesh: object = None           # ("shard",) mesh; None = single device
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
     integrity: bool = False       # checksum + shard-quarantine merge fold
+    streams: int = 1              # lane-batched tenant caches per program
 
     def __post_init__(self):
         # eager validation (ISSUE 7): bad values used to surface as XLA
@@ -170,6 +171,16 @@ class DeviceWTinyLFU:
             raise ValueError("integrity=True requires shards > 1: the "
                              "checksums cover the per-shard global sketch "
                              "halves, which only exist in sharded mode")
+        if self.streams < 1:
+            raise ValueError(f"streams {self.streams} must be >= 1 (the "
+                             "number of lane-batched tenant caches; 1 = "
+                             "the unbatched single-stream engine)")
+        if self.streams > 1 and self.mesh is not None:
+            raise ValueError(
+                f"streams {self.streams} cannot combine with mesh=: lanes "
+                "batch WHOLE per-tenant engines while the mesh partitions "
+                "ONE engine's sketch across devices — shard tenants over "
+                "meshes at the process level instead")
 
     @property
     def window_cap(self) -> int:
@@ -265,7 +276,7 @@ class DeviceWTinyLFU:
             shards=self.shards, mesh_devices=self.mesh_devices,
             # normalized so single-device specs share one compile cache key
             mesh_exchange=self.mesh_exchange if self.mesh is not None
-            else "chunk", integrity=self.integrity)
+            else "chunk", integrity=self.integrity, streams=self.streams)
 
     @property
     def mesh_devices(self) -> int:
@@ -342,25 +353,58 @@ def _trace_lanes(trace: np.ndarray):
     return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
+def _check_trace_streams(cfg: "DeviceWTinyLFU", trace: np.ndarray):
+    """Eager trace-shape vs ``streams`` validation (PR 7 style): a mismatch
+    must raise a ValueError naming the field, not a compiled-shape error
+    from deep inside the vmapped scan."""
+    trace = np.asarray(trace)
+    if cfg.streams > 1:
+        if trace.ndim != 2 or trace.shape[0] != cfg.streams:
+            raise ValueError(
+                f"streams {cfg.streams} expects a (B, T) = ({cfg.streams}, "
+                f"T) trace — one key row per tenant lane; got trace shape "
+                f"{tuple(trace.shape)}")
+    elif trace.ndim != 1:
+        raise ValueError(
+            f"trace shape {tuple(trace.shape)} carries a lane axis but "
+            "streams is 1 (the unbatched engine, bit-identical to a 1-D "
+            f"run) — construct DeviceWTinyLFU(streams={trace.shape[0]}) "
+            "to batch tenant lanes, or pass a 1-D trace")
+
+
 # ---------------------------------------------------------------------------
 # single-trace simulation
 # ---------------------------------------------------------------------------
 
 # module-level jit wrappers/caches: jax's trace cache is keyed on the
 # wrapper object, so per-call jax.jit(...) would retrace and recompile the
-# whole scan every invocation
+# whole scan every invocation.  The dict memos are bounded like _mesh_cache
+# (PR 6): a geometry sweep mints a fresh spec per grid point and every
+# entry pins a compiled executable, so unbounded memos grow without limit
 _jit_step = jax.jit(step_ref, static_argnums=(0,))
 _pallas_cache: dict = {}
 _vmap_cache: dict = {}
+_STEP_CACHE_LIMIT = 32
 
 
 def _run_jit(spec: StepSpec, params, state, lo, hi):
     return _jit_step(spec, params, state, lo, hi)
 
 
+def _chunk_lanes(x, nc: int, L: int):
+    """(..., nc*L) -> scan-major (nc, ..., L): the chunk axis leads (scan
+    iterates over it) and the lane axis, if any, rides along so each scan
+    step sees per-lane (B, L) key rows."""
+    if x.ndim == 1:
+        return x.reshape(nc, L)
+    return x.reshape(x.shape[0], nc, L).swapaxes(0, 1)
+
+
 def _pallas_runner(spec: StepSpec, interpret: bool):
     key = (spec, interpret)
     if key not in _pallas_cache:
+        if len(_pallas_cache) >= _STEP_CACHE_LIMIT:
+            _pallas_cache.clear()
         @jax.jit
         def run(params, state, los, his, nvalid):
             def body(st, x):
@@ -375,20 +419,24 @@ def _pallas_runner(spec: StepSpec, interpret: bool):
 
 def _run_pallas(spec: StepSpec, params, state, lo, hi, chunk: int,
                 interpret: bool):
-    n = lo.shape[0]
+    n = lo.shape[-1]
     pad = (-n) % chunk
     if pad:
-        z = jnp.zeros((pad,), lo.dtype)
-        lo = jnp.concatenate([lo, z])
-        hi = jnp.concatenate([hi, z])
-    nchunks = lo.shape[0] // chunk
-    los = lo.reshape(nchunks, chunk)
-    his = hi.reshape(nchunks, chunk)
+        z = jnp.zeros(lo.shape[:-1] + (pad,), lo.dtype)
+        lo = jnp.concatenate([lo, z], axis=-1)
+        hi = jnp.concatenate([hi, z], axis=-1)
+    nchunks = lo.shape[-1] // chunk
+    los = _chunk_lanes(lo, nchunks, chunk)
+    his = _chunk_lanes(hi, nchunks, chunk)
+    # lanes share the chunking (one (B, T) trace, one T), so nvalid stays a
+    # per-chunk scalar that every lane's masked tail consumes identically
     nvalid = jnp.minimum(
         jnp.maximum(n - jnp.arange(nchunks, dtype=jnp.int32) * chunk, 0),
         chunk)
     state, hits = _pallas_runner(spec, interpret)(params, state, los, his,
                                                   nvalid)
+    if spec.streams > 1:                     # (nc, B, chunk) -> (B, T)
+        return state, hits.swapaxes(0, 1).reshape(spec.streams, -1)[:, :n]
     return state, hits.reshape(-1)[:n]
 
 
@@ -587,16 +635,18 @@ def _mesh_runner(spec: StepSpec, mesh, adaptive: bool):
 
 
 def _pad_epochs(lo, hi, n: int, E: int):
-    """Pad the trace to whole epochs; returns (los, his, nvalid) chunked."""
+    """Pad the trace to whole epochs; returns (los, his, nvalid) chunked.
+    Lane-batched traces (leading (B,) axis) pad/chunk along the access
+    axis; nvalid stays per-epoch scalar — lanes share the chunking."""
     pad = (-n) % E
     if pad:
-        z = jnp.zeros((pad,), lo.dtype)
-        lo = jnp.concatenate([lo, z])
-        hi = jnp.concatenate([hi, z])
-    ne = lo.shape[0] // E
+        z = jnp.zeros(lo.shape[:-1] + (pad,), lo.dtype)
+        lo = jnp.concatenate([lo, z], axis=-1)
+        hi = jnp.concatenate([hi, z], axis=-1)
+    ne = lo.shape[-1] // E
     nvalid = jnp.minimum(
         jnp.maximum(n - jnp.arange(ne, dtype=jnp.int32) * E, 0), E)
-    return lo.reshape(ne, E), hi.reshape(ne, E), nvalid
+    return _chunk_lanes(lo, ne, E), _chunk_lanes(hi, ne, E), nvalid
 
 
 def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
@@ -622,7 +672,7 @@ def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
                 # epoch, which at large capacities dwarfs the per-access
                 # work and sinks the flatness arm (measured 4x at C=65536)
                 merged = merge_halve(spec, params, st)
-                full = nv >= jnp.int32(clo.shape[0])
+                full = nv >= jnp.int32(clo.shape[-1])
                 gated = ("counters", "doorkeeper", "regs") + \
                     (("csum",) if spec.integrity else ())
                 st = {**st, **{k: jnp.where(full, merged[k], st[k])
@@ -650,8 +700,12 @@ def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
     it chunks the trace exactly like the jit backend (whole epochs in the
     scan, tail outside without a merge), so chunk mode's hits and final
     state are bit-identical to both single-device backends.
+
+    ``spec.streams > 1``: lo/hi are (B, T) lane traces; epochs chunk along
+    the access axis and hits come back (B, T) — lanes never interact, the
+    per-lane fold is the vmapped single-stream ``merge_halve``.
     """
-    n = lo.shape[0]
+    n = lo.shape[-1]
     E = int(merge_every)
     if mesh is not None:
         ne = n // E
@@ -664,22 +718,28 @@ def _run_sharded(spec: StepSpec, params, state, lo, hi, merge_every: int,
         los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits = _sharded_runner(spec, backend, interpret)(
             params, state, los, his, nvalid)
+        if spec.streams > 1:                 # (ne, B, E) -> (B, T)
+            return state, hits.swapaxes(0, 1).reshape(spec.streams, -1)[:, :n]
         return state, hits.reshape(-1)[:n]
     ne = n // E
     nfull = ne * E
+    B = spec.streams
     hits_parts = []
     if ne:
         state, hits = _sharded_runner(spec, backend, interpret)(
-            params, state, lo[:nfull].reshape(ne, E),
-            hi[:nfull].reshape(ne, E), jnp.full((ne,), E, jnp.int32))
-        hits_parts.append(hits.reshape(-1))
+            params, state, _chunk_lanes(lo[..., :nfull], ne, E),
+            _chunk_lanes(hi[..., :nfull], ne, E),
+            jnp.full((ne,), E, jnp.int32))
+        hits_parts.append(hits.swapaxes(0, 1).reshape(B, nfull)
+                          if B > 1 else hits.reshape(-1))
     if n - nfull:
-        state, tail = _jit_step(spec, params, state, lo[nfull:], hi[nfull:])
+        state, tail = _jit_step(spec, params, state, lo[..., nfull:],
+                                hi[..., nfull:])
         hits_parts.append(tail)
     if not hits_parts:                       # zero-length trace
-        hits_parts.append(jnp.zeros((0,), jnp.int32))
-    hits = jnp.concatenate(hits_parts) if len(hits_parts) > 1 else \
-        hits_parts[0]
+        hits_parts.append(jnp.zeros((B, 0) if B > 1 else (0,), jnp.int32))
+    hits = jnp.concatenate(hits_parts, axis=-1) if len(hits_parts) > 1 \
+        else hits_parts[0]
     return state, hits
 
 
@@ -753,7 +813,25 @@ def _climb_step(params, spec, carry, ehits, climb):
     changed) re-expands the step to delta0.  The first epoch only seeds the
     baseline — the cache is still warming, and climbing on the fill-up
     transient launches the quota far from any optimum.
+
+    ``spec.streams > 1``: every climber register is per-lane (the carry
+    scalars become (B,) rows of the (6, B) carry matrix) and the update
+    vmaps over lanes, so B tenants hill-climb independently inside one
+    program.  ``climb`` may be shared (6,) or per-lane (B, 6) — the latter
+    is how ``simulate_sweep(mode="vmap", adaptive=True)`` runs climber
+    hyperparameter grids as lanes.
     """
+    if spec.streams > 1:
+        lspec = replace(spec, streams=1)
+        cvec = jnp.asarray(climb)
+
+        def one(p, cv, st, prev, dirn, delta, ewma, trend, k, eh):
+            return _climb_step(p, lspec,
+                               (st, prev, dirn, delta, ewma, trend, k),
+                               eh, cv)
+        return jax.vmap(one, in_axes=(0 if params.ndim == 2 else None,
+                                      0 if cvec.ndim == 2 else None)
+                        + (0,) * 8)(params, cvec, *carry, ehits)
     st, prev, dirn, delta, ewma, trend, k = carry
     quota = st["regs"][R_WQUOTA]
     diff = ehits - prev
@@ -831,8 +909,10 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
                                            interpret=interpret)
                 else:
                     st, hits = step_ref(spec, params, st, clo, chi)
-                ehits = st["regs"][R_EHITS]
-                quota = st["regs"][R_WQUOTA]
+                # [..., R] keeps the epoch registers per-lane under streams
+                # (regs is (B, NREGS) there, (NREGS,) unbatched)
+                ehits = st["regs"][..., R_EHITS]
+                quota = st["regs"][..., R_WQUOTA]
                 # sharded + adaptive: the merge_halve fold rides the climb
                 # epochs (merge first, then climb + rebalance — the host
                 # twin AdaptiveWTinyLFU merges at the same point); the
@@ -844,7 +924,7 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
                 # hit count reads as a phase shift, and the jit backend —
                 # which runs the tail outside the scan — would disagree on
                 # final quota and state
-                full = nv >= jnp.int32(clo.shape[0])
+                full = nv >= jnp.int32(clo.shape[-1])
                 carry = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(full, a, b), climbed,
                     (st,) + carry[1:])
@@ -887,12 +967,18 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
     ``carry=None`` starts a fresh climb; a checkpointed run passes the
     previous segment's carry so that splitting the trace at epoch
     boundaries reproduces the single-program run bit-for-bit.
+
+    ``spec.streams > 1``: lo/hi are (B, T) lane traces, the carry is the
+    (6, B) per-lane climber-register matrix, and the trajectory rows are
+    per-lane ``(ne, B)`` — B independent hill-climbs in one program.
     """
-    n = lo.shape[0]
+    n = lo.shape[-1]
     E = int(climb.epoch_len)
     cvec = jnp.asarray(climb.resolve(cfg))
     if carry is None:
         carry = _climb_carry0(cvec)
+        if spec.streams > 1:
+            carry = jnp.repeat(carry[:, None], spec.streams, axis=1)
     if mesh is not None:
         ne = n // E
         nfull = ne * E
@@ -901,6 +987,7 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
             hi[:nfull].reshape(ne, E), lo[nfull:], hi[nfull:], cvec, carry)
         traj = (ehits, quotas) if ne else (None, None)
         return state, hits, traj, carry
+    B = spec.streams
     if backend == "pallas":
         los, his, nvalid = _pad_epochs(lo, hi, n, E)
         state, hits, ehits, quotas, carry = _adaptive_runner(
@@ -908,7 +995,9 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
                                       carry)
         nfull = n // E                   # drop the partial tail's row so the
         traj = (ehits[:nfull], quotas[:nfull]) if nfull else (None, None)
-        return state, hits.reshape(-1)[:n], traj, carry  # traj matches jit
+        hits = (hits.swapaxes(0, 1).reshape(B, -1)[:, :n] if B > 1
+                else hits.reshape(-1)[:n])
+        return state, hits, traj, carry  # traj matches jit
     ne = n // E
     nfull = ne * E
     hits_parts = []
@@ -916,18 +1005,20 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
     if ne:
         state, hits, ehits, quotas, carry = _adaptive_runner(
             spec, backend, interpret)(params, state,
-                                      lo[:nfull].reshape(ne, E),
-                                      hi[:nfull].reshape(ne, E),
+                                      _chunk_lanes(lo[..., :nfull], ne, E),
+                                      _chunk_lanes(hi[..., :nfull], ne, E),
                                       jnp.full((ne,), E, jnp.int32), cvec,
                                       carry)
-        hits_parts.append(hits.reshape(-1))
+        hits_parts.append(hits.swapaxes(0, 1).reshape(B, nfull)
+                          if B > 1 else hits.reshape(-1))
     if n - nfull:
-        state, tail = _jit_step(spec, params, state, lo[nfull:], hi[nfull:])
+        state, tail = _jit_step(spec, params, state, lo[..., nfull:],
+                                hi[..., nfull:])
         hits_parts.append(tail)
     if not hits_parts:                       # zero-length trace
-        hits_parts.append(jnp.zeros((0,), jnp.int32))
-    hits = jnp.concatenate(hits_parts) if len(hits_parts) > 1 else \
-        hits_parts[0]
+        hits_parts.append(jnp.zeros((B, 0) if B > 1 else (0,), jnp.int32))
+    hits = jnp.concatenate(hits_parts, axis=-1) if len(hits_parts) > 1 \
+        else hits_parts[0]
     return state, hits, (ehits, quotas), carry
 
 
@@ -961,6 +1052,8 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     cfg = DeviceWTinyLFU(capacity, window_frac=window_frac,
                          sample_factor=sample_factor, adaptive=adaptive,
                          **cfg_kw)
+    trace = np.asarray(trace)
+    _check_trace_streams(cfg, trace)
     spec = cfg.spec()
     params = cfg.params(warmup=warmup)
     state = init_step_state(spec, cfg.window_cap, cfg.main_cap)
@@ -1004,7 +1097,8 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     regs = np.asarray(state["regs"])
     wall = time.perf_counter() - t0
 
-    counted = len(trace) - warmup
+    # warmup applies per lane (each tenant's own R_T register counts it)
+    counted = (trace.shape[-1] - warmup) * cfg.streams
     extra = {"backend": backend, "window_frac": window_frac,
              "assoc": cfg.assoc, "device": jax.default_backend()}
     if cfg.mesh is not None:
@@ -1016,14 +1110,23 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
         extra["merge_every"] = climb.epoch_len if adaptive else cfg.merge_epoch
     if adaptive:
         extra["adaptive"] = True
-        extra["final_quota"] = int(regs[R_WQUOTA])
+        extra["final_quota"] = ([int(q) for q in regs[:, R_WQUOTA]]
+                                if cfg.streams > 1 else int(regs[R_WQUOTA]))
         if trajectory is not None:
             extra["trajectory"] = trajectory
+    if cfg.streams > 1:
+        # aggregate hits in the SimResult; per-lane breakdown in extra
+        # (trajectory rows are already per-lane (ne, B) lists)
+        extra["streams"] = cfg.streams
+        extra["lane_hits"] = [int(h) for h in regs[:, R_HITS]]
+        n_hits = int(regs[:, R_HITS].sum())
+    else:
+        n_hits = int(regs[R_HITS])
     res = SimResult(policy="w-tinylfu(device)" + ("+climb" if adaptive
                                                   else ""),
                     cache_size=capacity,
-                    trace=trace_name, accesses=counted, hits=int(regs[R_HITS]),
-                    hit_ratio=int(regs[R_HITS]) / max(1, counted),
+                    trace=trace_name, accesses=counted, hits=n_hits,
+                    hit_ratio=n_hits / max(1, counted),
                     wall_s=wall, extra=extra)
     if return_state:
         return res, state, hits
@@ -1085,6 +1188,8 @@ def _config_meta(cfg: "DeviceWTinyLFU", climb: ClimbSpec, warmup: int,
         "merge_every", "integrity")}
     meta["mesh_exchange"] = (cfg.mesh_exchange if cfg.mesh is not None
                             else "chunk")
+    if cfg.streams > 1:          # absent at 1 so pre-streams manifests match
+        meta["streams"] = cfg.streams
     if cfg.adaptive:
         meta["climb"] = [int(x) for x in climb.resolve(cfg)]
     meta["warmup"] = int(warmup)
@@ -1140,10 +1245,17 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
     if segmenting and backend != "jit":
         raise ValueError("checkpointing / fault injection segment the jit "
                          "scan: use backend='jit'")
+    if segmenting and cfg.streams > 1:
+        raise ValueError(
+            f"streams {cfg.streams} does not combine with checkpoint_dir/"
+            "fault_hook: the checkpoint tree and fault surface are the "
+            "single-tenant state layout — run per-tenant streams=1 runs "
+            "for fault-tolerant execution")
+    _check_trace_streams(cfg, trace)
+    lo, hi = _trace_lanes(trace)
     every = (_resolve_every(cfg, climb, checkpoint_every) if segmenting
              else None)
-    lo, hi = _trace_lanes(trace)
-    n = lo.shape[0]
+    n = lo.shape[-1]
     state = (_state if _state is not None
              else init_step_state(spec, cfg.window_cap, cfg.main_cap))
     carry = _carry
@@ -1164,8 +1276,8 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
         j = n if every is None else min(n, i + every)
         if j > i:
             state, hits, (eh, qu), carry = _segment(
-                cfg, spec, params, state, lo[i:j], hi[i:j], climb, carry,
-                backend, chunk, interpret)
+                cfg, spec, params, state, lo[..., i:j], hi[..., i:j],
+                climb, carry, backend, chunk, interpret)
             hits_parts.append(hits)
             if eh is not None:
                 ehits_parts.append(eh)
@@ -1209,7 +1321,7 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
     regs = np.asarray(state["regs"])
     wall = time.perf_counter() - t0
 
-    counted = n - warmup
+    counted = (n - warmup) * cfg.streams
     extra = {"backend": backend, "window_frac": cfg.window_frac,
              "assoc": cfg.assoc, "device": jax.default_backend()}
     if cfg.mesh is not None:
@@ -1219,9 +1331,16 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
         extra["shards"] = cfg.shards
         extra["merge_every"] = (climb.epoch_len if cfg.adaptive
                                 else cfg.merge_epoch)
+    if cfg.streams > 1:
+        extra["streams"] = cfg.streams
+        extra["lane_hits"] = [int(h) for h in regs[:, R_HITS]]
+        n_hits = int(regs[:, R_HITS].sum())
+    else:
+        n_hits = int(regs[R_HITS])
     if cfg.adaptive:
         extra["adaptive"] = True
-        extra["final_quota"] = int(regs[R_WQUOTA])
+        extra["final_quota"] = ([int(q) for q in regs[:, R_WQUOTA]]
+                                if cfg.streams > 1 else int(regs[R_WQUOTA]))
         if ehits_parts:
             ehits = np.asarray(jnp.concatenate(ehits_parts))
             quotas = np.asarray(jnp.concatenate(quota_parts))
@@ -1235,8 +1354,8 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
     res = SimResult(policy="w-tinylfu(device)" + ("+climb" if cfg.adaptive
                                                   else ""),
                     cache_size=cfg.capacity, trace=trace_name,
-                    accesses=counted, hits=int(regs[R_HITS]),
-                    hit_ratio=int(regs[R_HITS]) / max(1, counted),
+                    accesses=counted, hits=n_hits,
+                    hit_ratio=n_hits / max(1, counted),
                     wall_s=wall, extra=extra)
     if return_state:
         return res, state, hits
@@ -1343,11 +1462,18 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
     ``trace`` may be ``(N,)`` (shared by all configs) or ``(G, N)`` (one
     trace per grid point, e.g. seed sweeps).
 
-    ``adaptive=True`` runs each grid point as one epoch-chunked compiled
-    program with the in-program hill-climber (``window_fracs`` seed the
-    initial quotas) — sequential mode only: the climbers' quota histories
-    diverge per config, which defeats the shared-geometry premise of the
-    vmapped grid.
+    ``adaptive=True`` runs the in-program hill-climber per grid point
+    (``window_fracs`` seed the initial quotas).  ``mode="sequential"``
+    runs one epoch-chunked compiled program per config;
+    ``mode="vmap"`` runs the whole grid as tenant LANES of ONE
+    ``streams=len(grid)`` compiled program (``StepSpec.streams``) —
+    per-lane quota and climber registers keep every grid point's history
+    independent, bit-identical to the sequential runs.  The lanes share
+    one static geometry, so vmapped adaptive grids may vary
+    ``window_fracs`` and climb hyperparameters but not capacity/sizing.
+    ``climb`` may be one ``ClimbSpec`` for the whole grid or a sequence of
+    ``len(grid)`` specs (uniform ``epoch_len`` — the lanes climb in
+    lockstep), which is how climber hyperparameter grids sweep as lanes.
     """
     grid = [DeviceWTinyLFU(C, window_frac=wf, sample_factor=sample_factor,
                            adaptive=adaptive, **cfg_kw)
@@ -1359,17 +1485,20 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         for c in grid:
             c.mesh_devices    # eager: reject bad mesh/shards combos up front
     if mode == "auto":
-        # adaptive/sharded/meshed grids can't share geometry (quota
-        # histories diverge; merge epochs need the epoch-chunked runner;
-        # mesh runs need the shard_map runner), so auto resolves to the
-        # only valid mode even on accelerators
+        # sharded/meshed grids can't share geometry (merge epochs need the
+        # epoch-chunked runner; mesh runs need the shard_map runner), and
+        # adaptive grids usually sweep capacities (distinct geometries), so
+        # auto resolves to the always-valid mode even on accelerators;
+        # adaptive same-geometry grids opt into lanes with mode="vmap"
         mode = "sequential" if (adaptive or sharded or meshed) else (
             "vmap" if jax.default_backend() == "tpu" else "sequential")
     if adaptive:
-        if mode == "vmap":
-            raise ValueError("adaptive sweeps run per-config compiled "
-                             "programs: use mode='sequential'")
         climb = climb or ClimbSpec()
+        climbs = (list(climb) if isinstance(climb, (list, tuple))
+                  else [climb] * len(grid))
+        if len(climbs) != len(grid):
+            raise ValueError(f"climb sequence length {len(climbs)} != "
+                             f"{len(grid)} grid configurations")
     if meshed and mode == "vmap":
         raise ValueError("mesh sweeps run per-config shard_map programs "
                          "(the vmapped scan would silently run the "
@@ -1386,7 +1515,61 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
     n_per = trace.shape[-1]
 
     t0 = time.perf_counter()
-    if mode == "vmap":
+    if mode == "vmap" and adaptive:
+        # the long-standing vmapped-adaptive-sweeps item: the grid's
+        # climbers become tenant LANES of one streams=G compiled program
+        # (StepSpec.streams) — per-lane quota and climber registers keep
+        # every grid point's history independent, so the results are
+        # bit-identical to the sequential per-config runs
+        # (tests/test_streams.py pins it).  Lanes advance one shared
+        # program, so the grid must agree on the static geometry —
+        # capacity/sizing sweeps change it and stay sequential.
+        specs = {c.spec() for c in grid}
+        if len(specs) != 1:
+            raise ValueError(
+                "adaptive vmap sweeps run the grid as lanes of ONE "
+                "compiled program, which needs one shared static geometry; "
+                f"this grid has {len(specs)} distinct geometries "
+                "(capacities or sizing differ) — sweep window_fracs or "
+                "climb hyperparameters, or use mode='sequential'")
+        G = len(grid)
+        lspec = specs.pop()
+        spec = replace(lspec, streams=G)
+        epochs = {int(cl.epoch_len) for cl in climbs}
+        if len(epochs) != 1:
+            raise ValueError(
+                "adaptive vmap sweeps climb in lockstep, so climb.epoch_len "
+                f"must be uniform across the grid (got {sorted(epochs)}) — "
+                "use mode='sequential' for mixed epoch lengths")
+        E = epochs.pop()
+        pstack = jnp.stack([c.params(warmup=warmup) for c in grid])
+        sstack = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[init_step_state(lspec, c.window_cap, c.main_cap)
+              for c in grid])
+        cstack = jnp.stack([jnp.asarray(cl.resolve(c))
+                            for cl, c in zip(climbs, grid)])
+        carry = jnp.stack([_climb_carry0(cv) for cv in cstack], axis=1)
+        if shared_trace:
+            l1, h1 = _trace_lanes(trace)
+            lo = jnp.broadcast_to(l1, (G, n_per))
+            hi = jnp.broadcast_to(h1, (G, n_per))
+        else:
+            lanes = [_trace_lanes(t) for t in trace]
+            lo = jnp.stack([l for l, _ in lanes])
+            hi = jnp.stack([h for _, h in lanes])
+        ne = n_per // E
+        nfull = ne * E
+        st = sstack
+        if ne:
+            st, _, _, _, carry = _adaptive_runner(spec, "jit", False)(
+                pstack, st, _chunk_lanes(lo[:, :nfull], ne, E),
+                _chunk_lanes(hi[:, :nfull], ne, E),
+                jnp.full((ne,), E, jnp.int32), cstack, carry)
+        if n_per - nfull:       # the (< epoch) tail steps but never climbs
+            st, _ = _jit_step(spec, pstack, st, lo[:, nfull:], hi[:, nfull:])
+        regs = np.asarray(st["regs"])
+    elif mode == "vmap":
         # one program for the whole grid: shared (largest) static geometry,
         # per-config capacities traced, excess slots marked as padding
         big = max(grid, key=lambda c: c.capacity)
@@ -1423,6 +1606,8 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
             in_axes = (0, 0, 0, 0)
         key = (spec, in_axes)
         if key not in _vmap_cache:
+            if len(_vmap_cache) >= _STEP_CACHE_LIMIT:
+                _vmap_cache.clear()
             _vmap_cache[key] = jax.jit(jax.vmap(
                 lambda p, s, l, h: step_ref(spec, p, s, l, h),
                 in_axes=in_axes))
@@ -1436,13 +1621,13 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
         else:
             lanes = [_trace_lanes(t) for t in trace]
         outs = []
-        for c, (l, h) in zip(grid, lanes):
+        for gi, (c, (l, h)) in enumerate(zip(grid, lanes)):
             spec = c.spec()
             st = init_step_state(spec, c.window_cap, c.main_cap)
             if adaptive:
                 st, _, _, _ = _run_adaptive(c, spec, c.params(warmup=warmup),
-                                            st, l, h, climb, "jit", False,
-                                            mesh=c.mesh)
+                                            st, l, h, climbs[gi], "jit",
+                                            False, mesh=c.mesh)
                 outs.append(st["regs"])
             elif c.shards > 1:
                 st, _ = _run_sharded(spec, c.params(warmup=warmup), st,

@@ -35,6 +35,8 @@ the per-access path stays free of cross-device traffic.
 """
 from __future__ import annotations
 
+from dataclasses import replace
+
 import jax
 import jax.numpy as jnp
 
@@ -77,6 +79,16 @@ def merge_halve(spec: StepSpec, params: jnp.ndarray, state: dict) -> dict:
     halving passes — zero iterations on the epochs where no reset is due.
     """
     assert spec.shards > 1, "merge_halve requires StepSpec.shards > 1"
+    if spec.streams > 1:
+        # lane-batched tenants (StepSpec.streams): vmap the single-stream
+        # fold over the leading lane axis of every state leaf.  Per-lane
+        # ``size`` registers give per-lane halving counts, so the deferred
+        # §3.3 aging batches into a masked while-loop — once per epoch over
+        # the small per-tenant buffers, not on the per-access path.
+        lspec = replace(spec, streams=1)
+        pax = 0 if params.ndim == 2 else None
+        return jax.vmap(lambda p, s: merge_halve(lspec, p, s),
+                        in_axes=(pax, 0))(params, state)
     H, HD = spec.counter_words, spec.dk_words
     gc, dc = state["counters"][:H], state["counters"][H:]
     gdk, ddk = state["doorkeeper"][:HD], state["doorkeeper"][HD:]

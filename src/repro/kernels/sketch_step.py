@@ -103,7 +103,7 @@ so between chunks the state never round-trips through fresh HBM allocations.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -244,6 +244,21 @@ class StepSpec:
         :func:`repro.kernels.sketch_merge.merge_halve_mesh` all-gather;
         hit ratios land in the goldens-±0.01 tier (host twin:
         ``core.sketch.ShardedFrequencySketch(stale_estimates=True)``).
+    ``streams`` (default 1)
+        Lane-batched multi-tenant execution: ``B > 1`` advances B
+        INDEPENDENT cache instances in lockstep inside one compiled scan.
+        Every mutable state leaf gains a leading lane axis ``(B, …)``, key
+        lanes arrive as ``(B, T)``, and the step dispatches through
+        ``jax.vmap`` of the ``streams=1`` program — with the per-access
+        single-slot writes re-expressed as fused masked selects
+        (:data:`_LANE_TRACE`), because vmapping a per-lane-indexed
+        ``dynamic_update_slice`` would lower to one XLA-CPU scatter per
+        write site (~7µs FIXED cost each, regardless of operand size —
+        measured to cap lane scaling at ~2x).  ``streams=1`` never takes
+        the dispatch and compiles the byte-identical unbatched program.
+        Interaction: incompatible with ``mesh_devices`` (the lanes would
+        vmap over the mesh axis the shard_map already owns); the pallas
+        backend batches through pallas' own vmap rule.
     ``integrity`` (default False)
         Self-healing sketch integrity (requires ``shards > 1``).  Adds a
         ``"csum"`` state vector of ``shards + 1`` int32 words: per-shard
@@ -270,8 +285,15 @@ class StepSpec:
     mesh_devices: int = 0         # shard_map devices; 0 = single-device
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
     integrity: bool = False       # per-shard checksums + quarantine fold
+    streams: int = 1              # lane-batched tenant instances (B >= 1)
 
     def __post_init__(self):
+        assert self.streams >= 1, "streams must be >= 1"
+        if self.streams > 1:
+            assert self.mesh_devices == 0, (
+                "streams (lane-batched tenants) cannot combine with "
+                "mesh_devices (the lanes would vmap over the mesh axis "
+                "the shard_map already owns)")
         if self.integrity:
             assert self.shards > 1, (
                 "integrity checksums cover the per-shard global sketch "
@@ -422,6 +444,13 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
     capacities from the registers instead of from padding (flat: resident
     counts gate inserts; set: per-set usable-way masks).
     """
+    if spec.streams > 1:
+        # every lane starts from the identical zeroed instance; per-lane
+        # capacities (vmapped sweeps) stack per-config states instead
+        base = init_step_state(replace(spec, streams=1), window_cap,
+                               main_cap)
+        return jax.tree_util.tree_map(
+            lambda v: jnp.repeat(v[None], spec.streams, axis=0), base)
     wcap = spec.window_slots if window_cap is None else int(window_cap)
     mcap = spec.main_slots if main_cap is None else int(main_cap)
     assert 1 <= wcap <= spec.window_slots and 1 <= mcap <= spec.main_slots
@@ -576,7 +605,16 @@ def _ds_gather(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     access — measured 3-5x at width 2^17.  Scalar dynamic slices are
     costed by the slice, not the operand, and a 1-element output cannot be
     partitioned.
+
+    Lane mode (:data:`_LANE_TRACE`): one fused fancy-indexing gather — the
+    unrolled scalar slices would batch into k separate gather ops, and the
+    per-tenant buffers of a lane-batched run sit far below the partitioner
+    cliff the unrolling works around.  (A one-hot select-and-sum
+    contraction was tried instead and measured ~25% SLOWER at B=64: the
+    reduce roots fragment the fused where-chains.)
     """
+    if _LANE_TRACE[0]:
+        return arr[idx]
     return jnp.concatenate([jax.lax.dynamic_slice(arr, (idx[i],), (1,))
                             for i in range(idx.shape[0])])
 
@@ -594,6 +632,98 @@ _PARTITION_CLIFF_BYTES = 1 << 19
 
 def _big_operand(nwords: int) -> bool:
     return nwords * 4 >= _PARTITION_CLIFF_BYTES
+
+
+# ---------------------------------------------------------------------------
+# lane-batched write discipline (StepSpec.streams > 1)
+# ---------------------------------------------------------------------------
+# Trace-time flag: True only while the streams dispatcher (_step_lanes) is
+# vmapping the streams=1 program over the lane axis.  Under vmap, every
+# single-slot write whose index is traced PER LANE (argmin/argmax results,
+# hashed probe words) would batch from dynamic_update_slice into an XLA
+# scatter — and on XLA CPU each scatter op carries a ~7µs FIXED dispatch
+# cost regardless of operand size, which caps lane scaling at ~2x (measured;
+# the scatter "unique_indices" hints make it WORSE).  The helpers below emit
+# today's exact .at[]/DUS expressions when the flag is off — so the
+# streams=1 trace stays byte-identical — and fused masked selects when it is
+# on: chained one-hot `where` passes over the same buffer fuse into ~one
+# elementwise pass (cost ∝ bytes, no per-op penalty), which is what makes
+# thousands of small tenant caches per step pay off.  Out-of-bounds
+# semantics differ (.at clamps, the mask drops) but every wrapped index is
+# an argmin/argmax/hash result, provably in bounds.  The flag is consulted
+# at TRACE time only; cache safety follows from the jit key: traces with the
+# flag on are only ever produced under a spec whose ``streams`` differs.
+_LANE_TRACE = [False]
+
+
+def _barrier(x):
+    """``optimization_barrier`` — identity under lanes: the barrier is an
+    XLA-CPU scheduling hint for the in-place DUS discipline (which the lane
+    form replaces with fused selects) and it has no vmap batching rule."""
+    if _LANE_TRACE[0]:
+        return x
+    return jax.lax.optimization_barrier(x)
+
+
+def _lset(arr, j, v, pred=None):
+    """``arr.at[j].set(where(pred, v, arr[j]))`` — scatter-free under lanes.
+
+    The predicate folds INTO the one-hot mask in lane mode (one fused
+    select, NO ``arr[j]`` gather): the gathers the unbatched expression
+    embeds would otherwise break the fused where-chain into separate
+    full-buffer passes, which measured ~100 unfused (B, N) sweeps per step.
+    """
+    if not _LANE_TRACE[0]:
+        if pred is None:
+            return arr.at[j].set(v)
+        return arr.at[j].set(jnp.where(pred, v, arr[j]))
+    iota = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    m = (iota == j) if pred is None else ((iota == j) & pred)
+    return jnp.where(m, v, arr)
+
+
+def _lset_row(arr, j, row, pred=None):
+    """``arr.at[j].set(where(pred, row, arr[j]))`` (2-D arr, row write)."""
+    if not _LANE_TRACE[0]:
+        if pred is None:
+            return arr.at[j].set(row)
+        return arr.at[j].set(jnp.where(pred, row, arr[j]))
+    iota = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    m = (iota == j) if pred is None else ((iota == j) & pred)
+    return jnp.where(m[:, None], row[None, :], arr)
+
+
+def _lset_col(arr, col, v):
+    """``arr.at[:, col].set(v)`` (STATIC col) — scatter-free variant."""
+    if not _LANE_TRACE[0]:
+        return arr.at[:, col].set(v)
+    iota = jnp.arange(arr.shape[1], dtype=jnp.int32)
+    return jnp.where(iota[None, :] == col, v[:, None], arr)
+
+
+def _ldus1(arr, upd, j):
+    """``dynamic_update_slice(arr, upd, (j,))`` with a (1,) update."""
+    if not _LANE_TRACE[0]:
+        return jax.lax.dynamic_update_slice(arr, upd, (j,))
+    iota = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    return jnp.where(iota == j, upd[0], arr)
+
+
+def _ldus_block(tab, blk, s, A):
+    """``dynamic_update_slice(tab, blk, (s*A, 0))`` — whole-set block write.
+
+    Takes the SET index ``s`` (not the row offset): the lane form exploits
+    the set alignment to reshape ``tab`` to (n_sets, A, cols) and select the
+    target set with a one-hot broadcast — a generic batched block update
+    (take_along_axis) would instead materialize full-table gathers.
+    """
+    if not _LANE_TRACE[0]:
+        return jax.lax.dynamic_update_slice(tab, blk, (s * A, 0))
+    n_sets = tab.shape[0] // A
+    t3 = tab.reshape(n_sets, A, tab.shape[1])
+    iota = jnp.arange(n_sets, dtype=jnp.int32)
+    t3 = jnp.where((iota == s)[:, None, None], blk[None, :, :], t3)
+    return t3.reshape(tab.shape)
 
 
 def _counter_vals(spec: StepSpec, words: jnp.ndarray,
@@ -658,7 +788,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
             # a dynamic-slice read fused INTO a later DUS write re-reads
             # the original buffer mid-chain, keeping it live and costing
             # two full copies per access
-            words, gwords = jax.lax.optimization_barrier(
+            words, gwords = _barrier(
                 (_ds_gather(dk, dw_idx), _ds_gather(dk, w_idx)))
             eff_words = words | gwords                 # | global half (read)
             # the global-half gather feeds only the LATER counter writes
@@ -674,7 +804,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
                 # costed by its OPERAND and the parallel task partitioner
                 # multithreads it past the cliff — a thread-pool dispatch
                 # per access
-                words = jax.lax.optimization_barrier(_ds_gather(dk, w_idx))
+                words = _barrier(_ds_gather(dk, w_idx))
             else:
                 words = dk[w_idx]                      # (dkp,) one gather
             eff_words = words
@@ -695,7 +825,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
                 if j != i:                             # same-word probes merge
                     merged = merged | jnp.where(w_idx[j] == w_idx[i],
                                                 bitm[j], 0)
-            dk = jax.lax.dynamic_update_slice(dk, merged[None], (dw_idx[i],))
+            dk = _ldus1(dk, merged[None], dw_idx[i])
         gate = present.astype(jnp.bool_)   # repeat visitor -> main table
     else:
         gate = jnp.bool_(True)
@@ -704,7 +834,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
     if spec.shards > 1:
         dflat = spec.counter_words + flat              # delta half (written)
         # barrier: same read-materialization discipline as the doorkeeper
-        words, gw = jax.lax.optimization_barrier(
+        words, gw = _barrier(
             (_ds_gather(counters, dflat), _ds_gather(counters, flat)))
         # conservative update judges the COMBINED count; the bump lands in
         # the delta field.  bump only fires while the combined min < cap,
@@ -726,7 +856,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
             # — a fused (rows,)-gather over a >= 2^18-counter buffer gets
             # multithreaded by the parallel task partitioner, putting a
             # thread-pool dispatch on every access
-            words = jax.lax.optimization_barrier(_ds_gather(counters, flat))
+            words = _barrier(_ds_gather(counters, flat))
             vals = _counter_vals(spec, words, kidx)
             m = vals[0]
             for r in range(1, spec.rows):
@@ -740,8 +870,7 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
     new = jnp.where(bump & (vals == m),
                     words + (jnp.int32(1) << (sub * spec.counter_bits)), words)
     for r in range(spec.rows):         # rows write disjoint word segments
-        counters = jax.lax.dynamic_update_slice(
-            counters, new[r][None], (dflat[r],))
+        counters = _ldus1(counters, new[r][None], dflat[r])
 
     size = size + 1
     if spec.shards > 1:
@@ -749,7 +878,12 @@ def _sketch_add(spec: StepSpec, params, counters, dk, size, kidx, kdkb,
         # (kernels/sketch_merge.py) — the per-access path never resets
         return counters, dk, size
     do_reset = (params[P_SAMPLE] > 0) & (size >= params[P_SAMPLE])
-    if use_cond:
+    # lanes: the dynamic-trip-count word loops would batch into a masked
+    # while over PER-LANE trip counts with one scatter per word — the fused
+    # masked pass (identical arithmetic) is the scatter-free form, and the
+    # small per-tenant sketches of a lane-batched run sit well below the
+    # size where the masked pass was ever a problem
+    if use_cond and not _LANE_TRACE[0]:
         # dynamic-trip-count word loops: 0 iterations on the (vast majority
         # of) accesses where no reset fires, in-place single-word updates
         # when it does.  Neither lax.cond (copies its big operands on every
@@ -1027,18 +1161,30 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
         mst = t
 
     # -- 2. lookups (meta >= 0 <=> resident; padding slots hold sentinel key)
-    jw = jnp.argmax((wlo == klo) & (whi == khi))
-    hit_w = (wlo[jw] == klo) & (whi[jw] == khi) & (wmeta[jw] >= 0)
-    jm = jnp.argmax((mlo == klo) & (mhi == khi))
-    hit_m = (mlo[jm] == klo) & (mhi[jm] == khi) & (mmeta[jm] >= 0)
+    eqw = (wlo == klo) & (whi == khi)
+    eqm = (mlo == klo) & (mhi == khi)
+    jw = jnp.argmax(eqw)
+    jm = jnp.argmax(eqm)
+    if _LANE_TRACE[0]:
+        # a key occupies at most one slot per table (inserts fire only on
+        # miss), so the gather-at-argmax hit test collapses to a reduction
+        # over the already-materialized equality mask — each scalar gather
+        # op in the batched program breaks the fused elementwise chain and
+        # its fixed dispatch cost dominates the small-tenant lane step
+        hit_w = jnp.any(eqw & (wmeta >= 0))
+        hit_m = jnp.any(eqm & (mmeta >= 0))
+        promote = hit_m & jnp.any(eqm & (mmeta >= 0) & (mmeta < _PROT))
+    else:
+        hit_w = (wlo[jw] == klo) & (whi[jw] == khi) & (wmeta[jw] >= 0)
+        hit_m = (mlo[jm] == klo) & (mhi[jm] == khi) & (mmeta[jm] >= 0)
+        promote = hit_m & (mmeta[jm] < _PROT)
     hit = hit_w | hit_m
 
     # -- 3a. window hit: refresh LRU stamp -----------------------------------
-    wmeta = wmeta.at[jw].set(jnp.where(hit_w, wst, wmeta[jw]))
+    wmeta = _lset(wmeta, jw, wst, hit_w)
 
     # -- 3b. main hit: SLRU promote-or-refresh -> protected MRU --------------
-    promote = hit_m & (mmeta[jm] < _PROT)
-    mmeta = mmeta.at[jm].set(jnp.where(hit_m, _PROT | mst, mmeta[jm]))
+    mmeta = _lset(mmeta, jm, _PROT | mst, hit_m)
     pcount = regs[R_PCOUNT] + promote.astype(jnp.int32)
     # protected overflow -> demote its LRU entry back to probation MRU.
     # Adaptive: a rebalance can shrink the runtime budget below the resident
@@ -1054,7 +1200,7 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
     else:
         over = pcount > prot_rt
     kd = jnp.argmin(jnp.where(mmeta >= _PROT, mmeta, _I32_MAX))
-    mmeta = mmeta.at[kd].set(jnp.where(over, mst, mmeta[kd]))
+    mmeta = _lset(mmeta, kd, mst, over)
     pcount = pcount - over.astype(jnp.int32)
 
     # -- 4. miss: insert into window; LRU overflow asks admission ------------
@@ -1068,16 +1214,22 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                                   wmeta))
     else:
         ws = jnp.argmin(wmeta)
-    push = miss & (wmeta[ws] >= 0)              # evicting a resident entry
+    if _LANE_TRACE[0] and not spec.adaptive:
+        # ws == argmin(wmeta), so the gathered value IS the min — the
+        # reduction reuses the argmin's input and saves a gather op
+        wsmeta = wmeta.min()
+    else:
+        wsmeta = wmeta[ws]
+    push = miss & (wsmeta >= 0)                 # evicting a resident entry
     if spec.adaptive:                           # R_WCOUNT bookkeeping
-        w_filled = miss & (wmeta[ws] == _EMPTY)
+        w_filled = miss & (wsmeta == _EMPTY)
     cand_lo, cand_hi = wlo[ws], whi[ws]
     cand_idx, cand_dkb = widx[ws], wdkb[ws]
-    wlo = wlo.at[ws].set(jnp.where(miss, klo, wlo[ws]))
-    whi = whi.at[ws].set(jnp.where(miss, khi, whi[ws]))
-    wmeta = wmeta.at[ws].set(jnp.where(miss, wst, wmeta[ws]))
-    widx = widx.at[ws].set(jnp.where(miss, kidx, widx[ws]))
-    wdkb = wdkb.at[ws].set(jnp.where(miss, kdkb, wdkb[ws]))
+    wlo = _lset(wlo, ws, klo, miss)
+    whi = _lset(whi, ws, khi, miss)
+    wmeta = _lset(wmeta, ws, wst, miss)
+    widx = _lset_row(widx, ws, kidx, miss)
+    wdkb = _lset_row(wdkb, ws, kdkb, miss)
 
     # single argmin = free slot < probation LRU < protected LRU (exact SLRU
     # victim priority); padding (+MAX) is unreachable
@@ -1087,7 +1239,10 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                                      mmeta))
     else:
         tslot = jnp.argmin(mmeta)
-    vmeta = mmeta[tslot]
+    if _LANE_TRACE[0] and not spec.adaptive:
+        vmeta = mmeta.min()                     # == mmeta[argmin(mmeta)]
+    else:
+        vmeta = mmeta[tslot]
     m_free = vmeta < 0
     # fused TinyLFU verdict from stored probes (post-record sketch state)
     est = _estimate_pair(spec, counters, dk,
@@ -1095,11 +1250,11 @@ def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                          jnp.stack([cand_dkb, mdkb[tslot]]))
     admit = est[0] > est[1]
     do_ins = push & (m_free | admit)
-    mlo = mlo.at[tslot].set(jnp.where(do_ins, cand_lo, mlo[tslot]))
-    mhi = mhi.at[tslot].set(jnp.where(do_ins, cand_hi, mhi[tslot]))
-    mmeta = mmeta.at[tslot].set(jnp.where(do_ins, mst, mmeta[tslot]))
-    midx = midx.at[tslot].set(jnp.where(do_ins, cand_idx, midx[tslot]))
-    mdkb = mdkb.at[tslot].set(jnp.where(do_ins, cand_dkb, mdkb[tslot]))
+    mlo = _lset(mlo, tslot, cand_lo, do_ins)
+    mhi = _lset(mhi, tslot, cand_hi, do_ins)
+    mmeta = _lset(mmeta, tslot, mst, do_ins)
+    midx = _lset_row(midx, tslot, cand_idx, do_ins)
+    mdkb = _lset_row(mdkb, tslot, cand_dkb, do_ins)
     pcount = pcount - (do_ins & (vmeta >= _PROT)).astype(jnp.int32)
 
     # -- 5. bookkeeping ------------------------------------------------------
@@ -1206,12 +1361,12 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
             return mcap_rt // nms + (s < mcap_rt % nms).astype(jnp.int32)
 
         def mask_ways(blk, u, col):
-            return blk.at[:, col].set(
-                jnp.where(way_ids >= u, _I32_MAX, blk[:, col]))
+            return _lset_col(blk, col,
+                             jnp.where(way_ids >= u, _I32_MAX, blk[:, col]))
 
         def unmask_ways(blk, u, col):
-            return blk.at[:, col].set(
-                jnp.where(way_ids >= u, _EMPTY, blk[:, col]))
+            return _lset_col(blk, col,
+                             jnp.where(way_ids >= u, _EMPTY, blk[:, col]))
         # globally unique stamps across tables (window even, main odd):
         # see _one_access_flat — the rebalance migrates window records
         # into main, where a stamp collision would leave victim
@@ -1261,7 +1416,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     hit = hit_w | hit_m
 
     # -- 3a. window hit/miss: refresh stamp, insert on miss (not yet written)
-    wmeta = wmeta.at[jw].set(jnp.where(hit_w, wst, wmeta[jw]))
+    wmeta = _lset(wmeta, jw, wst, hit_w)
     miss = ~hit
     ws = jnp.argmin(wmeta)
     newrow = jnp.concatenate(
@@ -1274,14 +1429,14 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     w_ok = wmeta[ws] != _I32_MAX
     push = miss & ((wmeta[ws] >= 0) | ~w_ok)
     cand = jnp.where(w_ok, wblk[ws], newrow)    # full packed record
-    wblk = wblk.at[:, WT_META].set(wmeta)
-    wblk = wblk.at[ws].set(jnp.where(miss & w_ok, newrow, wblk[ws]))
+    wblk = _lset_col(wblk, WT_META, wmeta)
+    wblk = _lset_row(wblk, ws, newrow, miss & w_ok)
 
     # -- 3b. main hit: SLRU promote-or-refresh within the RESIDENT set -------
     def hit_update(blk, match, hit_half):
         meta = blk[:, MT_META]
         j = jnp.argmax(match)
-        meta = meta.at[j].set(jnp.where(hit_half, _PROT | mst, meta[j]))
+        meta = _lset(meta, j, _PROT | mst, hit_half)
         # the set's protected budget scales its usable ways by the global
         # protected fraction; counting resident protected beats carrying a
         # per-set register (padding meta +MAX excluded: stamps < 2^31-1)
@@ -1291,8 +1446,8 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
                           // jnp.maximum(1, params[P_MAIN_CAP]))
         over = hit_half & (nprot > cap)
         kd = jnp.argmin(jnp.where(meta >= _PROT, meta, _I32_MAX))
-        meta = meta.at[kd].set(jnp.where(over, mst, meta[kd]))
-        return blk.at[:, MT_META].set(meta)
+        meta = _lset(meta, kd, mst, over)
+        return _lset_col(blk, MT_META, meta)
 
     mblk1u = hit_update(mblk1, match1, hit1)
     mblk2u = hit_update(mblk2, match2, hit2)
@@ -1334,8 +1489,8 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     in2 = do_ins & (tslot >= A)
     j1 = jnp.minimum(tslot, A - 1)
     j2 = jnp.clip(tslot - A, 0, A - 1)
-    cb1u = cb1.at[j1].set(jnp.where(in1, candrow, cb1[j1]))
-    cb2u = cb2.at[j2].set(jnp.where(in2, candrow, cb2[j2]))
+    cb1u = _lset_row(cb1, j1, candrow, in1)
+    cb2u = _lset_row(cb2, j2, candrow, in2)
     cb2u = jnp.where(same_c, cb1u, cb2u)
 
     # -- 5. writes last; later writes win where the four sets alias ----------
@@ -1347,12 +1502,12 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     cb2u = unmask_ways(cb2u, m_usable(c2), MT_META)
     wblk = unmask_ways(wblk, w_usable(kwset), WT_META)
     zm = _sched_dep(mblk2u) | _sched_dep(cb1u) | _sched_dep(cb2u)
-    mtab = jax.lax.dynamic_update_slice(mtab, mblk1u | zm, (km1 * A, 0))
-    mtab = jax.lax.dynamic_update_slice(mtab, m2eff, (km2 * A, 0))
-    mtab = jax.lax.dynamic_update_slice(mtab, cb1u, (c1 * A, 0))
-    mtab = jax.lax.dynamic_update_slice(mtab, cb2u, (c2 * A, 0))
+    mtab = _ldus_block(mtab, mblk1u | zm, km1, A)
+    mtab = _ldus_block(mtab, m2eff, km2, A)
+    mtab = _ldus_block(mtab, cb1u, c1, A)
+    mtab = _ldus_block(mtab, cb2u, c2, A)
     zw = _sched_dep(cb1u) | _sched_dep(cb2u)    # cand-derived: covers reads
-    wtab = jax.lax.dynamic_update_slice(wtab, wblk | zw, (kwset * A, 0))
+    wtab = _ldus_block(wtab, wblk | zw, kwset, A)
 
     # -- 6. bookkeeping (R_PCOUNT is unused: protected counts are per-set) ---
     counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
@@ -1361,7 +1516,7 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
         # load-aware quota distribution (single-word DUS, O(1) per access)
         wsl = state["wsl"]
         lcur = jax.lax.dynamic_slice(wsl, (kwset,), (1,))
-        wsl = jax.lax.dynamic_update_slice(wsl, lcur + 1, (kwset,))
+        wsl = _ldus1(wsl, lcur + 1, kwset)
         regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
                           wquota, regs[5], regs[6],
                           regs[R_EHITS] + hit.astype(jnp.int32)])
@@ -1543,6 +1698,45 @@ def rebalance(spec: StepSpec, params: jnp.ndarray, state: dict,
 # reference backend: lax.scan over the chunk (jit twin of the fused kernel)
 # ---------------------------------------------------------------------------
 
+def _step_lanes(fn, spec: StepSpec, params, state, lo, hi, n_valid,
+                lane_trace: bool = True, **kw):
+    """Dispatch a ``streams=B`` step: vmap the ``streams=1`` program.
+
+    ``params`` may be shared ``(NPARAMS,)`` or per-lane ``(B, NPARAMS)``
+    (vmapped sweeps); all state leaves and key lanes carry a leading lane
+    axis.  ``n_valid`` may be shared (scalar) or per-lane ``(B,)``.  While
+    the vmapped trace runs, :data:`_LANE_TRACE` re-expresses every
+    per-lane-indexed single-slot write as a fused masked select (see the
+    flag's comment) — the pallas path skips the flag (``lane_trace=False``):
+    pallas' own vmap rule batches the kernel by a grid dimension, inside
+    which the indices stay unbatched.
+    """
+    B = spec.streams
+    if lo.ndim != 2 or lo.shape[0] != B:
+        raise ValueError(
+            f"streams={B} expects (B, T) key lanes; got trace shape "
+            f"{tuple(lo.shape)} — one row per tenant lane")
+    lspec = replace(spec, streams=1)
+    axes = [0 if params.ndim == 2 else None, 0, 0, 0]
+    args = [params, state, lo, hi]
+    if n_valid is not None:
+        nv = jnp.asarray(n_valid, jnp.int32)
+        axes.append(0 if nv.ndim else None)
+        args.append(nv)
+
+        def run(p, s, l, h, n):
+            return fn(lspec, p, s, l, h, n, **kw)
+    else:
+        def run(p, s, l, h):
+            return fn(lspec, p, s, l, h, **kw)
+    prev = _LANE_TRACE[0]
+    _LANE_TRACE[0] = lane_trace
+    try:
+        return jax.vmap(run, in_axes=tuple(axes))(*args)
+    finally:
+        _LANE_TRACE[0] = prev
+
+
 def step_ref(spec: StepSpec, params: jnp.ndarray, state: dict,
              lo: jnp.ndarray, hi: jnp.ndarray,
              n_valid: jnp.ndarray | int | None = None,
@@ -1556,7 +1750,14 @@ def step_ref(spec: StepSpec, params: jnp.ndarray, state: dict,
     latency between its big reductions), 1 for the set path (unrolling
     defeats XLA CPU's in-place buffer reuse across the chained single-word
     updates, reintroducing O(state) copies per access).
+
+    ``spec.streams = B > 1`` expects ``(B, T)`` key lanes and lane-axis
+    state and runs all B tenant lanes in one vmapped scan (unroll forced to
+    1: the lane axis already fills the vector units).
     """
+    if spec.streams > 1:
+        return _step_lanes(step_ref, spec, params, state, lo, hi, n_valid,
+                           unroll=1 if unroll is None else unroll)
     if unroll is None:
         unroll = 4 if spec.assoc is None else 1
     (b,) = lo.shape
@@ -1636,8 +1837,13 @@ def step_pallas(spec: StepSpec, params: jnp.ndarray, state: dict,
 
     Same signature/semantics as :func:`step_ref`.  Probes and set indices are
     precomputed vectorized outside the kernel (they are pure functions of the
-    keys) and streamed in with the key lanes.
+    keys) and streamed in with the key lanes.  ``spec.streams > 1`` batches
+    through pallas' vmap rule (a fresh grid dimension; the kernel body stays
+    unbatched, so the lane-write discipline is not needed).
     """
+    if spec.streams > 1:
+        return _step_lanes(step_pallas, spec, params, state, lo, hi,
+                           n_valid, lane_trace=False, interpret=interpret)
     (b,) = lo.shape
     n_valid = b if n_valid is None else n_valid
     lo = lo.astype(jnp.int32)

@@ -228,6 +228,55 @@ def phase_shift_trace(length: int, n_hot: int = 2000, alpha: float = 0.9,
 
 
 # ---------------------------------------------------------------------------
+def tenant_lanes_trace(streams: int, length: int, n_items: int = 10_000,
+                       alpha: float = 0.9, tenant_alpha: float = 1.0,
+                       drift_every: int = 0, seed: int = 0) -> np.ndarray:
+    """Multi-tenant lane trace for the batched engine
+    (``DeviceWTinyLFU(streams=B)``): a ``(streams, length)`` int64 key
+    matrix, row b = tenant b's private access stream.
+
+    Zipf-over-tenants × per-tenant Zipf keys: tenant popularity
+    ``Zipf(tenant_alpha)`` over the lanes sets each tenant's working-set
+    size — the rank-r tenant draws from a ``Zipf(alpha)`` over
+    ``n_items / r^tenant_alpha`` keys (floor 64), so hot tenants
+    concentrate reuse on small hot sets while tail tenants sprawl — the
+    Zipf-of-Zipfs shape multi-tenant skew comparisons care about
+    (arXiv:2503.02504).  Key ids are offset per lane into disjoint ranges
+    (tenants never share keys, matching per-tenant isolated caches).
+
+    ``drift_every > 0`` re-draws each lane's rank→key permutation every
+    ``drift_every`` accesses with a per-lane PHASE OFFSET of
+    ``b * drift_every / streams`` accesses, so tenant phase changes are
+    staggered across lanes instead of synchronized — the worst case for
+    any cross-tenant resource adaptation, and the pattern that makes
+    per-lane climb trajectories genuinely diverge.
+    """
+    if streams < 1:
+        raise ValueError(f"streams {streams} must be >= 1")
+    rng = _rng(seed)
+    tenant_rank = rng.permutation(streams) + 1        # rank 1 = hottest
+    out = np.empty((streams, length), dtype=np.int64)
+    for b in range(streams):
+        nb = max(64, int(n_items / tenant_rank[b] ** tenant_alpha))
+        probs = zipf_probs(nb, alpha)
+        ranks = _sample_from_probs(probs, length, rng)
+        perm = rng.permutation(nb).astype(np.int64)
+        if drift_every and drift_every > 0:
+            phase = (b * drift_every) // streams
+            pos = 0
+            while pos < length:
+                nxt = min(length, pos + (drift_every - (pos + phase)
+                                         % drift_every))
+                out[b, pos:nxt] = perm[ranks[pos:nxt]]
+                perm = rng.permutation(nb).astype(np.int64)
+                pos = nxt
+        else:
+            out[b] = perm[ranks]
+        out[b] += b * (n_items + 64)                  # disjoint id ranges
+    return out
+
+
+# ---------------------------------------------------------------------------
 def multi_tenant_prompt_trace(n_requests: int, n_tenants: int = 200,
                               tenant_alpha: float = 1.0,
                               prefix_blocks_mean: int = 24,

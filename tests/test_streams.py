@@ -1,0 +1,212 @@
+"""Lane isolation and parity for the multi-stream batched engine
+(``StepSpec.streams`` / ``DeviceWTinyLFU(streams=B)``).
+
+The contract under test: a ``streams=B`` run advances B independent tenant
+caches in ONE compiled program and is bit-identical, lane by lane, to B
+separate single-stream runs — same per-access hit flags, same final
+registers, same adaptive quota trajectories.  ``streams=1`` is the
+unbatched engine itself (same spec value, same compiled program).  The
+batched program must also stay scatter-free: per-access scatters cost a
+fixed ~µs each on CPU and would sink the dispatch-amortization win the
+lane axis exists for (benchmarks/bench_device.py section 9 measures it).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_simulate import (DeviceWTinyLFU, ClimbSpec,
+                                        simulate_trace, simulate_sweep)
+from repro.kernels.sketch_step import init_step_state, step_ref
+from repro.traces.synthetic import tenant_lanes_trace, fickle_churn_trace
+
+B, C, T = 3, 64, 3000
+CL = ClimbSpec(epoch_len=512)
+
+
+def lanes_trace(seed=0):
+    return tenant_lanes_trace(B, T, n_items=5000, alpha=1.1, seed=seed)
+
+
+def run_lanes(traces, **kw):
+    return simulate_trace(traces, C, streams=traces.shape[0],
+                          return_state=True, **kw)
+
+
+def run_solo(traces, **kw):
+    return [simulate_trace(traces[b], C, return_state=True, **kw)
+            for b in range(traces.shape[0])]
+
+
+def assert_lane_parity(traces, **kw):
+    res, state, hits = run_lanes(traces, **kw)
+    solos = run_solo(traces, **kw)
+    for b, (rs, ss, sh) in enumerate(solos):
+        np.testing.assert_array_equal(np.asarray(hits[b]), np.asarray(sh),
+                                      err_msg=f"lane {b} hit sequence")
+        for k in ss:
+            np.testing.assert_array_equal(
+                np.asarray(state[k][b]), np.asarray(ss[k]),
+                err_msg=f"lane {b} state[{k!r}]")
+    assert res.hits == sum(rs.hits for rs, _, _ in solos)
+    assert res.extra["lane_hits"] == [rs.hits for rs, _, _ in solos]
+    return res, solos
+
+
+def test_lane_parity_flat():
+    assert_lane_parity(lanes_trace())
+
+
+def test_lane_parity_assoc():
+    assert_lane_parity(lanes_trace(1), assoc=4)
+
+
+def test_lane_parity_sharded():
+    assert_lane_parity(lanes_trace(2), shards=4, merge_every=512)
+
+
+def test_lane_parity_sharded_integrity():
+    assert_lane_parity(lanes_trace(3), shards=4, merge_every=512,
+                       integrity=True)
+
+
+def test_lane_parity_pallas():
+    # pallas batches through its own vmap rule (grid dimension), not the
+    # lane-write discipline — still bit-identical per lane
+    assert_lane_parity(lanes_trace(4), backend="pallas", chunk=512)
+
+
+def test_lane_parity_adaptive_with_quota_trajectories():
+    res, solos = assert_lane_parity(lanes_trace(5), adaptive=True, climb=CL)
+    quotas = np.asarray(res.extra["trajectory"]["quota"])   # (ne, B)
+    ehits = np.asarray(res.extra["trajectory"]["epoch_hits"])
+    for b, (rs, _, _) in enumerate(solos):
+        assert quotas[:, b].tolist() == rs.extra["trajectory"]["quota"]
+        assert ehits[:, b].tolist() == rs.extra["trajectory"]["epoch_hits"]
+        assert res.extra["final_quota"][b] == rs.extra["final_quota"]
+
+
+def test_adversarial_lane_cannot_perturb_neighbor():
+    """Lane 0 streams an adversarial all-once churn (sketch poison, window
+    thrash); lane 1's hit sequence must equal its solo run bit-for-bit."""
+    benign = lanes_trace(6)
+    adversarial = fickle_churn_trace(T, n_hot=8, hot_frac=0.02,
+                                     seed=9).astype(np.int64)
+    traces = np.stack([adversarial, benign[1], benign[2]])
+    _, _, hits = run_lanes(traces)
+    for b in (1, 2):
+        _, _, sh = simulate_trace(traces[b], C, return_state=True)
+        np.testing.assert_array_equal(np.asarray(hits[b]), np.asarray(sh),
+                                      err_msg=f"lane {b} perturbed by "
+                                      "adversarial lane 0")
+
+
+def test_streams1_bit_identical_to_unbatched():
+    tr = lanes_trace(7)[0]
+    r1, s1, h1 = simulate_trace(tr, C, streams=1, return_state=True)
+    r0, s0, h0 = simulate_trace(tr, C, return_state=True)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h0))
+    for k in s0:
+        np.testing.assert_array_equal(np.asarray(s1[k]), np.asarray(s0[k]))
+    # same spec value -> literally the same compiled program (cache key)
+    assert DeviceWTinyLFU(C, streams=1).spec() == DeviceWTinyLFU(C).spec()
+
+
+def test_lane_program_is_scatter_free():
+    """The batched step must not lower to scatter ops: each one costs
+    fixed ~µs dispatch on CPU, which is exactly the overhead the lane
+    batching amortizes away (lane writes are fused one-hot selects)."""
+    spec = DeviceWTinyLFU(C, streams=B).spec()
+    state = init_step_state(spec, DeviceWTinyLFU(C).window_cap,
+                            DeviceWTinyLFU(C).main_cap)
+    lo = jnp.zeros((B, 64), jnp.int32)
+    params = DeviceWTinyLFU(C, streams=B).params()
+    hlo = jax.jit(step_ref, static_argnums=(0,)).lower(
+        spec, params, state, lo, lo).compile().as_text()
+    assert "scatter" not in hlo.lower()
+
+
+def test_vmapped_adaptive_sweep_matches_sequential():
+    """The acceptance criterion: an adaptive grid runs as lanes via
+    simulate_sweep(mode="vmap") where it previously raised ValueError."""
+    tr = lanes_trace(8)[0]
+    wfs = (0.02, 0.1, 0.3)
+    rv = simulate_sweep(tr, [C], window_fracs=wfs, mode="vmap",
+                        adaptive=True, climb=CL)
+    rs = simulate_sweep(tr, [C], window_fracs=wfs, mode="sequential",
+                        adaptive=True, climb=CL)
+    assert [r.hits for r in rv] == [r.hits for r in rs]
+    assert ([r.extra["final_quota"] for r in rv]
+            == [r.extra["final_quota"] for r in rs])
+
+
+def test_climb_hyperparameter_grid_as_lanes():
+    tr = lanes_trace(9)[0]
+    climbs = [ClimbSpec(epoch_len=512, delta0=d, warm_epochs=w)
+              for d, w in ((1, 1), (3, 2), (8, 3))]
+    rv = simulate_sweep(tr, [C], window_fracs=(0.1,) * 3, mode="vmap",
+                        adaptive=True, climb=climbs)
+    rs = simulate_sweep(tr, [C], window_fracs=(0.1,) * 3, mode="sequential",
+                        adaptive=True, climb=climbs)
+    assert [r.hits for r in rv] == [r.hits for r in rs]
+    assert ([r.extra["final_quota"] for r in rv]
+            == [r.extra["final_quota"] for r in rs])
+
+
+def test_adaptive_vmap_sweep_rejects_mixed_geometry():
+    with pytest.raises(ValueError, match="shared static geometry"):
+        simulate_sweep(lanes_trace(10)[0], [32, 64], mode="vmap",
+                       adaptive=True, climb=CL)
+
+
+def test_adaptive_vmap_sweep_rejects_mixed_epochs():
+    climbs = [ClimbSpec(epoch_len=512), ClimbSpec(epoch_len=1024)]
+    with pytest.raises(ValueError, match="epoch_len must be uniform"):
+        simulate_sweep(lanes_trace(11)[0], [C], window_fracs=(0.05, 0.2),
+                       mode="vmap", adaptive=True, climb=climbs)
+
+
+def test_validation_names_the_field():
+    tr = lanes_trace(12)
+    with pytest.raises(ValueError, match="streams 0"):
+        DeviceWTinyLFU(C, streams=0)
+    with pytest.raises(ValueError, match="streams 2 cannot combine"):
+        DeviceWTinyLFU(C, streams=2, shards=4, mesh=object())
+    with pytest.raises(ValueError, match=r"streams 3 expects a \(B, T\)"):
+        simulate_trace(tr[0], C, streams=B)
+    with pytest.raises(ValueError, match=r"streams 2 expects a \(B, T\)"):
+        simulate_trace(tr, C, streams=2)
+    with pytest.raises(ValueError, match="streams is 1"):
+        simulate_trace(tr, C)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        DeviceWTinyLFU(C, streams=B).run(tr, checkpoint_dir="/tmp/nope")
+    with pytest.raises(ValueError, match="fault_hook"):
+        DeviceWTinyLFU(C, streams=B).run(tr, fault_hook=lambda c, s: None)
+
+
+def test_init_state_lane_axis():
+    spec = DeviceWTinyLFU(C, streams=B).spec()
+    base = init_step_state(DeviceWTinyLFU(C).spec())
+    state = init_step_state(spec)
+    for k, v in base.items():
+        assert state[k].shape == (B,) + v.shape
+        for b in range(B):
+            np.testing.assert_array_equal(np.asarray(state[k][b]),
+                                          np.asarray(v))
+
+
+def test_tenant_lanes_trace_shape_and_isolation():
+    tr = tenant_lanes_trace(4, 500, n_items=200, seed=3)
+    assert tr.shape == (4, 500) and tr.dtype == np.int64
+    # deterministic given seed; lanes occupy disjoint key ranges
+    np.testing.assert_array_equal(
+        tr, tenant_lanes_trace(4, 500, n_items=200, seed=3))
+    sets = [set(row.tolist()) for row in tr]
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert not (sets[a] & sets[b]), (a, b)
+    # staggered drift changes the stream but stays per-lane disjoint
+    td = tenant_lanes_trace(4, 500, n_items=200, drift_every=128, seed=3)
+    assert td.shape == (4, 500)
+    assert any(not np.array_equal(td[b], tr[b]) for b in range(4))
