@@ -49,6 +49,14 @@ broken:
   ~1x; shared-runner noise moves it by tens of percent, not 3x — so a
   miss WARNS below 8 and only fails when corroborated by ``< 3`` (or
   ``--strict``).  Missing in pre-ISSUE-8 snapshots.
+* ``policy_acc_per_s_{s3fifo,arc,lfu} < policy_acc_per_s_wtinylfu / 2`` —
+  the ISSUE 9 policy-panel arm: the competitor policies share the fused
+  per-access scan body and geometry with W-TinyLFU, so a > 2x throughput
+  gap flags a fused-shape break in that policy's branch.  WARN-only (hit
+  ratios are pinned by ``tests/test_policy_panel.py``; throughput parity
+  is advisory on shared runners).  ARC's warning is currently expected:
+  its per-access ghost-Bloom maintenance measures ~4.5x on XLA-CPU (see
+  docs/BENCHMARKS.md arm 8).  Missing in pre-ISSUE-9 snapshots.
 * set-assoc throughput more than ``--drop`` (default 30%) below the
   baseline snapshot — only enforced when both snapshots carry the same
   ``machine`` fingerprint: absolute acc/s is meaningless across machines.
@@ -165,6 +173,23 @@ def check(fresh: dict, baseline: dict | None, *, threshold: float = 0.9,
             print(f"WARNING: {msg} — above the 3x corroboration floor; "
                   "attributing to machine noise", flush=True)
 
+    # policy panel (ISSUE 9): the competitor policies share the fused
+    # per-access scan body and geometry with W-TinyLFU, so their acc/s
+    # should land within ~2x of the default policy.  A bigger gap means a
+    # policy branch broke out of the fused shape (a scatter, a cond-copied
+    # table, a widened operand) — but hit-ratio exactness is pinned by the
+    # test tier, and throughput parity is aspirational on shared runners,
+    # so this arm only ever WARNS.  Missing in pre-ISSUE-9 snapshots.
+    pol_base = fresh.get("policy_acc_per_s_wtinylfu")
+    if pol_base:
+        for pol in ("s3fifo", "arc", "lfu"):
+            pol_rate = fresh.get(f"policy_acc_per_s_{pol}")
+            if pol_rate and pol_rate < pol_base / 2.0:
+                print(f"WARNING: policy {pol!r} runs "
+                      f"{pol_base / pol_rate:.1f}x slower than w-tinylfu "
+                      "in the same geometry — check its branch for a "
+                      "fused-shape break (warn-only arm)", flush=True)
+
     if baseline:
         same_machine = (baseline.get("machine") and
                         baseline.get("machine") == fresh.get("machine") and
@@ -226,7 +251,10 @@ def main(argv=None) -> int:
                                        "mesh_parity_ok",
                                        "checkpoint_overhead_vs_plain",
                                        "streams_acc_per_s_total",
-                                       "streams_scaling_1_to_64")}),
+                                       "streams_scaling_1_to_64",
+                                       "policy_acc_per_s_s3fifo",
+                                       "policy_acc_per_s_arc",
+                                       "policy_acc_per_s_lfu")}),
             flush=True)
     return 1 if failures else 0
 

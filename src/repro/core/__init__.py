@@ -7,6 +7,7 @@ from .wtinylfu import WTinyLFU, AdaptiveWTinyLFU
 from .policies import (
     Cache, Eviction, LRUEviction, FIFOEviction, RandomEviction, LFUEviction,
     SLRUEviction, ReplacementPolicy, ARC, LIRS, TwoQ, WLFU, PLFU,
+    SetAssocS3FIFO, SetAssocARC, SetAssocLFU,
 )
 from .simulate import run_trace, run_matrix, SimResult, save_results, \
     load_results, theoretical_max_hit_ratio
@@ -17,7 +18,7 @@ __all__ = [
     "TinyLFUAdmission", "tinylfu_cache", "WTinyLFU", "AdaptiveWTinyLFU",
     "Cache", "Eviction", "LRUEviction", "FIFOEviction", "RandomEviction",
     "LFUEviction", "SLRUEviction", "ReplacementPolicy", "ARC", "LIRS", "TwoQ",
-    "WLFU", "PLFU",
+    "WLFU", "PLFU", "SetAssocS3FIFO", "SetAssocARC", "SetAssocLFU",
     "run_trace", "run_matrix", "SimResult", "save_results", "load_results",
     "theoretical_max_hit_ratio",
 ]

@@ -45,7 +45,7 @@ from repro.kernels.sketch_step import (StepSpec, MESH_AXIS, make_step_params,
                                        init_step_state, step_ref, step_pallas,
                                        rebalance, _state_keys,
                                        R_HITS, R_WQUOTA, R_EHITS)
-from repro.kernels.sketch_common import keys_to_lanes
+from repro.kernels.sketch_common import keys_to_lanes, POLICIES
 from repro.kernels.sketch_merge import merge_halve, merge_halve_mesh
 from . import adaptive
 from .hashing import assoc_geometry, slots_for
@@ -132,6 +132,7 @@ class DeviceWTinyLFU:
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
     integrity: bool = False       # checksum + shard-quarantine merge fold
     streams: int = 1              # lane-batched tenant caches per program
+    policy: str = "wtinylfu"      # device policy panel: s3fifo | arc | lfu
 
     def __post_init__(self):
         # eager validation (ISSUE 7): bad values used to surface as XLA
@@ -181,13 +182,49 @@ class DeviceWTinyLFU:
                 "batch WHOLE per-tenant engines while the mesh partitions "
                 "ONE engine's sketch across devices — shard tenants over "
                 "meshes at the process level instead")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy {self.policy!r} must be one of "
+                             f"{POLICIES}")
+        if self.policy != "wtinylfu":
+            if self.assoc is None:
+                raise ValueError(
+                    f"policy {self.policy!r} requires assoc= (the "
+                    "competitor panel reuses the set-associative table "
+                    "machinery; the flat exact tables are W-TinyLFU-only)")
+            if self.shards > 1 or self.mesh is not None:
+                raise ValueError(
+                    f"policy {self.policy!r} cannot combine with shards/"
+                    "mesh: the sharded sketch split serves the TinyLFU "
+                    "admission filter — competitors run single-sketch")
+            if self.adaptive:
+                raise ValueError(
+                    f"policy {self.policy!r} cannot combine with "
+                    "adaptive=True: the hill-climbed quota rebalances the "
+                    "W-TinyLFU window/main split (arc adapts its own "
+                    "target p as runtime state instead)")
+            if self.integrity:
+                raise ValueError(
+                    f"policy {self.policy!r} cannot combine with "
+                    "integrity=True (it requires shards > 1)")
+        if self.policy == "arc" and not self.doorkeeper:
+            raise ValueError(
+                "policy 'arc' requires doorkeeper=True: the B1/B2 ghost "
+                "lists are Bloom halves addressed by the doorkeeper probe "
+                "schedule, so dk_bits must be sized (> 0)")
 
     @property
     def window_cap(self) -> int:
+        # arc/lfu run main-table-only: the window table stays allocated at
+        # its 1-entry minimum and the kernels never touch it
+        if self.policy in ("arc", "lfu"):
+            return 1
         return max(1, int(round(self.capacity * self.window_frac)))
 
     @property
     def main_cap(self) -> int:
+        # arc/lfu: the main table IS the cache (no window share)
+        if self.policy in ("arc", "lfu"):
+            return max(1, self.capacity)
         return max(1, self.capacity - self.window_cap)
 
     @property
@@ -276,7 +313,8 @@ class DeviceWTinyLFU:
             shards=self.shards, mesh_devices=self.mesh_devices,
             # normalized so single-device specs share one compile cache key
             mesh_exchange=self.mesh_exchange if self.mesh is not None
-            else "chunk", integrity=self.integrity, streams=self.streams)
+            else "chunk", integrity=self.integrity, streams=self.streams,
+            policy=self.policy)
 
     @property
     def mesh_devices(self) -> int:
@@ -1022,6 +1060,40 @@ def _run_adaptive(cfg: "DeviceWTinyLFU", spec: StepSpec, params, state,
     return state, hits, (ehits, quotas), carry
 
 
+def _policy_label(cfg: "DeviceWTinyLFU", adaptive: bool) -> str:
+    """SimResult.policy label.  The W-TinyLFU spelling predates the policy
+    panel and is pinned by downstream plot/golden tooling, so it is kept
+    verbatim; competitors label as ``"<policy>(device)"``."""
+    base = ("w-tinylfu(device)" if cfg.policy == "wtinylfu"
+            else f"{cfg.policy}(device)")
+    return base + ("+climb" if adaptive else "")
+
+
+def _row_extra(cfg: "DeviceWTinyLFU", climb: "ClimbSpec | None",
+               adaptive: bool) -> dict:
+    """Config-knob rows shared by every ``SimResult.extra`` the engine
+    emits — ``simulate_trace``, ``run()``, and each ``simulate_sweep`` row
+    build on this one dict so the row schema cannot drift (sweep rows used
+    to silently omit ``streams``/``integrity``/``merge_every``).  Knobs at
+    their defaults stay absent so pre-existing row shapes are unchanged."""
+    extra = {}
+    if cfg.policy != "wtinylfu":
+        extra["policy"] = cfg.policy
+    if cfg.mesh is not None:
+        extra["mesh_devices"] = cfg.mesh_devices
+        extra["mesh_exchange"] = cfg.mesh_exchange
+    if cfg.shards > 1:
+        extra["shards"] = cfg.shards
+        # adaptive+sharded: the fold rides the climb epochs, not merge_epoch
+        extra["merge_every"] = (climb.epoch_len if adaptive and climb
+                                else cfg.merge_epoch)
+    if cfg.integrity:
+        extra["integrity"] = True
+    if cfg.streams > 1:
+        extra["streams"] = cfg.streams
+    return extra
+
+
 def simulate_trace(trace: np.ndarray, capacity: int, *,
                    window_frac: float = 0.01, sample_factor: int = 8,
                    warmup: int = 0, backend: str = "jit", chunk: int = 512,
@@ -1100,14 +1172,8 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     # warmup applies per lane (each tenant's own R_T register counts it)
     counted = (trace.shape[-1] - warmup) * cfg.streams
     extra = {"backend": backend, "window_frac": window_frac,
-             "assoc": cfg.assoc, "device": jax.default_backend()}
-    if cfg.mesh is not None:
-        extra["mesh_devices"] = cfg.mesh_devices
-        extra["mesh_exchange"] = cfg.mesh_exchange
-    if cfg.shards > 1:
-        extra["shards"] = cfg.shards
-        # adaptive+sharded: the fold rides the climb epochs, not merge_epoch
-        extra["merge_every"] = climb.epoch_len if adaptive else cfg.merge_epoch
+             "assoc": cfg.assoc, "device": jax.default_backend(),
+             **_row_extra(cfg, climb, adaptive)}
     if adaptive:
         extra["adaptive"] = True
         extra["final_quota"] = ([int(q) for q in regs[:, R_WQUOTA]]
@@ -1117,13 +1183,11 @@ def simulate_trace(trace: np.ndarray, capacity: int, *,
     if cfg.streams > 1:
         # aggregate hits in the SimResult; per-lane breakdown in extra
         # (trajectory rows are already per-lane (ne, B) lists)
-        extra["streams"] = cfg.streams
         extra["lane_hits"] = [int(h) for h in regs[:, R_HITS]]
         n_hits = int(regs[:, R_HITS].sum())
     else:
         n_hits = int(regs[R_HITS])
-    res = SimResult(policy="w-tinylfu(device)" + ("+climb" if adaptive
-                                                  else ""),
+    res = SimResult(policy=_policy_label(cfg, adaptive),
                     cache_size=capacity,
                     trace=trace_name, accesses=counted, hits=n_hits,
                     hit_ratio=n_hits / max(1, counted),
@@ -1190,6 +1254,8 @@ def _config_meta(cfg: "DeviceWTinyLFU", climb: ClimbSpec, warmup: int,
                             else "chunk")
     if cfg.streams > 1:          # absent at 1 so pre-streams manifests match
         meta["streams"] = cfg.streams
+    if cfg.policy != "wtinylfu":  # absent at default so old manifests match
+        meta["policy"] = cfg.policy
     if cfg.adaptive:
         meta["climb"] = [int(x) for x in climb.resolve(cfg)]
     meta["warmup"] = int(warmup)
@@ -1323,16 +1389,9 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
 
     counted = (n - warmup) * cfg.streams
     extra = {"backend": backend, "window_frac": cfg.window_frac,
-             "assoc": cfg.assoc, "device": jax.default_backend()}
-    if cfg.mesh is not None:
-        extra["mesh_devices"] = cfg.mesh_devices
-        extra["mesh_exchange"] = cfg.mesh_exchange
-    if cfg.shards > 1:
-        extra["shards"] = cfg.shards
-        extra["merge_every"] = (climb.epoch_len if cfg.adaptive
-                                else cfg.merge_epoch)
+             "assoc": cfg.assoc, "device": jax.default_backend(),
+             **_row_extra(cfg, climb, cfg.adaptive)}
     if cfg.streams > 1:
-        extra["streams"] = cfg.streams
         extra["lane_hits"] = [int(h) for h in regs[:, R_HITS]]
         n_hits = int(regs[:, R_HITS].sum())
     else:
@@ -1351,8 +1410,7 @@ def _run_checkpointed(cfg: "DeviceWTinyLFU", trace, *, warmup=0,
         extra["checkpoint_every"] = every
     if _start:
         extra["resumed_at"] = int(_start)
-    res = SimResult(policy="w-tinylfu(device)" + ("+climb" if cfg.adaptive
-                                                  else ""),
+    res = SimResult(policy=_policy_label(cfg, cfg.adaptive),
                     cache_size=cfg.capacity, trace=trace_name,
                     accesses=counted, hits=n_hits,
                     hit_ratio=n_hits / max(1, counted),
@@ -1441,8 +1499,9 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
                    sample_factor: int = 8, warmup: int = 0,
                    trace_name: str = "?", verbose: bool = False,
                    mode: str = "auto", adaptive: bool = False,
-                   climb: ClimbSpec | None = None, **cfg_kw) -> list[SimResult]:
-    """Cartesian (capacity × window_frac) sweep as one compiled program.
+                   climb: ClimbSpec | None = None,
+                   policies=("wtinylfu",), **cfg_kw) -> list[SimResult]:
+    """Cartesian (capacity × window_frac × policy) sweep.
 
     All configurations share the static geometry of the *largest* one (table
     slots are padded up; smaller capacities mark the excess slots as padding),
@@ -1474,11 +1533,27 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
     ``climb`` may be one ``ClimbSpec`` for the whole grid or a sequence of
     ``len(grid)`` specs (uniform ``epoch_len`` — the lanes climb in
     lockstep), which is how climber hyperparameter grids sweep as lanes.
+
+    ``policies=`` adds the device policy-panel axis (kernels
+    ``StepSpec.policy``: ``"wtinylfu" | "s3fifo" | "arc" | "lfu"``) to the
+    grid.  Policy dispatch is *static* — each policy traces a different
+    step program — so multi-policy grids run ``mode="sequential"``; a grid
+    restricted to one policy may still vmap.  Competitor policies require
+    ``assoc=`` (see :class:`DeviceWTinyLFU`).
     """
+    policies = tuple(policies)
     grid = [DeviceWTinyLFU(C, window_frac=wf, sample_factor=sample_factor,
-                           adaptive=adaptive, **cfg_kw)
-            for C in capacities for wf in window_fracs]
-    gridlab = [(C, wf) for C in capacities for wf in window_fracs]
+                           adaptive=adaptive, policy=pol, **cfg_kw)
+            for C in capacities for wf in window_fracs for pol in policies]
+    gridlab = [(C, wf) for C in capacities for wf in window_fracs
+               for pol in policies]
+    if len(set(policies)) > 1 and mode == "vmap":
+        raise ValueError(
+            "policy grids run one compiled step program per policy (the "
+            "dispatch is static, traced into the program): use "
+            "mode='sequential'")
+    if len(set(policies)) > 1 and mode == "auto":
+        mode = "sequential"
     sharded = any(c.shards > 1 for c in grid)
     meshed = any(c.mesh is not None for c in grid)
     if meshed:
@@ -1646,20 +1721,19 @@ def simulate_sweep(trace: np.ndarray, capacities, *, window_fracs=(0.01,),
     out = []
     for g, (C, wf) in enumerate(gridlab):
         hits = int(regs[g, R_HITS])
+        # _row_extra keeps sweep rows schema-identical to simulate_trace
+        # rows (sweep rows used to omit streams/integrity/merge_every)
         extra = {"backend": f"jit+{mode}", "window_frac": wf,
                  "grid": len(grid), "grid_wall_s": wall,
                  "assoc": grid[g].assoc,
-                 "device": jax.default_backend()}
+                 "device": jax.default_backend(),
+                 **_row_extra(grid[g], climbs[g] if adaptive else None,
+                              adaptive)}
         if adaptive:
             extra["adaptive"] = True
             extra["final_quota"] = int(regs[g, R_WQUOTA])
-        if grid[g].shards > 1:
-            extra["shards"] = grid[g].shards
-        if grid[g].mesh is not None:
-            extra["mesh_devices"] = grid[g].mesh_devices
-            extra["mesh_exchange"] = grid[g].mesh_exchange
         out.append(SimResult(
-            policy="w-tinylfu(device)" + ("+climb" if adaptive else ""),
+            policy=_policy_label(grid[g], adaptive),
             cache_size=C, trace=trace_name,
             accesses=counted, hits=hits, hit_ratio=hits / max(1, counted),
             # per-row amortized wall so accesses/wall_s is per-config and

@@ -96,6 +96,24 @@ def probe_indices32_np(lo: np.ndarray, hi: np.ndarray, num_probes: int,
     return out
 
 
+def dk_probe_index_np(lo: np.ndarray, hi: np.ndarray, p: int,
+                      dk_bits: int) -> np.ndarray:
+    """Reference for the device doorkeeper-probe schedule
+    (kernels/sketch_common.dk_probe_index), bit-for-bit.
+
+    The host ``SetAssocARC`` twin replays the device's B1/B2 ghost-Bloom
+    arithmetic with these bit positions, which is what makes its hit
+    sequence exact-by-construction rather than collision-free-only.
+    """
+    assert dk_bits & (dk_bits - 1) == 0, "dk_bits must be a power of 2"
+    lo = np.asarray(lo, dtype=np.uint32)
+    hi = np.asarray(hi, dtype=np.uint32)
+    salt = np.uint32(((PROBE_SALTS[p % len(PROBE_SALTS)] ^ 0xDEADBEEF)
+                      + 0x9E3779B9 * (p // len(PROBE_SALTS))) & 0xFFFFFFFF)
+    h = mix32_np(lo + salt) ^ mix32_np(hi ^ np.uint32(0x85EBCA6B) ^ salt)
+    return (h & np.uint32(dk_bits - 1)).astype(np.int64)
+
+
 def key_to_lanes(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """uint64 keys -> (lo, hi) uint32 lane pair."""
     keys = np.asarray(keys, dtype=np.uint64)

@@ -18,8 +18,10 @@ from typing import Optional
 
 import numpy as np
 
-from .hashing import (assoc_geometry, set_ways, set_index32_np,
-                      MSET_SALT, MSET2_SALT)
+from .hashing import (assoc_geometry, dk_probe_index_np, set_ways,
+                      set_index32_np, slots_for, MSET_SALT, MSET2_SALT,
+                      WSET_SALT)
+from .sketch import default_sketch
 
 
 # ===========================================================================
@@ -642,4 +644,297 @@ class LIRS(ReplacementPolicy):
             self.s[key] = None
             self.q[key] = None
         self._bound_nonres()
+        return False
+
+
+# ===========================================================================
+# Device-policy host twins (kernels/sketch_step.py StepSpec.policy panel)
+# ===========================================================================
+
+class _SetAssocTable:
+    """Shared set-associative main-table bookkeeping for the device-policy
+    host twins: pow2 sets sized by ``assoc_geometry``/``set_ways``,
+    power-of-two-choices placement (``MSET_SALT``/``MSET2_SALT``), per-set
+    ``key -> [flag, stamp]`` records.  Free-way preference follows the
+    device victim argmin exactly: an empty slot (-1 meta) beats every
+    resident, and the first-choice set's empties order before the
+    second's in the (2*ways,) concat."""
+
+    _MEMO_LIMIT = 2_000_000           # hash memo safety valve (scan traces)
+
+    def __init__(self, capacity: int, assoc: int):
+        self.capacity = capacity
+        self.n_sets, self.ways = assoc_geometry(capacity, assoc)
+        self.usable = set_ways(capacity, self.n_sets)
+        self.slots: list[dict] = [dict() for _ in range(self.n_sets)]
+        self.home: dict = {}              # key -> resident set index
+        self._memo: dict = {}
+
+    def sets_of(self, key) -> tuple[int, int]:
+        p = self._memo.get(key)
+        if p is None:
+            k = np.asarray([key], np.uint64)
+            p = (int(set_index32_np(k, self.n_sets, MSET_SALT)[0]),
+                 int(set_index32_np(k, self.n_sets, MSET2_SALT)[0]))
+            if len(self._memo) >= self._MEMO_LIMIT:
+                self._memo.clear()
+            self._memo[key] = p
+        return p
+
+    def __contains__(self, key): return key in self.home
+    def __len__(self): return len(self.home)
+
+    def free_set(self, key):
+        """First choice set with a free usable way, or None (device: the
+        empty-slot -1 wins the victim argmin, first half first)."""
+        s1, s2 = self.sets_of(key)
+        for s in (s1, s2):
+            if len(self.slots[s]) < self.usable[s]:
+                return s
+        return None
+
+    def insert(self, key, s: int, flag: bool, stamp: int) -> None:
+        self.slots[s][key] = [flag, stamp]
+        self.home[key] = s
+
+    def remove(self, key) -> None:
+        del self.slots[self.home.pop(key)][key]
+
+    def residents(self, key):
+        """(set, key, flag, stamp) over the key's two choice sets, first
+        choice first — deduplicated when the choices alias (device masks
+        the duplicate second half out of the victim scan)."""
+        s1, s2 = self.sets_of(key)
+        out = [(s1, k, f, st) for k, (f, st) in self.slots[s1].items()]
+        if s2 != s1:
+            out += [(s2, k, f, st) for k, (f, st) in self.slots[s2].items()]
+        return out
+
+
+class _GhostBloom:
+    """Bit-for-bit replay of one half of the device ``"ghost"`` buffer: a
+    ``dk_bits``-bit Bloom filter addressed by the doorkeeper probe schedule
+    (``core.hashing.dk_probe_index_np``), cleared wholesale when it has
+    absorbed ``clear_at`` inserts (the device's saturation clear)."""
+
+    def __init__(self, dk_bits: int, dk_probes: int, clear_at: int):
+        self.dk_bits = dk_bits
+        self.dk_probes = dk_probes
+        self.clear_at = clear_at
+        self.words = np.zeros(max(1, dk_bits // 32), np.int64)
+        self.count = 0
+        self._memo: dict = {}
+
+    def _bits(self, key):
+        b = self._memo.get(key)
+        if b is None:
+            lo = np.asarray([key & 0xFFFFFFFF], np.uint32)
+            hi = np.asarray([(key >> 32) & 0xFFFFFFFF], np.uint32)
+            b = tuple(int(dk_probe_index_np(lo, hi, p, self.dk_bits)[0])
+                      for p in range(self.dk_probes))
+            if len(self._memo) >= _SetAssocTable._MEMO_LIMIT:
+                self._memo.clear()
+            self._memo[key] = b
+        return b
+
+    def __contains__(self, key) -> bool:
+        return all((int(self.words[b >> 5]) >> (b & 31)) & 1
+                   for b in self._bits(key))
+
+    def add(self, key) -> None:
+        if self.count >= self.clear_at:
+            self.words[:] = 0
+            self.count = 0
+        for b in self._bits(key):
+            self.words[b >> 5] |= np.int64(1 << (b & 31))
+        self.count += 1
+
+
+class SetAssocS3FIFO(ReplacementPolicy):
+    """Host twin of the device ``policy="s3fifo"`` step
+    (kernels/sketch_step.py ``_one_access_set_s3fifo``).
+
+    S3-FIFO on the shared set-associative machinery: a small per-set FIFO
+    (the device window table — hits do NOT refresh, order is insert
+    order), a CLOCK-marked main FIFO (a hit sets the accessed flag and
+    keeps the insert stamp; the victim scan prefers empty < unmarked
+    FIFO-oldest < marked FIFO-oldest across the key's two choice sets),
+    and the frequency sketch as the one-hit-wonder filter: a candidate
+    displaced from the small FIFO enters main only when its estimate is
+    >= 2, with no free-slot override.  With collision-free sketches the
+    per-access hit sequence equals the device program's bit-for-bit."""
+    name = "s3fifo-assoc"
+
+    def __init__(self, capacity: int, window_frac: float = 0.1,
+                 assoc: int = 8, sample_factor: int = 8, seed: int = 0,
+                 counters_per_item: float = 1.0, doorkeeper: bool = True):
+        super().__init__(capacity)
+        self.window_cap = max(1, int(round(capacity * window_frac)))
+        self.main_cap = max(1, capacity - self.window_cap)
+        self.main = _SetAssocTable(self.main_cap, assoc)
+        ways = self.main.ways
+        self._n_wsets = slots_for(self.window_cap, ways) // ways
+        self._wusable = set_ways(self.window_cap, self._n_wsets)
+        self._wsets = [OrderedDict() for _ in range(self._n_wsets)]
+        self._wset_memo: dict = {}
+        self._t = 0
+        self.sketch = default_sketch(capacity, sample_factor=sample_factor,
+                                     seed=seed,
+                                     counters_per_item=counters_per_item,
+                                     doorkeeper=doorkeeper)
+
+    def _wset_of(self, key) -> int:
+        s = self._wset_memo.get(key)
+        if s is None:
+            s = int(set_index32_np(np.asarray([key], np.uint64),
+                                   self._n_wsets, WSET_SALT)[0])
+            if len(self._wset_memo) >= _SetAssocTable._MEMO_LIMIT:
+                self._wset_memo.clear()
+            self._wset_memo[key] = s
+        return s
+
+    def _access(self, key) -> bool:
+        t = self._t
+        self._t += 1
+        self.sketch.add(key)
+        ws = self._wset_of(key)
+        wset = self._wsets[ws]
+        if key in wset:                    # small-FIFO hit: NO refresh
+            return True
+        if key in self.main:               # main hit: set the CLOCK mark
+            s = self.main.home[key]
+            self.main.slots[s][key][0] = True
+            return True
+        # miss: small-FIFO insert; overflow displaces the oldest toward main
+        wset[key] = None
+        if len(wset) > self._wusable[ws]:
+            cand, _ = wset.popitem(last=False)
+            if self.sketch.estimate(cand) >= 2:     # one-hit-wonder filter
+                s = self.main.free_set(cand)
+                if s is not None:
+                    self.main.insert(cand, s, False, t)
+                else:
+                    best = None
+                    for s_, k, f, st in self.main.residents(cand):
+                        if best is None or (f, st) < best[:2]:
+                            best = (f, st, s_, k)
+                    if best is not None:
+                        self.main.remove(best[3])
+                        self.main.insert(cand, best[2], False, t)
+        return False
+
+
+class SetAssocARC(ReplacementPolicy):
+    """Host twin of the device ``policy="arc"`` step
+    (kernels/sketch_step.py ``_one_access_set_arc``).
+
+    The seed :class:`ARC` is the algorithmic reference; this twin replays
+    the device's *approximations* of it exactly: T1/T2 share the
+    set-associative main table (flag = "in T2"), the adaptive target ``p``
+    moves by +-1 per ghost hit (clamped to [0, capacity]), and the B1/B2
+    ghost lists are Bloom halves replayed bit-for-bit through the device
+    doorkeeper probe schedule — membership is approximate, removal is the
+    wholesale saturation clear.  Because the Bloom arithmetic is replayed
+    exactly (``dk_probe_index_np``), the hit sequence matches the device
+    program exact-by-construction at ANY ``dk_bits`` — no collision-free
+    assumption needed (ARC never consults the frequency sketch)."""
+    name = "arc-assoc"
+
+    def __init__(self, capacity: int, assoc: int = 8,
+                 dk_bits: int | None = None, dk_probes: int = 3):
+        super().__init__(capacity)
+        if dk_bits is None:
+            dk_bits = max(32, 1 << max(0, (32 * capacity - 1).bit_length()))
+        self.main = _SetAssocTable(capacity, assoc)
+        self.p = 0
+        self.t1count = 0
+        self.b1 = _GhostBloom(dk_bits, dk_probes, capacity)
+        self.b2 = _GhostBloom(dk_bits, dk_probes, capacity)
+        self._t = 0
+
+    def _access(self, key) -> bool:
+        t = self._t
+        self._t += 1
+        main = self.main
+        if key in main:                    # hit: promote to T2, refresh
+            rec = main.slots[main.home[key]][key]
+            if not rec[0]:
+                self.t1count -= 1          # T1 hit leaves T1
+            rec[0] = True
+            rec[1] = t
+            return True
+        # miss: ghost-driven +-1 adaptation (B1 beats B2 when both match)
+        gb1 = key in self.b1
+        gb2 = key in self.b2
+        if gb1:
+            self.p = min(self.main.capacity, self.p + 1)
+        elif gb2:
+            self.p = max(0, self.p - 1)
+        in_t2 = gb1 or gb2                 # ghost-remembered -> T2
+        s = main.free_set(key)
+        if s is None:
+            prefer_t1 = (self.t1count > self.p
+                         or ((gb2 and not gb1) and self.t1count == self.p))
+            best = None
+            for s_, k, f, st in main.residents(key):
+                okey = (f if prefer_t1 else not f, st)
+                if best is None or okey < best[0]:
+                    best = (okey, s_, k, f)
+            if best is None:               # degenerate zero-way sets
+                return False
+            _, s, vic, vic_t2 = best
+            main.remove(vic)
+            if vic_t2:
+                self.b2.add(vic)
+            else:
+                self.b1.add(vic)
+                self.t1count -= 1
+        main.insert(key, s, in_t2, t)
+        if not in_t2:
+            self.t1count += 1
+        return False
+
+
+class SetAssocLFU(ReplacementPolicy):
+    """Host twin of the device ``policy="lfu"`` step
+    (kernels/sketch_step.py ``_one_access_set_lfu``).
+
+    Heap-free sketch-LFU: no window, no admission filter; the victim is
+    the resident with the smallest sketch estimate across the key's two
+    choice sets (stamps break frequency ties toward the LRU record), and
+    a hit refreshes the stamp only.  With collision-free sketches the
+    per-access hit sequence equals the device program's bit-for-bit."""
+    name = "lfu-assoc"
+
+    def __init__(self, capacity: int, assoc: int = 8, sample_factor: int = 8,
+                 seed: int = 0, counters_per_item: float = 1.0,
+                 doorkeeper: bool = True):
+        super().__init__(capacity)
+        self.main = _SetAssocTable(capacity, assoc)
+        self._t = 0
+        self.sketch = default_sketch(capacity, sample_factor=sample_factor,
+                                     seed=seed,
+                                     counters_per_item=counters_per_item,
+                                     doorkeeper=doorkeeper)
+
+    def _access(self, key) -> bool:
+        t = self._t
+        self._t += 1
+        self.sketch.add(key)
+        main = self.main
+        if key in main:
+            main.slots[main.home[key]][key][1] = t      # stamp refresh only
+            return True
+        s = main.free_set(key)
+        if s is None:
+            best = None
+            for s_, k, _f, st in main.residents(key):
+                okey = (self.sketch.estimate(k), st)
+                if best is None or okey < best[0]:
+                    best = (okey, s_, k)
+            if best is None:               # degenerate zero-way sets
+                return False
+            _, s, vic = best
+            main.remove(vic)
+        main.insert(key, s, False, t)
         return False

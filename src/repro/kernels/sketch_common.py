@@ -24,6 +24,20 @@ from repro.core.hashing import (MIX32_M1, MIX32_M2, PROBE_SALTS,
 DK_SALT_XOR = 0xDEADBEEF        # doorkeeper probes use salted variants
 HI_MIX_XOR = 0x85EBCA6B
 
+# device-resident replacement/admission policies (StepSpec.policy).  The
+# set-associative table machinery (packed records, per-set gather+reduce,
+# _lset/_ldus write discipline) is policy-agnostic; the enum selects which
+# admission/victim rules the fused step applies on top of it:
+#   "wtinylfu" — LRU window -> TinyLFU-gated SLRU main (the default; every
+#                other mode — flat, adaptive, sharded, mesh — requires it)
+#   "s3fifo"   — small FIFO (window table) -> CLOCK-marked main FIFO,
+#                one-hit-wonder filter from the frequency sketch
+#   "arc"      — T1/T2 in the main table, runtime target p in a register,
+#                B1/B2 ghosts as Bloom halves of a dedicated "ghost" buffer
+#   "lfu"      — heap-free sketch-LFU: min-frequency victim straight from
+#                the per-set reduce, no window, always admit
+POLICIES = ("wtinylfu", "s3fifo", "arc", "lfu")
+
 
 def _pow2(x: int) -> bool:
     return x > 0 and (x & (x - 1)) == 0

@@ -114,7 +114,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hashing import (WSET_SALT, MSET_SALT, MSET2_SALT, set_ways,
                                 shard_geometry)
-from .sketch_common import (probe_index, dk_probe_index, set_index,
+from .sketch_common import (POLICIES, probe_index, dk_probe_index, set_index,
                             shard_index, halve_words)
 
 # python ints (not jnp scalars): jnp scalars at module scope would be closed
@@ -259,6 +259,20 @@ class StepSpec:
         Interaction: incompatible with ``mesh_devices`` (the lanes would
         vmap over the mesh axis the shard_map already owns); the pallas
         backend batches through pallas' own vmap rule.
+    ``policy`` (default "wtinylfu")
+        Admission/victim rules applied on top of the policy-agnostic
+        set-associative machinery (:data:`repro.kernels.sketch_common.
+        POLICIES`).  ``"wtinylfu"`` is the full engine and the only value
+        the flat/adaptive/sharded/mesh/integrity modes accept; the
+        competitor policies (``"s3fifo"``, ``"arc"``, ``"lfu"``) require
+        ``assoc`` and run inside the same fused scan — same packed
+        records, per-set gather+reduce, write discipline, and ``streams``
+        lane batching.  ``"arc"`` additionally requires ``dk_bits > 0``
+        (its B1/B2 ghost lists are Bloom filters addressed by the
+        doorkeeper probe schedule, stored in a dedicated ``"ghost"``
+        state buffer).  ``policy="wtinylfu"`` compiles the byte-identical
+        program to a spec without the field (tests/test_policy_panel.py
+        pins the lowered HLO).
     ``integrity`` (default False)
         Self-healing sketch integrity (requires ``shards > 1``).  Adds a
         ``"csum"`` state vector of ``shards + 1`` int32 words: per-shard
@@ -286,8 +300,28 @@ class StepSpec:
     mesh_exchange: str = "chunk"  # mesh cadence: "chunk" exact | "stale"
     integrity: bool = False       # per-shard checksums + quarantine fold
     streams: int = 1              # lane-batched tenant instances (B >= 1)
+    policy: str = "wtinylfu"      # admission/victim rules (POLICIES enum)
 
     def __post_init__(self):
+        assert self.policy in POLICIES, (
+            f"policy {self.policy!r} must be one of {POLICIES}")
+        if self.policy != "wtinylfu":
+            assert self.assoc is not None, (
+                f"policy {self.policy!r} runs on the set-associative "
+                "machinery only (assoc=W); the flat exact tables are "
+                "W-TinyLFU-specific")
+            assert self.shards == 1 and self.mesh_devices == 0, (
+                f"policy {self.policy!r} does not support sketch sharding "
+                "or mesh execution (competitor policies exist for "
+                "apples-to-apples sweeps, not production scale-out)")
+            assert not self.adaptive and not self.integrity, (
+                f"policy {self.policy!r} cannot combine with adaptive/"
+                "integrity (both are W-TinyLFU-engine features)")
+        if self.policy == "arc":
+            assert self.dk_bits > 0, (
+                "policy='arc' needs dk_bits > 0: its B1/B2 ghost lists "
+                "are Bloom filters addressed by the doorkeeper probe "
+                "schedule")
         assert self.streams >= 1, "streams must be >= 1"
         if self.streams > 1:
             assert self.mesh_devices == 0, (
@@ -417,11 +451,14 @@ def _state_keys(spec: StepSpec) -> tuple[str, ...]:
     load = (("wsl", "wuw") if spec.adaptive and spec.assoc is not None
             else ())
     csum = ("csum",) if spec.integrity else ()
+    # ARC's B1/B2 ghost Blooms: one buffer of 2*dk_words int32 words
+    # (B1 = [0, dk_words), B2 = [dk_words, 2*dk_words))
+    ghost = ("ghost",) if spec.policy == "arc" else ()
     if spec.assoc is None:
         return ("counters", "doorkeeper", *mesh, "wlo", "whi", "wmeta",
                 "widx", "wdkb", "mlo", "mhi", "mmeta", "midx", "mdkb",
                 *csum, "regs")
-    return ("counters", "doorkeeper", *mesh, "wtab", "mtab", *load,
+    return ("counters", "doorkeeper", *mesh, "wtab", "mtab", *ghost, *load,
             *csum, "regs")
 
 
@@ -487,6 +524,9 @@ def init_step_state(spec: StepSpec, window_cap: int | None = None,
         # cumulative quarantined-shard count.  Zeros are the correct seed:
         # checksum_words of all-zero buffers is 0.
         common["csum"] = jnp.zeros((spec.shards + 1,), jnp.int32)
+    if spec.policy == "arc":
+        # B1/B2 ghost Blooms (dk_bits each), empty at init
+        common["ghost"] = jnp.zeros((2 * spec.dk_words,), jnp.int32)
     if spec.adaptive and spec.assoc is not None:
         # load-aware window quota distribution state (ISSUE 5): per-set
         # window access counts this epoch + the current usable-way vector
@@ -1104,6 +1144,44 @@ def _estimate_pair(spec: StepSpec, counters, dk, idx2, dkb2):
     return est
 
 
+def _estimate_block(spec: StepSpec, counters, dk, idxs, dkbs):
+    """TinyLFU estimates for K records from their stored probes.
+
+    idxs: (K, rows); dkbs: (K, dkp) -> (K,) int32 estimates.  K-record
+    generalization of :func:`_estimate_pair` for the competitor policies
+    (the ``"lfu"`` victim scan estimates every record of both choice sets;
+    ``"s3fifo"`` estimates the displaced candidate alone).  Competitors
+    run unsharded and mesh-free by construction (StepSpec asserts), so
+    only the two unsharded disciplines exist: fused fancy-indexing
+    gathers below the ``_big_operand`` cliff, unrolled scalar slices +
+    unrolled reduce chains past it (same rationale as ``_estimate_pair``).
+    """
+    k = idxs.shape[0]
+    flat = _row_offsets(spec)[None, :] + _word_of(spec, idxs)
+    if _big_operand(spec.counter_words):
+        gw = _ds_gather(counters, flat.reshape(-1)).reshape(k, spec.rows)
+        vals = _counter_vals(spec, gw, idxs)
+        est = vals[:, 0]
+        for r in range(1, spec.rows):
+            est = jnp.minimum(est, vals[:, r])
+    else:
+        vals = _counter_vals(spec, counters[flat], idxs)
+        est = vals.min(axis=-1)
+    if spec.dk_bits:
+        if _big_operand(spec.dk_words):
+            w2 = _ds_gather(dk, (dkbs >> 5).reshape(-1)).reshape(k, spec.dkp)
+            bits = (w2 >> (dkbs & 31)) & 1
+            ok = bits[:, 0]
+            for p in range(1, bits.shape[1]):
+                ok = ok & bits[:, p]
+            est = est + ok
+        else:
+            w2 = dk[dkbs >> 5]
+            ok = (((w2 >> (dkbs & 31)) & 1) == 1).all(axis=-1)
+            est = est + ok.astype(jnp.int32)
+    return est
+
+
 def _one_access_flat(spec: StepSpec, params: jnp.ndarray, state: dict,
                      klo, khi, kidx, kdkb):
     """Advance the full W-TinyLFU state by one access (exact flat tables).
@@ -1536,11 +1614,388 @@ def _one_access_set(spec: StepSpec, params: jnp.ndarray, state: dict,
     return new_state, hit.astype(jnp.int32)
 
 
+def _one_access_set_s3fifo(spec: StepSpec, params: jnp.ndarray, state: dict,
+                           klo, khi, kidx, kdkb, kwset, kmset):
+    """One access under the ``"s3fifo"`` competitor policy.
+
+    S3-FIFO (SNIPPETS.md / CacheKit competitor set) on the shared
+    set-associative machinery: the window table is the *small* FIFO
+    (insert-stamp order, NO stamp refresh on hit — a window hit leaves the
+    table untouched), the main table is the CLOCK-marked *main* FIFO (a
+    hit ORs ``_PROT`` into the meta as the accessed bit, keeping the
+    insert stamp, so the victim argmin is empty < unmarked-oldest <
+    marked-oldest), and the one-hit-wonder filter is the frequency sketch
+    itself: a candidate displaced from the small FIFO enters main only if
+    its estimate is >= 2 (with the doorkeeper on, exactly "seen more than
+    once"), with NO free-slot override — one-hit wonders never enter main.
+    S3-FIFO's ghost queue is approximated by that sketch memory rather
+    than tracked exactly (documented in ARCHITECTURE.md).
+    """
+    A = spec.assoc
+    rows, dkp = spec.rows, spec.dkp
+    regs = state["regs"]
+    t = regs[R_T]
+
+    counters, dk, size = _sketch_add(spec, params, state["counters"],
+                                     state["doorkeeper"], regs[R_SIZE],
+                                     kidx, kdkb, use_cond=True)
+
+    wtab, mtab = state["wtab"], state["mtab"]
+    km1, km2 = kmset[0], kmset[1]
+    same_km = km2 == km1
+
+    # -- lookups: small-FIFO set and both main choice sets -------------------
+    wblk = jax.lax.dynamic_slice(wtab, (kwset * A, 0), (A, spec.wcols))
+    wmeta = wblk[:, WT_META]
+    match_w = (wblk[:, WT_LO] == klo) & (wblk[:, WT_HI] == khi) & (wmeta >= 0)
+    hit_w = match_w.any()
+
+    mblk1 = jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols))
+    mblk2 = jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols))
+
+    def match_in(blk):
+        return ((blk[:, MT_LO] == klo) & (blk[:, MT_HI] == khi)
+                & (blk[:, MT_META] >= 0))
+
+    match1 = match_in(mblk1)
+    match2 = match_in(mblk2) & ~same_km     # aliased choices: count set1 only
+    hit = hit_w | match1.any() | match2.any()
+
+    # -- small-FIFO miss insert (hit: NO write — FIFO order is insert order) -
+    miss = ~hit
+    ws = jnp.argmin(wmeta)                  # oldest insert stamp (or empty)
+    newrow = jnp.concatenate(
+        [jnp.stack([klo, khi, t, km1, km2]), kidx, kdkb]).astype(jnp.int32)
+    w_ok = wmeta[ws] != _I32_MAX            # zero-way window set: bypass
+    push = miss & ((wmeta[ws] >= 0) | ~w_ok)
+    cand = jnp.where(w_ok, wblk[ws], newrow)
+    wblk = _lset_row(wblk, ws, newrow, miss & w_ok)
+
+    # -- main hit: set the CLOCK accessed bit, keep the insert stamp ---------
+    def mark(blk, match):
+        meta = blk[:, MT_META]
+        return _lset_col(blk, MT_META,
+                         jnp.where(match, meta | _PROT, meta))
+
+    mblk1u = mark(mblk1, match1)
+    mblk2u = mark(mblk2, match2)
+    m2eff = jnp.where(same_km, mblk1u, mblk2u)
+
+    # -- admission: sketch-filtered FIFO insert over the candidate's sets ----
+    c1, c2 = cand[WT_MSET], cand[WT_MSET2]
+    same_c = c2 == c1
+
+    def fixup(cb, c):
+        return jnp.where(c == km2, m2eff, jnp.where(c == km1, mblk1u, cb))
+
+    cb1 = fixup(jax.lax.dynamic_slice(mtab, (c1 * A, 0), (A, spec.mcols)), c1)
+    cb2 = fixup(jax.lax.dynamic_slice(mtab, (c2 * A, 0), (A, spec.mcols)), c2)
+    cblk = jnp.concatenate([cb1, cb2], axis=0)          # (2A, cols)
+    tslot = jnp.argmin(cblk[:, MT_META])    # empty < unmarked < marked FIFO
+    vic = cblk[tslot]
+    est = _estimate_block(spec, counters, dk,
+                          cand[5:5 + rows][None, :],
+                          cand[5 + rows:5 + rows + dkp][None, :])
+    admit = est[0] >= 2                     # one-hit-wonder filter, strict
+    do_ins = push & (vic[MT_META] != _I32_MAX) & admit
+    candrow = jnp.concatenate(
+        [jnp.stack([cand[WT_LO], cand[WT_HI], t]),
+         cand[5:5 + rows], cand[5 + rows:5 + rows + dkp]]).astype(jnp.int32)
+    in1 = do_ins & (tslot < A)
+    in2 = do_ins & (tslot >= A)
+    j1 = jnp.minimum(tslot, A - 1)
+    j2 = jnp.clip(tslot - A, 0, A - 1)
+    cb1u = _lset_row(cb1, j1, candrow, in1)
+    cb2u = _lset_row(cb2, j2, candrow, in2)
+    cb2u = jnp.where(same_c, cb1u, cb2u)
+
+    # -- writes last (same aliasing/scheduling discipline as wtinylfu) -------
+    zm = _sched_dep(mblk2u) | _sched_dep(cb1u) | _sched_dep(cb2u)
+    mtab = _ldus_block(mtab, mblk1u | zm, km1, A)
+    mtab = _ldus_block(mtab, m2eff, km2, A)
+    mtab = _ldus_block(mtab, cb1u, c1, A)
+    mtab = _ldus_block(mtab, cb2u, c2, A)
+    zw = _sched_dep(cb1u) | _sched_dep(cb2u)
+    wtab = _ldus_block(wtab, wblk | zw, kwset, A)
+
+    counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
+    regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
+                      regs[4], regs[5], regs[6], regs[7]])
+    new_state = {**state, "counters": counters, "doorkeeper": dk,
+                 "wtab": wtab, "mtab": mtab, "regs": regs}
+    return new_state, hit.astype(jnp.int32)
+
+
+def _one_access_set_arc(spec: StepSpec, params: jnp.ndarray, state: dict,
+                        klo, khi, kidx, kdkb, kwset, kmset):
+    """One access under the ``"arc"`` competitor policy.
+
+    ARC (seed ``core.policies.ARC`` is the reference twin) on the shared
+    main table: T1 (recency, probation meta) and T2 (frequency,
+    ``_PROT``-tagged meta) share the set-associative table; the adaptive
+    target ``p`` lives in the ``R_WQUOTA`` register exactly like the
+    adaptive window quota does.  The B1/B2 ghost lists are Bloom halves
+    of the dedicated ``"ghost"`` state buffer (``dk_words`` words each,
+    addressed by the key's stored doorkeeper probes): membership is
+    approximate, removal is wholesale — when a half has absorbed
+    ``P_MAIN_CAP`` evictions it is cleared and restarted (the clear is a
+    where-gated fori-loop of single-word updates, O(1) amortized — same
+    pattern as the §3.3 sketch reset).  The frequency sketch itself is
+    NOT consulted (no ``_sketch_add``): ARC is a sketch-free policy and
+    rides through with counters/doorkeeper untouched.  The window table
+    is bypassed entirely (window_cap collapses to its 1-slot minimum).
+    Register map: p -> R_WQUOTA, |T1| -> R_WCOUNT, B1/B2 insert counts ->
+    R_MCOUNT / R_EHITS.
+    """
+    A = spec.assoc
+    rows, dkp = spec.rows, spec.dkp
+    regs = state["regs"]
+    t = regs[R_T]
+    p = regs[R_WQUOTA]
+    t1count = regs[R_WCOUNT]
+    gb1count = regs[R_MCOUNT]
+    gb2count = regs[R_EHITS]
+    ghost = state["ghost"]
+    mtab = state["mtab"]
+    km1, km2 = kmset[0], kmset[1]
+    same_km = km2 == km1
+    mst = t
+
+    # -- lookups (all reads first: choice sets + both ghost Bloom halves) ----
+    mblk1 = jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols))
+    mblk2 = jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols))
+
+    def match_in(blk):
+        return ((blk[:, MT_LO] == klo) & (blk[:, MT_HI] == khi)
+                & (blk[:, MT_META] >= 0))
+
+    match1 = match_in(mblk1)
+    match2 = match_in(mblk2) & ~same_km
+    hit = match1.any() | match2.any()
+    hit_t1 = ((match1 & (mblk1[:, MT_META] < _PROT)).any()
+              | (match2 & (mblk2[:, MT_META] < _PROT)).any())
+
+    gpos = kdkb >> 5
+    gbit = kdkb & 31
+    if _big_operand(2 * spec.dk_words):
+        w1 = _ds_gather(ghost, gpos)
+        w2 = _ds_gather(ghost, spec.dk_words + gpos)
+    else:
+        w1 = ghost[gpos]
+        w2 = ghost[spec.dk_words + gpos]
+    gb1 = (((w1 >> gbit) & 1) == 1).all()
+    gb2 = (((w2 >> gbit) & 1) == 1).all()
+
+    # -- hit: promote to T2 MRU (both lists; a T1 hit shrinks |T1|) ----------
+    def promote(blk, match):
+        meta = blk[:, MT_META]
+        return _lset_col(blk, MT_META,
+                         jnp.where(match, _PROT | mst, meta))
+
+    mblk1u = promote(mblk1, match1)
+    mblk2u = promote(mblk2, match2)
+    m2eff = jnp.where(same_km, mblk1u, mblk2u)
+
+    # -- miss: ghost-driven delta=1 adaptation of the target p ---------------
+    miss = ~hit
+    in_b1 = miss & gb1
+    in_b2 = miss & gb2 & ~gb1
+    p_new = jnp.where(in_b1, jnp.minimum(params[P_MAIN_CAP], p + 1),
+                      jnp.where(in_b2, jnp.maximum(0, p - 1), p))
+
+    # -- REPLACE: prefer the T1 LRU while |T1| exceeds p (seed-ARC tiebreak:
+    # a B2 ghost hit also evicts from T1 at |T1| == p); XOR-flipping _PROT
+    # into the order key swaps which list the shared argmin prefers, and
+    # degrades gracefully to the other list when the preferred one has no
+    # record in these two sets
+    cblk = jnp.concatenate([mblk1u, m2eff], axis=0)     # (2A, cols)
+    meta_c = cblk[:, MT_META]
+    prefer_t1 = (t1count > p_new) | (in_b2 & (t1count == p_new))
+    flip = jnp.where(prefer_t1, 0, _PROT)
+    okey = jnp.where(meta_c == _I32_MAX, _I32_MAX,
+                     jnp.where(meta_c < 0, -1, meta_c ^ flip))
+    tslot = jnp.argmin(okey)
+    vic = cblk[tslot]
+    m_free = vic[MT_META] < 0
+    do_ins = miss & (okey[tslot] != _I32_MAX)           # always admit
+    evict = do_ins & ~m_free
+    vic_was_t1 = evict & (vic[MT_META] < _PROT)
+
+    # -- ghost maintenance: evicted key's stored dk probes enter B1/B2 -------
+    goff = jnp.where(vic_was_t1, 0, spec.dk_words)
+    vdkb = vic[3 + rows:3 + rows + dkp]
+    vpos = goff + (vdkb >> 5)
+    vbit = jnp.int32(1) << (vdkb & 31)
+    gw = _ds_gather(ghost, vpos)            # pre-write read (see below)
+    clr1 = vic_was_t1 & (gb1count >= params[P_MAIN_CAP])
+    clr2 = evict & ~vic_was_t1 & (gb2count >= params[P_MAIN_CAP])
+    clr = clr1 | clr2
+    # anchor every ghost read before the first ghost write (in-place DUS
+    # discipline — the query gathers feed only p_new/regs otherwise)
+    zg = _sched_dep(w1) | _sched_dep(w2) | _sched_dep(gw)
+    if not _LANE_TRACE[0]:
+        # saturation clear: where-gated trip count, 0 iterations on the
+        # (vast majority of) accesses where no clear fires — the same
+        # O(1)-amortized pattern as the use_cond sketch reset
+        def zero_one_g(i, g):
+            return jax.lax.dynamic_update_slice(
+                g, jnp.zeros((1,), jnp.int32) | zg, (goff + i,))
+
+        ghost = jax.lax.fori_loop(
+            0, jnp.where(clr, spec.dk_words, 0), zero_one_g, ghost)
+    else:
+        giota = jnp.arange(2 * spec.dk_words, dtype=jnp.int32)
+        inhalf = jnp.where(vic_was_t1, giota < spec.dk_words,
+                           giota >= spec.dk_words)
+        ghost = jnp.where(clr & inhalf, 0, ghost)
+    # bit inserts: same-word probes merge in-register (see _sketch_add);
+    # a cleared half contributes zeros regardless of the pre-clear read
+    base = jnp.where(clr, 0, gw)
+    for i in range(dkp):
+        merged = base[i] | vbit[i]
+        if i == 0:
+            merged = merged | zg
+        for j in range(dkp):
+            if j != i:
+                merged = merged | jnp.where(vpos[j] == vpos[i], vbit[j], 0)
+        ghost = _ldus1(ghost, jnp.where(evict, merged, gw[i])[None], vpos[i])
+    gb1c = jnp.where(clr1, 0, gb1count) + vic_was_t1.astype(jnp.int32)
+    gb2c = (jnp.where(clr2, 0, gb2count)
+            + (evict & ~vic_was_t1).astype(jnp.int32))
+
+    # -- insert: ghost-remembered keys go to T2, fresh keys to T1 MRU --------
+    meta0 = jnp.where(gb1 | gb2, _PROT | mst, mst)
+    candrow = jnp.concatenate(
+        [jnp.stack([klo, khi, meta0]), kidx, kdkb]).astype(jnp.int32)
+    in1 = do_ins & (tslot < A)
+    in2 = do_ins & (tslot >= A)
+    j1 = jnp.minimum(tslot, A - 1)
+    j2 = jnp.clip(tslot - A, 0, A - 1)
+    mb1f = _lset_row(mblk1u, j1, candrow, in1)
+    mb2f = _lset_row(m2eff, j2, candrow, in2)
+    mb2f = jnp.where(same_km, mb1f, mb2f)
+    t1c = (t1count - hit_t1.astype(jnp.int32)
+           - vic_was_t1.astype(jnp.int32)
+           + (do_ins & (meta0 < _PROT)).astype(jnp.int32))
+
+    # -- writes last ---------------------------------------------------------
+    zm = _sched_dep(mb2f)
+    mtab = _ldus_block(mtab, mb1f | zm, km1, A)
+    mtab = _ldus_block(mtab, mb2f, km2, A)
+
+    counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
+    regs = jnp.stack([regs[R_SIZE], regs[R_PCOUNT], t + 1,
+                      regs[R_HITS] + counted, p_new, t1c, gb1c, gb2c])
+    new_state = {**state, "mtab": mtab, "ghost": ghost, "regs": regs}
+    return new_state, hit.astype(jnp.int32)
+
+
+def _one_access_set_lfu(spec: StepSpec, params: jnp.ndarray, state: dict,
+                        klo, khi, kidx, kdkb, kwset, kmset):
+    """One access under the ``"lfu"`` competitor policy.
+
+    Heap-free sketch-LFU (Shah/Mitra/Matani's O(1) LFU, mapped onto the
+    packed-record layout): there is no frequency heap at all — every
+    record's stored sketch probes make the per-set gather+reduce itself
+    the min-frequency scan, O(ways) per access like everything else.  No
+    window (window_cap collapses to its 1-slot minimum), no admission
+    filter (always admit: plain LFU has no ghost/doorkeeper gate), victim
+    = the resident with the smallest sketch estimate across the key's two
+    choice sets, stamps breaking frequency ties toward the LRU record.
+    A hit refreshes the stamp (probation meta only — no ``_PROT`` tier).
+    """
+    A = spec.assoc
+    rows, dkp = spec.rows, spec.dkp
+    regs = state["regs"]
+    t = regs[R_T]
+    mst = t
+
+    counters, dk, size = _sketch_add(spec, params, state["counters"],
+                                     state["doorkeeper"], regs[R_SIZE],
+                                     kidx, kdkb, use_cond=True)
+
+    mtab = state["mtab"]
+    km1, km2 = kmset[0], kmset[1]
+    same_km = km2 == km1
+
+    mblk1 = jax.lax.dynamic_slice(mtab, (km1 * A, 0), (A, spec.mcols))
+    mblk2 = jax.lax.dynamic_slice(mtab, (km2 * A, 0), (A, spec.mcols))
+
+    def match_in(blk):
+        return ((blk[:, MT_LO] == klo) & (blk[:, MT_HI] == khi)
+                & (blk[:, MT_META] >= 0))
+
+    match1 = match_in(mblk1)
+    match2 = match_in(mblk2) & ~same_km
+    hit = match1.any() | match2.any()
+
+    def refresh(blk, match):
+        meta = blk[:, MT_META]
+        return _lset_col(blk, MT_META, jnp.where(match, mst, meta))
+
+    mblk1u = refresh(mblk1, match1)
+    mblk2u = refresh(mblk2, match2)
+    m2eff = jnp.where(same_km, mblk1u, mblk2u)
+
+    # -- victim: min sketch estimate over both sets, stamp-LRU tiebreak ------
+    cblk = jnp.concatenate([mblk1u, m2eff], axis=0)     # (2A, cols)
+    meta_c = cblk[:, MT_META]
+    est = _estimate_block(spec, counters, dk,
+                          cblk[:, 3:3 + rows],
+                          cblk[:, 3 + rows:3 + rows + dkp])
+    # aliased choice sets: the second half duplicates the first — mask it
+    # out of the victim scan so the insert lands once
+    half2 = jnp.arange(2 * A, dtype=jnp.int32) >= A
+    pad = (meta_c == _I32_MAX) | (same_km & half2)
+    okey1 = jnp.where(pad, _I32_MAX, jnp.where(meta_c < 0, -1, est))
+    mmin = jnp.min(okey1)
+    okey2 = jnp.where(okey1 == mmin, meta_c, _I32_MAX)  # LRU among freq ties
+    tslot = jnp.argmin(okey2)
+    miss = ~hit
+    do_ins = miss & (okey1[tslot] != _I32_MAX)          # always admit
+    candrow = jnp.concatenate(
+        [jnp.stack([klo, khi, mst]), kidx, kdkb]).astype(jnp.int32)
+    in1 = do_ins & (tslot < A)
+    in2 = do_ins & (tslot >= A)
+    j1 = jnp.minimum(tslot, A - 1)
+    j2 = jnp.clip(tslot - A, 0, A - 1)
+    mb1f = _lset_row(mblk1u, j1, candrow, in1)
+    mb2f = _lset_row(m2eff, j2, candrow, in2)
+    mb2f = jnp.where(same_km, mb1f, mb2f)
+
+    zm = _sched_dep(mb2f)
+    mtab = _ldus_block(mtab, mb1f | zm, km1, A)
+    mtab = _ldus_block(mtab, mb2f, km2, A)
+
+    counted = (hit & (t >= params[P_WARMUP])).astype(jnp.int32)
+    regs = jnp.stack([size, regs[R_PCOUNT], t + 1, regs[R_HITS] + counted,
+                      regs[4], regs[5], regs[6], regs[7]])
+    new_state = {**state, "counters": counters, "doorkeeper": dk,
+                 "mtab": mtab, "regs": regs}
+    return new_state, hit.astype(jnp.int32)
+
+
 def _one_access(spec: StepSpec, params: jnp.ndarray, state: dict,
                 klo, khi, kidx, kdkb, kwset, kmset):
-    """Advance the full W-TinyLFU state by one access; returns (state, hit)."""
+    """Advance the cache state by one access; returns (state, hit).
+
+    Dispatch is static (Python, at trace time): ``spec.assoc is None``
+    takes the flat exact path, otherwise ``spec.policy`` selects which
+    admission/victim rules run on the set-associative machinery.  The
+    default ``"wtinylfu"`` path is byte-for-byte the pre-panel program
+    (tests/test_policy_panel.py pins its lowered HLO).
+    """
     if spec.assoc is None:
         return _one_access_flat(spec, params, state, klo, khi, kidx, kdkb)
+    if spec.policy == "s3fifo":
+        return _one_access_set_s3fifo(spec, params, state, klo, khi, kidx,
+                                      kdkb, kwset, kmset)
+    if spec.policy == "arc":
+        return _one_access_set_arc(spec, params, state, klo, khi, kidx,
+                                   kdkb, kwset, kmset)
+    if spec.policy == "lfu":
+        return _one_access_set_lfu(spec, params, state, klo, khi, kidx,
+                                   kdkb, kwset, kmset)
     return _one_access_set(spec, params, state, klo, khi, kidx, kdkb,
                            kwset, kmset)
 

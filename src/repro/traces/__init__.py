@@ -1,12 +1,12 @@
 from .synthetic import (
     zipf_trace, zipf_probs, youtube_dynamic_trace, wiki_drift_trace,
     spc1_like_trace, oltp_like_trace, glimpse_trace, multi_tenant_prompt_trace,
-    fickle_churn_trace, phase_shift_trace, tenant_lanes_trace,
+    fickle_churn_trace, phase_shift_trace, tenant_lanes_trace, panel_traces,
 )
 
 __all__ = [
     "zipf_trace", "zipf_probs", "youtube_dynamic_trace", "wiki_drift_trace",
     "spc1_like_trace", "oltp_like_trace", "glimpse_trace",
     "multi_tenant_prompt_trace", "fickle_churn_trace",
-    "phase_shift_trace", "tenant_lanes_trace",
+    "phase_shift_trace", "tenant_lanes_trace", "panel_traces",
 ]

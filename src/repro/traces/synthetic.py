@@ -303,3 +303,38 @@ def multi_tenant_prompt_trace(n_requests: int, n_tenants: int = 200,
         chunks.append(np.arange(next_suffix, next_suffix + slen))
         next_suffix += slen
     return np.concatenate(chunks).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+def panel_traces(length: int = 60_000, seed: int = 0) -> dict:
+    """Named trace families for the device policy panel (``StepSpec.policy``:
+    W-TinyLFU vs S3-FIFO / ARC / sketch-LFU), each built to separate the
+    policies along one axis:
+
+    * ``"zipf"``     — stationary frequency skew: the TinyLFU-style
+      admission filters (wtinylfu, lfu, s3fifo's one-hit-wonder gate)
+      should lead; pure recency trails.
+    * ``"scan-hot"`` — a one-pass sequential scan followed by a Zipf
+      hotspot: scan resistance.  Admission-filtered policies and ARC's
+      T1/T2 split keep the scan out of the hot working set.
+    * ``"churn"``    — a stable hot set diluted by one-hit wonders
+      (``fickle_churn_trace``): the workload S3-FIFO's quick-demotion
+      small queue and the doorkeeper were designed for.
+    * ``"loop"``     — a cyclic scan over a loop slightly larger than
+      typical cache sizes plus uniform noise (``glimpse_trace``): the
+      classic LRU-adversarial pattern; frequency retention wins.
+
+    Returns ``{name: (length,) int64 trace}``; deterministic in ``seed``.
+    The cross-policy golden tests (tests/test_policy_panel.py) pin hit
+    ratios on these families.
+    """
+    half = length // 2
+    scan = np.arange(1 << 20, (1 << 20) + half, dtype=np.int64)
+    hot = _sample_from_probs(zipf_probs(2_000, 1.0), length - half,
+                             _rng(seed + 1))
+    return {
+        "zipf": zipf_trace(length, n_items=length, alpha=0.9, seed=seed),
+        "scan-hot": np.concatenate([scan, hot]),
+        "churn": fickle_churn_trace(length, seed=seed),
+        "loop": glimpse_trace(length, seed=seed),
+    }

@@ -5,7 +5,8 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Cache, LRUEviction, FIFOEviction, RandomEviction,
                         LFUEviction, SLRUEviction, ARC, LIRS, TwoQ, WLFU,
-                        PLFU, WTinyLFU, tinylfu_cache, run_trace)
+                        PLFU, WTinyLFU, tinylfu_cache, run_trace,
+                        SetAssocS3FIFO, SetAssocARC, SetAssocLFU)
 from repro.traces import zipf_trace
 
 
@@ -222,3 +223,162 @@ class TestWTinyLFUAssoc:
             w.access(k % 90)
         resident = sum(1 for k in range(90) if k in w)
         assert 0 < resident <= 64
+
+
+# ===========================================================================
+# seed-policy behavioral debt (ISSUE 9): ARC / LIRS / TwoQ were exercised
+# only through aggregate hit ratios — pin the *mechanisms* (ghost-hit
+# promotion, the documented direction of ARC's p adaptation, and capacity
+# invariants under churn) so a refactor cannot hollow them out silently.
+# ===========================================================================
+
+class TestARCBehavior:
+    def _warm(self):
+        """1,1,2,3,4,5: t2=[1], t1=[3,4,5], b1=[2] — one ghost, full cache."""
+        a = ARC(4)
+        for k in (1, 1, 2, 3, 4, 5):
+            a.access(k)
+        assert (list(a.t1), list(a.t2), list(a.b1)) == ([3, 4, 5], [1], [2])
+        return a
+
+    def test_b1_ghost_hit_raises_p_and_promotes_to_t2(self):
+        a = self._warm()
+        assert a.p == 0
+        assert a.access(2) is False        # ghost hit is still a miss...
+        assert a.p == 1                    # ...but p grows toward recency
+        assert 2 in a.t2 and 2 not in a.b1  # and re-enters as frequent
+        assert a.access(2) is True
+
+    def test_b2_ghost_hit_lowers_p(self):
+        a = self._warm()
+        a.access(2)                        # b1 hit: p 0 -> 1
+        a.access(3)                        # b1 hit: p 1 -> 2, evicts t2 LRU
+        assert a.p == 2 and list(a.b2) == [1]
+        assert a.access(1) is False        # b2 ghost hit
+        assert a.p == 1                    # p shrinks toward frequency
+        assert 1 in a.t2
+
+    def test_t1_hit_promotes_to_t2(self):
+        a = ARC(4)
+        a.access(7)
+        assert 7 in a.t1
+        assert a.access(7) is True
+        assert 7 in a.t2 and 7 not in a.t1
+
+    def test_capacity_invariants_under_churn(self):
+        """The paper's I1-I4 style bounds: residency <= c, |L1| <= c,
+        |L1|+|L2| <= 2c, p in [0, c] — after EVERY access."""
+        rng = np.random.default_rng(42)
+        for c in (2, 5, 16):
+            a = ARC(c)
+            tr = rng.zipf(1.3, size=3_000).astype(int) % 120
+            for k in tr:
+                a.access(int(k))
+                assert len(a.t1) + len(a.t2) <= c
+                assert len(a.t1) + len(a.b1) <= c
+                assert (len(a.t1) + len(a.t2)
+                        + len(a.b1) + len(a.b2)) <= 2 * c
+                assert 0 <= a.p <= c
+
+
+class TestLIRSBehavior:
+    def _warm(self):
+        """C=5 (llirs=4, lhirs=1): 1..4 LIR, 5 resident-HIR, 6 evicts 5."""
+        l = LIRS(5)
+        for k in (1, 2, 3, 4, 5, 6):
+            l.access(k)
+        return l
+
+    def test_ghost_hit_promotes_to_lir(self):
+        l = self._warm()
+        assert l.state[5] == l.HIR_NONRES and 5 in l.nonres
+        assert l.access(5) is False        # non-resident: a real miss...
+        assert l.state[5] == l.LIR         # ...promoted straight to LIR
+        assert l.lir_count <= l.llirs      # a LIR bottom was demoted to fit
+
+    def test_resident_hir_hit_promotes_when_in_stack(self):
+        l = LIRS(5)
+        for k in (1, 2, 3, 4):
+            l.access(k)
+        l.access(5)
+        assert l.state[5] == l.HIR_RES and 5 in l.s
+        assert l.access(5) is True         # resident hit
+        assert l.state[5] == l.LIR and 5 not in l.q
+
+    def test_capacity_invariants_under_churn(self):
+        rng = np.random.default_rng(43)
+        for c in (3, 5, 20):
+            l = LIRS(c)
+            tr = rng.zipf(1.3, size=3_000).astype(int) % 150
+            for k in tr:
+                l.access(int(k))
+                assert l.lir_count + len(l.q) <= c      # residents
+                assert l.lir_count <= l.llirs
+                assert len(l.nonres) <= l.max_nonres    # bounded ghosts
+
+
+class TestTwoQBehavior:
+    def test_a1out_ghost_hit_promotes_to_am(self):
+        q = TwoQ(8)                        # kin_cap=2, am_cap=6, kout_cap=4
+        q.access(1)
+        q.access(2)
+        q.access(3)                        # A1in FIFO evicts 1 -> A1out
+        assert 1 in q.a1out and 1 not in q.a1in
+        assert q.access(1) is False        # ghost hit is a miss...
+        assert 1 in q.am and 1 not in q.a1out  # ...promoted to Am
+        assert q.access(1) is True
+
+    def test_a1in_hit_does_not_refresh_fifo_order(self):
+        q = TwoQ(8)
+        q.access(1)
+        q.access(2)
+        assert q.access(1) is True         # hit in A1in...
+        q.access(3)                        # ...but 1 still FIFO-oldest
+        assert 1 in q.a1out
+
+    def test_capacity_invariants_under_churn(self):
+        rng = np.random.default_rng(44)
+        for c in (4, 8, 24):
+            q = TwoQ(c)
+            tr = rng.zipf(1.3, size=3_000).astype(int) % 150
+            for k in tr:
+                q.access(int(k))
+                assert len(q.a1in) <= q.kin_cap
+                assert len(q.am) <= q.am_cap
+                assert len(q.a1out) <= q.kout_cap       # ghost bound
+                assert len(q.a1in) + len(q.am) <= c     # residents
+
+
+class TestDevicePolicyTwins:
+    """Smoke coverage for the SetAssoc* host twins themselves (the
+    bit-for-bit device parity lives in tests/test_policy_panel.py)."""
+
+    def test_s3fifo_small_queue_is_fifo_and_filter_gates_main(self):
+        p = SetAssocS3FIFO(40, window_frac=0.1, assoc=8,
+                           counters_per_item=550.0, doorkeeper=False)
+        for k in range(4):
+            p.access(k)                    # fill the 4-slot small FIFO
+        assert p.access(0) is True         # small-queue hit, no refresh:
+        p.access(10)                       # 0 is still FIFO-oldest, and
+        assert 0 in p.main                 # seen twice -> passes the filter
+        p.access(11)                       # displaces 1: a one-hit wonder,
+        assert 1 not in p.main             # filtered away from main
+
+    def test_twin_residency_bounds(self):
+        rng = np.random.default_rng(45)
+        tr = (rng.zipf(1.3, size=2_000).astype(int) % 200).tolist()
+        for mk in (lambda: SetAssocS3FIFO(30, assoc=8),
+                   lambda: SetAssocARC(30, assoc=8),
+                   lambda: SetAssocLFU(30, assoc=8)):
+            p = mk()
+            for k in tr:
+                p.access(k)
+                assert len(p.main) <= p.main.capacity
+            assert 0.0 < p.hit_ratio < 1.0
+
+    def test_arc_twin_adapts_p(self):
+        p = SetAssocARC(16, assoc=4, dk_bits=1 << 14)
+        rng = np.random.default_rng(46)
+        for k in rng.zipf(1.2, size=4_000).astype(int) % 64:
+            p.access(int(k))
+            assert 0 <= p.p <= p.main.capacity
