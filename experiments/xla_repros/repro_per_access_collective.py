@@ -1,0 +1,43 @@
+"""Collective-cadence repro: an ``all-reduce`` inside a scan body pays a
+cross-device exchange per iteration.  On the forced-2-host-device CPU
+stand-in this measured 62.8x vs the identical program exchanging state
+only at program entry/exit (the bug class lint rule R6 now catches
+statically; see ``docs/ARCHITECTURE.md``).
+
+The committed HLO text in ``repro.analysis.lint_fixtures`` is the
+structure itself (lowering it live needs a >= 2 device mesh); this
+script verifies the linter still classifies it as the per-access-psum
+pathology under the chunk-exchange cadence contract.  Exit 0 = repro
+intact, 1 = the fixture stopped tripping (investigate before trusting
+the R6 gate).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "src"))
+
+from repro.analysis.lint_fixtures import bad_r6_per_access_psum
+from repro.analysis.program_lint import lint_hlo
+
+
+def main() -> int:
+    text, bounds = bad_r6_per_access_psum()
+    violations = [v for v in lint_hlo(text, bounds, config="repro-r6")
+                  if v.rule == "R6"]
+    if not violations:
+        print("R6 repro stopped tripping — the fixture or the linter "
+              "changed; the 62.8x per-access-psum gate may be void")
+        return 1
+    print("R6 repro reproduces: collective inside the scan body —")
+    for v in violations:
+        print("  ", v)
+    print("\nworkaround in this repo: per-chunk delta gather/split "
+          "exchange (mesh_exchange=\"chunk\"), collectives at program "
+          "entry/exit only; measured ~1x overhead vs single-device "
+          "sharded, against 62.8x for the per-access psum")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

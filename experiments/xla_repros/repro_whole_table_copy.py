@@ -1,0 +1,41 @@
+"""XLA-CPU copy-insertion repro: a scan body that changes ONE word of a
+table via a full-array masked ``where`` materializes a table-shaped
+buffer every iteration — the optimized HLO carries a table-shaped copy /
+non-DUS fusion output inside the while body, so the per-step cost is
+O(table) instead of O(1).
+
+This is the minimal form of the "chain-split allocation cliff" the
+engine works around with single-word dynamic_update_slice chains (lint
+rule R3, ``docs/ARCHITECTURE.md`` static-analysis section).  Exit 0 =
+pathology present (repro reproduces), 1 = fixed upstream.
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "src"))
+
+from repro.analysis.lint_fixtures import bad_r3_whole_table_copy
+from repro.analysis.program_lint import lint_hlo
+
+
+def main() -> int:
+    text, bounds = bad_r3_whole_table_copy()
+    violations = [v for v in lint_hlo(text, bounds, config="repro-r3")
+                  if v.rule == "R3"]
+    if not violations:
+        print("R3 repro NO LONGER reproduces — XLA now keeps the masked "
+              "where in place; revisit the single-word-DUS workaround")
+        return 1
+    print("R3 repro reproduces: table-shaped materialization per scan "
+          "step in the optimized HLO —")
+    for v in violations:
+        print("  ", v)
+    print("\nworkaround in this repo: single-word dynamic_update_slice "
+          "chains + _sched_dep read-anchoring (kernels/sketch_step.py)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

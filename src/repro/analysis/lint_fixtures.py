@@ -1,0 +1,185 @@
+"""Deliberately-bad programs, one per lint rule — the committed repros.
+
+Each builder returns ``(hlo_text, LintBounds)`` that must make
+:func:`repro.analysis.program_lint.lint_hlo` report its rule — they are
+the negative tests of ``tests/test_program_lint.py``, and the R3/R6
+builders double as the minimal upstream-issue repros exported under
+``experiments/xla_repros/``.  Three of them reproduce historic
+regressions of this repo statically:
+
+* :func:`bad_r1_lane_scatter` — the lane-batching scatter class PR 8's
+  one-hot-select writes eliminated (a scatter per access = fixed ~µs
+  dispatch each).
+* :func:`bad_r3_whole_table_copy` — the chain-split allocation cliff /
+  width-2^18 whole-table materialization class removed in PR 5 (a
+  full-buffer fusion output per access).
+* :data:`BAD_R6_PER_ACCESS_PSUM` — PR 6's 62.8x bug: one all-reduce per
+  access inside the scan body, here as committed HLO text (mesh
+  lowerings need forced multi-device; the text is what the linter sees).
+
+The R4 fixture is also committed text: ``outer_dimension_partitions``
+is a cost-model decision XLA only makes on wide outputs, so a live
+program cannot deterministically produce it on a tiny buffer.
+"""
+from __future__ import annotations
+
+from .program_lint import E_EPOCH, LintBounds, T_STEP
+
+
+def bad_r1_lane_scatter():
+    """A scan whose body scatters into the table through fancy indexing
+    with duplicate-capable dynamic indices — XLA must keep the scatter
+    op (cf. the scatter-free lane-write contract)."""
+    import jax
+    import jax.numpy as jnp
+    N = 4096
+
+    def step(tab, key):
+        rows = (key * jnp.arange(1, 5, dtype=jnp.int32)
+                * jnp.int32(40503)) % N
+        return tab.at[rows].add(1), key
+
+    def prog(tab, keys):
+        return jax.lax.scan(step, tab, keys)
+
+    text = jax.jit(prog).lower(
+        jnp.zeros((N,), jnp.int32),
+        jnp.zeros((T_STEP,), jnp.int32)).compile().as_text()
+    return text, LintBounds(access_trips=(T_STEP,))
+
+
+def bad_r2_table_shaped_write():
+    """A DUS per access whose update region is a quarter of the table —
+    O(capacity), not O(ways)."""
+    import jax
+    import jax.numpy as jnp
+    N, BLK = 8192, 2048
+
+    def step(tab, i):
+        blk = jnp.full((BLK,), i, jnp.int32)
+        return jax.lax.dynamic_update_slice(tab, blk, (i % 16,)), i
+
+    def prog(tab, xs):
+        return jax.lax.scan(step, tab, xs)
+
+    text = jax.jit(prog).lower(
+        jnp.zeros((N,), jnp.int32),
+        jnp.zeros((T_STEP,), jnp.int32)).compile().as_text()
+    return text, LintBounds(access_trips=(T_STEP,), assoc=True,
+                            max_update_elems=384)
+
+
+def bad_r3_whole_table_copy():
+    """A full-table masked select per access — the whole-table-copy /
+    chain-split-allocation class: every access materializes a new
+    table-shaped buffer even though only one word changes."""
+    import jax
+    import jax.numpy as jnp
+    N = 8192
+
+    def step(tab, i):
+        mask = jnp.arange(N, dtype=jnp.int32) == (i % N)
+        return jnp.where(mask, tab + 1, tab), i
+
+    def prog(tab, xs):
+        return jax.lax.scan(step, tab, xs)
+
+    text = jax.jit(prog).lower(
+        jnp.zeros((N,), jnp.int32),
+        jnp.zeros((T_STEP,), jnp.int32)).compile().as_text()
+    return text, LintBounds(access_trips=(T_STEP,), assoc=True,
+                            max_update_elems=384)
+
+
+def bad_r5_unaliasable_donation():
+    """A donated input whose output cannot alias it (shape changes), so
+    the compiled program carries zero input/output aliases."""
+    import jax
+    import jax.numpy as jnp
+    import warnings
+
+    def prog(state):
+        return jnp.concatenate([state, state])
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")   # jax warns: donation unused
+        text = jax.jit(prog, donate_argnums=(0,)).lower(
+            jnp.zeros((4096,), jnp.int32)).compile().as_text()
+    return text, LintBounds(expect_aliases=1)
+
+
+# R4: outer_dimension_partitions thread dispatch on a 64-byte output.
+# Committed text: the partitioner only fires on wide outputs in practice,
+# so the bad case cannot be forced from jax deterministically.
+BAD_R4_PARTITIONED_SMALL = """\
+HloModule bad_r4_partitioned_small, is_scheduled=true
+
+%tiny (p0: s32[16]) -> s32[16] {
+  %p0 = s32[16]{0} parameter(0)
+  %one = s32[] constant(1)
+  %ones = s32[16]{0} broadcast(s32[] %one), dimensions={}
+  ROOT %add = s32[16]{0} add(s32[16]{0} %p0, s32[16]{0} %ones)
+}
+
+ENTRY %main (arg: s32[16]) -> s32[16] {
+  %arg = s32[16]{0} parameter(0)
+  ROOT %out = s32[16]{0} fusion(s32[16]{0} %arg), kind=kLoop, calls=%tiny, outer_dimension_partitions={4}
+}
+"""
+
+
+def bad_r4_partitioned_small():
+    return BAD_R4_PARTITIONED_SMALL, LintBounds()
+
+
+# R6: the 62.8x bug — an all-reduce per access inside the scan body.
+# Committed text (the real regression needed a >= 2 device mesh; the
+# linter only ever sees the module text, which this is).
+BAD_R6_PER_ACCESS_PSUM = """\
+HloModule bad_r6_per_access_psum, is_scheduled=true
+
+%sum (a: s32[], b: s32[]) -> s32[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %s = s32[] add(s32[] %a, s32[] %b)
+}
+
+%body (p: (s32[], s32[128])) -> (s32[], s32[128]) {
+  %p = (s32[], s32[128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], s32[128]) %p), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  %t = s32[128]{0} get-tuple-element((s32[], s32[128]) %p), index=1
+  %psum = s32[128]{0} all-reduce(s32[128]{0} %t), replica_groups={{0,1}}, to_apply=%sum
+  ROOT %r = (s32[], s32[128]) tuple(s32[] %ip, s32[128]{0} %psum)
+}
+
+%cond (p: (s32[], s32[128])) -> pred[] {
+  %p = (s32[], s32[128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], s32[128]) %p), index=0
+  %n = s32[] constant(96)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+ENTRY %main (arg: (s32[], s32[128])) -> (s32[], s32[128]) {
+  %arg = (s32[], s32[128]) parameter(0)
+  ROOT %w = (s32[], s32[128]) while((s32[], s32[128]) %arg), condition=%cond, body=%body
+}
+"""
+
+
+def bad_r6_per_access_psum():
+    return BAD_R6_PER_ACCESS_PSUM, LintBounds(access_trips=(96,),
+                                              mesh_exchange="chunk")
+
+
+#: rule id -> fixture builder (R7 is exercised through the registry API
+#: in tests/test_program_lint.py — it has no single-module fixture)
+FIXTURES = {
+    "R1": bad_r1_lane_scatter,
+    "R2": bad_r2_table_shaped_write,
+    "R3": bad_r3_whole_table_copy,
+    "R4": bad_r4_partitioned_small,
+    "R5": bad_r5_unaliasable_donation,
+    "R6": bad_r6_per_access_psum,
+}

@@ -693,6 +693,8 @@ def _sharded_runner(spec: StepSpec, backend: str, interpret: bool):
     trace — the sharded twin of ``_adaptive_runner`` without the climb."""
     key = (spec, backend, interpret)
     if key not in _sharded_cache:
+        if len(_sharded_cache) >= _STEP_CACHE_LIMIT:
+            _sharded_cache.clear()
         @jax.jit
         def run(params, state, los, his, nvalid):
             def body(st, x):
@@ -937,6 +939,8 @@ def _adaptive_runner(spec: StepSpec, backend: str, interpret: bool):
     its chunk + climb + rebalance.  No host sync anywhere inside the trace."""
     key = (spec, backend, interpret)
     if key not in _adaptive_cache:
+        if len(_adaptive_cache) >= _STEP_CACHE_LIMIT:
+            _adaptive_cache.clear()
         @jax.jit
         def run(params, state, los, his, nvalid, climb, carry0):
             def body(carry, x):

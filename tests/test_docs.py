@@ -1,5 +1,6 @@
 """Docs subsystem checks (ISSUE 4): the reference checker works and the
 repo's own docs pass it."""
+import json
 import os
 import sys
 
@@ -40,3 +41,60 @@ def test_checker_ignores_commands_and_prose():
         "and `StepSpec.shards`"))
     assert all(not check_docs._PATHLIKE.match(r) for r in refs)
     assert all(not check_docs._DOTTED.match(r) for r in refs)
+
+
+def test_bench_field_contract_on_real_repo():
+    assert check_docs.check_bench_fields(REPO) == []
+
+
+def _bench_fixture(tmp_path, *, doc_fields, snap_keys, gate_src=""):
+    (tmp_path / "docs").mkdir()
+    rows = "\n".join(f"| `{f}` | meaning |" for f in doc_fields)
+    (tmp_path / "docs" / "BENCHMARKS.md").write_text(
+        "## `BENCH_device.json` fields\n\n| field | meaning |\n|---|---|\n"
+        + rows + "\n")
+    (tmp_path / "BENCH_device.json").write_text(
+        json.dumps({k: 1.0 for k in snap_keys}))
+    if gate_src:
+        (tmp_path / "benchmarks").mkdir()
+        (tmp_path / "benchmarks" / "check_bench.py").write_text(gate_src)
+    return str(tmp_path)
+
+
+def test_stale_documented_bench_field_fails(tmp_path):
+    root = _bench_fixture(tmp_path,
+                          doc_fields=["acc_per_s", "renamed_field"],
+                          snap_keys=["acc_per_s"])
+    failures = check_docs.check_bench_fields(root)
+    assert any("renamed_field" in f and "BENCHMARKS.md" in f
+               for f in failures)
+
+
+def test_undocumented_snapshot_field_fails(tmp_path):
+    root = _bench_fixture(tmp_path, doc_fields=["acc_per_s"],
+                          snap_keys=["acc_per_s", "sneaky_new_field"])
+    failures = check_docs.check_bench_fields(root)
+    assert any("sneaky_new_field" in f and "undocumented" in f
+               for f in failures)
+
+
+def test_gate_reading_stale_field_fails(tmp_path):
+    gate = ("def check(fresh):\n"
+            "    ok = fresh.get('acc_per_s')\n"
+            "    gone = fresh.get('field_deleted_from_snapshot')\n"
+            "    for pol in ('a', 'b'):\n"
+            "        fresh.get(f'missing_prefix_{pol}')\n")
+    root = _bench_fixture(tmp_path, doc_fields=["acc_per_s"],
+                          snap_keys=["acc_per_s"], gate_src=gate)
+    failures = check_docs.check_bench_fields(root)
+    assert any("field_deleted_from_snapshot" in f for f in failures)
+    assert any("missing_prefix_{}" in f for f in failures)
+
+
+def test_gate_fstring_template_matches_wildcard(tmp_path):
+    gate = ("def check(fresh):\n"
+            "    for pol in ('x',):\n"
+            "        fresh.get(f'policy_acc_{pol}')\n")
+    root = _bench_fixture(tmp_path, doc_fields=["policy_acc_x"],
+                          snap_keys=["policy_acc_x"], gate_src=gate)
+    assert check_docs.check_bench_fields(root) == []

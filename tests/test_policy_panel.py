@@ -37,8 +37,7 @@ from repro.core.policies import SetAssocARC, SetAssocLFU, SetAssocS3FIFO
 from repro.kernels.sketch_common import POLICIES
 from repro.kernels.sketch_step import (StepSpec, _EMPTY, _I32_MAX, MT_LO,
                                        MT_HI, MT_META, WT_META,
-                                       init_step_state, make_step_params,
-                                       step_ref)
+                                       init_step_state, step_ref)
 from repro.traces import panel_traces, zipf_trace
 from repro.traces.synthetic import zipf_probs, _sample_from_probs
 
@@ -145,21 +144,11 @@ class TestDeviceTwinParity:
 
 def test_wtinylfu_policy_is_the_identical_program():
     """The panel dispatch is static: the default policy must lower to the
-    byte-identical HLO as a spec that predates the enum — the same pin as
-    shards=1 / adaptive=False (the exactness ladder's 'the refactor cannot
-    have perturbed the default engine' guarantee)."""
-    base = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
-                    main_slots=64, assoc=8)
-    pinned = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
-                      main_slots=64, assoc=8, policy="wtinylfu")
-    params = make_step_params(4, 48, 38, 700, 7, 0)
-    keys = np.arange(16, dtype=np.uint64)
-    from repro.kernels.sketch_common import keys_to_lanes
-    lo, hi = keys_to_lanes(keys)
-    low = [jax.jit(step_ref, static_argnums=0)
-           .lower(s, params, init_step_state(s), lo, hi).as_text()
-           for s in (base, pinned)]
-    assert low[0] == low[1]
+    byte-identical HLO as a spec that predates the enum — the exactness
+    ladder's 'the refactor cannot have perturbed the default engine'
+    guarantee, enforced through the central fingerprint registry (R7)."""
+    from repro.analysis.program_lint import assert_identical_program
+    assert_identical_program("policy-default")
 
 
 def test_competitor_specs_validate_eagerly():

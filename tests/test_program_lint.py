@@ -1,0 +1,187 @@
+"""The linter lints itself: every rule R1-R7 must trip on its committed
+bad program, and the real engine (a cheap slice of the config matrix)
+must lint clean.  The full matrix runs in CI via tools/lint_programs.py;
+here we pin the rule semantics so a refactor of program_lint.py cannot
+silently stop detecting a regression class.
+"""
+import json
+
+import pytest
+
+from repro.analysis.lint_fixtures import FIXTURES
+from repro.analysis.program_lint import (FINGERPRINT_CONTRACTS, LintBounds,
+                                         MatrixEntry, _digest,
+                                         check_fingerprints, default_matrix,
+                                         env_key, lint_hlo, load_registry,
+                                         run_matrix)
+
+
+# ---------------------------------------------------------------------------
+# R1-R6: each fixture must trip exactly its rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_fixture_trips_its_rule(rule):
+    text, bounds = FIXTURES[rule]()
+    tripped = {v.rule for v in lint_hlo(text, bounds, config=f"bad-{rule}")}
+    assert rule in tripped, (
+        f"fixture for {rule} no longer detected; rules tripped: {tripped}")
+
+
+def test_violation_reports_are_actionable():
+    text, bounds = FIXTURES["R2"]()
+    v = [x for x in lint_hlo(text, bounds, config="bad-R2")
+         if x.rule == "R2"][0]
+    assert "bad-R2" in str(v) and v.where    # config + HLO location
+    d = v.to_dict()
+    assert set(d) == {"rule", "config", "where", "message"}
+
+
+def test_r0_flags_missing_access_scan():
+    # a module with no while loop at all, but bounds that expect one
+    text, _ = FIXTURES["R4"]()               # committed text, loop-free
+    v = lint_hlo(text, LintBounds(access_trips=(96,)), config="no-scan")
+    assert "R0" in {x.rule for x in v}
+
+
+def test_unrolled_access_scan_is_still_recognized():
+    # XLA unrolls the flat scan 4x (trips T/4); R0 must not fire, and an
+    # absurd trip count must not be mistaken for the access loop
+    text, bounds = FIXTURES["R3"]()
+    n_trips = [t for _, _, t, _ in _whiles_of(text) if t is not None]
+    assert n_trips, "fixture lost its known-trip while"
+    ok = lint_hlo(text, LintBounds(access_trips=(4 * n_trips[0],)),
+                  config="unrolled")
+    assert "R0" not in {x.rule for x in ok}
+
+
+def _whiles_of(text):
+    from repro.analysis.hlo_cost import _split_computations
+    from repro.analysis.program_lint import _find_whiles
+    comps, _ = _split_computations(text)
+    return _find_whiles(comps)
+
+
+# ---------------------------------------------------------------------------
+# R6 cadence: the same collective text judged under each contract
+# ---------------------------------------------------------------------------
+
+def test_r6_cadence_contracts():
+    text, _ = FIXTURES["R6"]()               # all-reduce in the scan body
+    in_loop = LintBounds(access_trips=(96,))
+    # single-device: any collective is a violation
+    assert "R6" in {v.rule for v in lint_hlo(text, in_loop)}
+    # chunk: in-loop collective is the 62.8x bug
+    assert "R6" in {v.rule for v in lint_hlo(
+        text, LintBounds(access_trips=(96,), mesh_exchange="chunk"))}
+    # stale: collective in the ACCESS body is still wrong...
+    assert "R6" in {v.rule for v in lint_hlo(
+        text, LintBounds(access_trips=(96,), mesh_exchange="stale"))}
+    # ...but the same loop declared as a non-access (epoch) loop is the
+    # legitimate per-epoch fold under the stale contract (R0 fires for
+    # the absent access scan; R6 must not)
+    stale_other = lint_hlo(
+        text, LintBounds(access_trips=(7,), mesh_exchange="stale"))
+    assert "R6" not in {v.rule for v in stale_other}
+
+
+# ---------------------------------------------------------------------------
+# green run: the real engine lints clean (cheap slice of the matrix; the
+# full 15-entry matrix is the CI step)
+# ---------------------------------------------------------------------------
+
+def test_default_matrix_covers_every_axis():
+    labels = [e.label for e in default_matrix()]
+    for needle in ("flat-static", "assoc-static", "streams4", "policy-",
+                   "shards4", "adaptive", "mesh-chunk", "mesh-stale",
+                   "integrity", "donated"):
+        assert any(needle in l for l in labels), needle
+
+
+def test_engine_slice_lints_clean():
+    matrix = [e for e in default_matrix()
+              if e.label in ("flat-static", "assoc-static",
+                             "assoc-donated")]
+    violations, rows = run_matrix(matrix)
+    assert not violations, [str(v) for v in violations]
+    assert {r["label"]: r["status"] for r in rows} == {
+        "flat-static": "ok", "assoc-static": "ok", "assoc-donated": "ok"}
+
+
+def test_waived_rule_reports_but_does_not_fail():
+    def build():
+        return FIXTURES["R3"]()
+    entry = MatrixEntry("waived-fixture", build,
+                        waive={"R3": "test waiver"})
+    violations, rows = run_matrix([entry])
+    assert not violations                     # waived -> non-fatal
+    (row,) = rows
+    assert row["status"] == "waived"
+    assert row["waived"] and row["waived"][0]["reason"] == "test waiver"
+
+
+def test_skip_entry_reports_skipped():
+    from repro.analysis.program_lint import SkipEntry
+
+    def build():
+        raise SkipEntry("needs hardware")
+    violations, rows = run_matrix([MatrixEntry("skippy", build)])
+    assert not violations
+    assert rows[0]["status"] == "skipped" and "hardware" in rows[0]["reason"]
+
+
+# ---------------------------------------------------------------------------
+# R7: the fingerprint registry
+# ---------------------------------------------------------------------------
+
+def test_r7_update_then_check_roundtrip(tmp_path):
+    reg = tmp_path / "fp.json"
+    v, notes = check_fingerprints(update=True, registry_path=reg,
+                                  contracts={"shards1": {"shards": 1}})
+    assert not v and any("updated" in n for n in notes)
+    v, notes = check_fingerprints(registry_path=reg,
+                                  contracts={"shards1": {"shards": 1}})
+    assert not v, [str(x) for x in v]
+
+
+def test_r7_tampered_digest_is_a_violation(tmp_path):
+    reg = tmp_path / "fp.json"
+    check_fingerprints(update=True, registry_path=reg,
+                       contracts={"shards1": {"shards": 1}})
+    data = json.loads(reg.read_text())
+    data[env_key()]["shards1"] = "0" * 64
+    reg.write_text(json.dumps(data))
+    v, _ = check_fingerprints(registry_path=reg,
+                              contracts={"shards1": {"shards": 1}})
+    assert any(x.rule == "R7" and "drifted" in x.message for x in v)
+
+
+def test_r7_non_default_override_breaks_pair_equality(tmp_path):
+    # {"assoc": 4} is NOT a spelled-out default -> different program ->
+    # the pair-equality half of R7 must fire even with no registry
+    v, _ = check_fingerprints(registry_path=tmp_path / "fp.json",
+                              contracts={"bogus": {"assoc": 4}})
+    assert any(x.rule == "R7" and x.config == "bogus" for x in v)
+
+
+def test_r7_missing_env_is_note_not_violation(tmp_path):
+    v, notes = check_fingerprints(registry_path=tmp_path / "absent.json",
+                                  contracts={"shards1": {"shards": 1}})
+    assert not v
+    assert any("skipped" in n for n in notes)
+
+
+def test_committed_registry_is_valid_json_with_all_contracts():
+    reg = load_registry()
+    assert reg, "fingerprints.json missing or empty"
+    for env, digests in reg.items():
+        assert "base" in digests
+        for name in FINGERPRINT_CONTRACTS:
+            assert name in digests, (env, name)
+        for dg in digests.values():
+            assert len(dg) == 64 and int(dg, 16) >= 0
+
+
+def test_digest_is_sha256_of_text():
+    import hashlib
+    assert _digest("abc") == hashlib.sha256(b"abc").hexdigest()

@@ -351,26 +351,15 @@ def test_counter8_reset_halving_straddles_chunks():
 # ===========================================================================
 
 def test_shards1_is_the_identical_program():
-    """shards=1 (the default) must compile the identical program: the state
-    tree carries single-half sketch buffers and the lowered module is
-    byte-identical to a spec that never mentions shards — the same
-    exactness-ladder pin as assoc=None / adaptive=False."""
-    import jax
-    base = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
-                    main_slots=64, assoc=8)
-    pinned = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
-                      main_slots=64, assoc=8, shards=1)
-    assert set(init_step_state(pinned).keys()) == set(init_step_state(base))
-    assert init_step_state(pinned)["counters"].shape == \
-        init_step_state(base)["counters"].shape
-    params = make_step_params(4, 48, 38, 700, 7, 0)
-    lo, hi = lanes(np.arange(16, dtype=np.uint64))
-    low = [jax.jit(step_ref, static_argnums=0)
-           .lower(s, params, init_step_state(s), lo, hi).as_text()
-           for s in (base, pinned)]
-    assert low[0] == low[1]
+    """shards=1 (the default) must compile the identical program — the
+    exactness-ladder pin, now enforced through the central fingerprint
+    registry (R7, repro.analysis.program_lint)."""
+    from repro.analysis.program_lint import assert_identical_program
+    assert_identical_program("shards1")
     # ... and the sharded program is genuinely different: the sketch
     # buffers double into [global || delta] halves
+    base = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
+                    main_slots=64, assoc=8)
     sharded = StepSpec(width=256, rows=4, dk_bits=1024, window_slots=8,
                       main_slots=64, assoc=8, shards=2)
     st = init_step_state(sharded)

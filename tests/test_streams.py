@@ -111,12 +111,19 @@ def test_streams1_bit_identical_to_unbatched():
         np.testing.assert_array_equal(np.asarray(s1[k]), np.asarray(s0[k]))
     # same spec value -> literally the same compiled program (cache key)
     assert DeviceWTinyLFU(C, streams=1).spec() == DeviceWTinyLFU(C).spec()
+    # ... and the byte-identity pin, through the central registry (R7)
+    from repro.analysis.program_lint import assert_identical_program
+    assert_identical_program("streams1")
 
 
 def test_lane_program_is_scatter_free():
     """The batched step must not lower to scatter ops: each one costs
     fixed ~µs dispatch on CPU, which is exactly the overhead the lane
-    batching amortizes away (lane writes are fused one-hot selects)."""
+    batching amortizes away (lane writes are fused one-hot selects).
+    Enforced by lint rule R1, which also catches the expanded-scatter
+    form (a known-trip per-index write loop) the old substring check
+    missed."""
+    from repro.analysis.program_lint import LintBounds, lint_hlo
     spec = DeviceWTinyLFU(C, streams=B).spec()
     state = init_step_state(spec, DeviceWTinyLFU(C).window_cap,
                             DeviceWTinyLFU(C).main_cap)
@@ -124,7 +131,9 @@ def test_lane_program_is_scatter_free():
     params = DeviceWTinyLFU(C, streams=B).params()
     hlo = jax.jit(step_ref, static_argnums=(0,)).lower(
         spec, params, state, lo, lo).compile().as_text()
-    assert "scatter" not in hlo.lower()
+    violations = lint_hlo(hlo, LintBounds(access_trips=(64,)),
+                          config="lane-program")
+    assert not violations, [str(v) for v in violations]
 
 
 def test_vmapped_adaptive_sweep_matches_sequential():

@@ -20,13 +20,24 @@ Anything else inside backticks (shell commands, inline code, field names)
 is ignored.  Keep doc references in one of the two checkable forms so this
 gate keeps meaning something.
 
+It additionally cross-checks the benchmark-snapshot field contract
+(``check_bench_fields``): every field documented in the
+"## ``BENCH_device.json`` fields" table of ``docs/BENCHMARKS.md`` and
+every field literal the gate reads in ``benchmarks/check_bench.py``
+(including f-string templates like ``policy_acc_per_s_{pol}``, matched as
+wildcards) must exist in the committed ``BENCH_device.json`` — and every
+snapshot field must be documented in the table.  A renamed bench field
+now fails CI instead of silently un-gating an arm.
+
 Usage: ``python tools/check_docs.py [--root REPO_ROOT]`` — exits 1 with a
 list of stale references on failure.
 """
 from __future__ import annotations
 
 import argparse
+import ast
 import glob
+import json
 import os
 import re
 import sys
@@ -93,6 +104,111 @@ def check_file(path: str, root: str) -> list[str]:
     return stale
 
 
+# ---------------------------------------------------------------------------
+# BENCH_device.json field contract
+# ---------------------------------------------------------------------------
+
+# a snapshot-field-shaped token: lowercase start, >= 1 underscore segment,
+# no dots/dashes/spaces.  {} marks an f-string hole (wildcard).
+_FIELDLIKE = re.compile(r"^[a-z][A-Za-z0-9]*(?:_[A-Za-z0-9{}]+)+$")
+_FIELDS_HEADING = "fields"
+
+
+def _doc_bench_fields(md_text: str) -> list[str]:
+    """Field names from the "## `BENCH_device.json` fields" table."""
+    fields, in_section = [], False
+    for line in md_text.splitlines():
+        if line.startswith("## "):
+            in_section = ("BENCH_device.json" in line
+                          and _FIELDS_HEADING in line)
+            continue
+        if in_section:
+            m = re.match(r"\|\s*`([^`]+)`\s*\|", line)
+            if m:
+                fields.append(m.group(1))
+    return fields
+
+
+def _gate_bench_fields(py_text: str) -> list[str]:
+    """Snapshot-field string literals read by check_bench.py: arguments
+    of ``.get(...)`` calls and elements of tuple/list constants (the
+    iterated key collections).  F-string holes become ``{}`` and are
+    matched as wildcards — prose, argparse strings etc. never appear in
+    those positions."""
+    fields = set()
+
+    def consider(node):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            s = node.value
+        elif isinstance(node, ast.JoinedStr):
+            s = "".join(
+                v.value if isinstance(v, ast.Constant) else "{}"
+                for v in node.values
+                if isinstance(v, (ast.Constant, ast.FormattedValue)))
+        else:
+            return
+        if _FIELDLIKE.match(s):
+            fields.add(s)
+
+    for node in ast.walk(ast.parse(py_text)):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "get":
+            for arg in node.args:
+                consider(arg)
+        elif isinstance(node, (ast.Tuple, ast.List)):
+            for el in node.elts:
+                consider(el)
+    return sorted(fields)
+
+
+def check_bench_fields(root: str) -> list[str]:
+    """Cross-check docs/BENCHMARKS.md + benchmarks/check_bench.py against
+    the committed BENCH_device.json.  Missing inputs are skipped quietly
+    (a checkout without the snapshot still lints its docs)."""
+    snap_path = os.path.join(root, "BENCH_device.json")
+    md_path = os.path.join(root, "docs", "BENCHMARKS.md")
+    gate_path = os.path.join(root, "benchmarks", "check_bench.py")
+    if not (os.path.exists(snap_path) and os.path.exists(md_path)):
+        return []
+    with open(snap_path) as f:
+        keys = set(json.load(f))
+    failures = []
+
+    with open(md_path) as f:
+        documented = _doc_bench_fields(f.read())
+    if not documented:
+        failures.append("docs/BENCHMARKS.md: BENCH_device.json fields "
+                        "table not found (heading or format changed?)")
+    for field in documented:
+        if field not in keys:
+            failures.append(
+                f"docs/BENCHMARKS.md: documented field `{field}` missing "
+                "from the committed BENCH_device.json")
+    for key in sorted(keys - set(documented)):
+        failures.append(
+            f"BENCH_device.json: field `{key}` undocumented in the "
+            "docs/BENCHMARKS.md fields table")
+
+    if os.path.exists(gate_path):
+        with open(gate_path) as f:
+            gate_fields = _gate_bench_fields(f.read())
+        for field in gate_fields:
+            if "{}" in field:
+                pat = re.compile(
+                    "^" + re.escape(field).replace(r"\{\}",
+                                                   "[A-Za-z0-9_]+") + "$")
+                if not any(pat.match(k) for k in keys):
+                    failures.append(
+                        f"benchmarks/check_bench.py: no snapshot field "
+                        f"matches gate template `{field}`")
+            elif field not in keys:
+                failures.append(
+                    f"benchmarks/check_bench.py: gate reads field "
+                    f"`{field}` missing from BENCH_device.json")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--root", default=_REPO_ROOT)
@@ -113,11 +229,14 @@ def main(argv=None) -> int:
             n_refs += sum(1 for t in _iter_refs(f.read())
                           if _DOTTED.match(t) or _PATHLIKE.match(t))
         failures.extend(check_file(path, args.root))
+    bench_failures = check_bench_fields(args.root)
+    failures.extend(bench_failures)
     for msg in failures:
         print("FAIL:", msg, flush=True)
     if not failures:
         print(f"docs OK: {n_refs} path/symbol references across "
-              f"{len(targets)} files all resolve", flush=True)
+              f"{len(targets)} files all resolve; bench field contract "
+              "consistent", flush=True)
     return 1 if failures else 0
 
 

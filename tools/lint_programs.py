@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Compiled-program lint: enforce the in-place discipline statically.
+
+Lowers the engine across the configuration matrix (flat/assoc x
+static/adaptive x shards x streams x policy x mesh chunk/stale), lints
+the post-optimization HLO against rules R0-R6, and verifies the R7
+byte-identity fingerprint registry.  Lowering + compilation only — no
+program executes, so the whole run is CPU-cheap (~30 s here; see the CI
+step for the budget).
+
+Exit codes: 0 clean (waived findings allowed), 1 violations, 2 internal
+error.
+
+    python tools/lint_programs.py                 # full matrix + R7
+    python tools/lint_programs.py --configs mesh  # label substring
+    python tools/lint_programs.py --update        # re-pin fingerprints
+    python tools/lint_programs.py --report lint_report.json
+    python tools/lint_programs.py --list-rules
+"""
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# environment must be fixed BEFORE jax imports: the mesh entries need two
+# forced host devices, and the lint contract is the CPU backend
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static lint of lowered engine programs (R1-R7)")
+    ap.add_argument("--configs", metavar="SUBSTR", default=None,
+                    help="only lint matrix entries whose label contains "
+                         "SUBSTR")
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the R7 fingerprint registry for this "
+                         "environment (after an intentional lowering "
+                         "change)")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write a JSON report to PATH")
+    ap.add_argument("--skip-fingerprints", action="store_true",
+                    help="matrix rules only (R0-R6)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.program_lint import (RULES, check_fingerprints,
+                                             env_key, run_matrix)
+    if args.list_rules:
+        for rid, desc in RULES.items():
+            print(f"{rid}  {desc}")
+        return 0
+
+    import jax
+    print(f"program lint [{env_key()}], "
+          f"{jax.device_count()} device(s)")
+
+    violations, rows = run_matrix(configs=args.configs)
+    for r in rows:
+        mark = {"ok": "ok", "fail": "FAIL", "skipped": "skip",
+                "waived": "ok (waived)"}[r["status"]]
+        extra = r.get("reason", "") or (
+            f"{r.get('seconds', 0):.1f}s" if "seconds" in r else "")
+        print(f"  {r['label']:<26} {mark:<12} {extra}")
+        for rule, reason in dict(
+                (w["rule"], w["reason"])
+                for w in r.get("waived", [])).items():
+            n = sum(1 for w in r["waived"] if w["rule"] == rule)
+            print(f"      waived [{rule}] x{n}: {reason}")
+
+    fp_violations, notes = [], []
+    if not args.skip_fingerprints and not args.configs:
+        fp_violations, notes = check_fingerprints(update=args.update)
+        for n in notes:
+            print(f"  fingerprints: {n}")
+        if not fp_violations and not args.update:
+            print("  fingerprints: R7 ok "
+                  "(pair equality + registry digests)")
+
+    all_v = violations + fp_violations
+    for v in all_v:
+        print(f"  {v}")
+
+    if args.report:
+        Path(args.report).write_text(json.dumps({
+            "env": env_key(),
+            "configs": rows,
+            "fingerprints": {
+                "violations": [v.to_dict() for v in fp_violations],
+                "notes": notes,
+            },
+            "ok": not all_v,
+        }, indent=2) + "\n")
+        print(f"  report -> {args.report}")
+
+    if all_v:
+        print(f"FAIL: {len(all_v)} violation(s)")
+        return 1
+    print("clean")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception as exc:                      # noqa: BLE001
+        print(f"internal error: {exc}", file=sys.stderr)
+        raise SystemExit(2)
